@@ -1,0 +1,46 @@
+"""Fig. 16 reproduction: per-layer running time of 2:8 BDWP training
+for each sparse conv layer of ResNet18 on Tiny ImageNet (batch 512),
+non-overlapped (the paper purposely separates memory and compute here).
+"""
+
+from __future__ import annotations
+
+from repro.satsim.model import layer_time, train_step_report
+from repro.satsim.workloads import resnet18_layers
+
+
+def run() -> list:
+    rows = []
+    for layer in resnet18_layers(batch=512):
+        sts = layer_time(layer, "bdwp", pregen=True)
+        rows.append({
+            "layer": layer.name, "rows": layer.rows, "k": layer.k,
+            "f": layer.f, "prunable": layer.prunable,
+            **{f"{st.stage}_compute_ms": st.compute_s * 1e3 for st in sts},
+            **{f"{st.stage}_ddr_ms": st.ddr_s * 1e3 for st in sts},
+            **{f"{st.stage}_dataflow": st.dataflow for st in sts},
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    hdr = ("layer,ff_ms,bp_ms,wu_ms,ff_ddr,bp_ddr,wu_ddr,"
+           "ff_df,bp_df,wu_df")
+    print(hdr)
+    ff = bp = wu = 0.0
+    for r in rows:
+        print(f"{r['layer']},{r['ff_compute_ms']:.2f},"
+              f"{r['bp_compute_ms']:.2f},{r['wu_compute_ms']:.2f},"
+              f"{r['ff_ddr_ms']:.2f},{r['bp_ddr_ms']:.2f},"
+              f"{r['wu_ddr_ms']:.2f},{r['ff_dataflow']},"
+              f"{r['bp_dataflow']},{r['wu_dataflow']}")
+        ff += r["ff_compute_ms"]
+        bp += r["bp_compute_ms"]
+        wu += r["wu_compute_ms"]
+    print(f"# totals ff={ff:.1f}ms bp={bp:.1f}ms wu={wu:.1f}ms; "
+          f"paper: FF/BP ~1/4 of WU at 2:8 -> ratio ff/wu={ff/wu:.2f}")
+
+
+if __name__ == "__main__":
+    main()

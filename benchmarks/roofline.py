@@ -1,0 +1,100 @@
+"""Roofline table generator: reads the dry-run JSON artifacts
+(results/dryrun/*.json) and renders the 40-cell roofline table for
+EXPERIMENTS.md §Roofline.
+
+Terms are per chip (the SPMD module is per-partition):
+  compute    = HLO_FLOPs / peak (197 TFLOP/s bf16)
+  memory     = HLO_bytes / HBM bw (819 GB/s)
+  collective = link_bytes / ICI bw (50 GB/s)
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(path_glob="results/dryrun/*.json"):
+    recs = []
+    for p in sorted(glob.glob(path_glob)):
+        with open(p) as f:
+            recs.extend(json.load(f))
+    return recs
+
+
+def render(recs, mesh="16x16") -> str:
+    lines = [
+        "| arch | shape | Tc (ms) | Tm (ms) | Tx (ms) | dominant | "
+        "roofline frac | useful ratio | what moves the bottleneck |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    hints = {
+        ("memory", "train"): "cut fp32 activation passes / remat stash",
+        ("memory", "prefill"): "KV/layout fusion; bf16 end-to-end",
+        ("memory", "decode"): "N:M-packed weights (paper): HBM bytes / (M/N)",
+        ("collective", "train"): "reduce-scatter grads; overlap TP collectives",
+        ("collective", "prefill"): "sequence-parallel halves TP traffic",
+        ("collective", "decode"): "TP all-reduce in bf16; fewer hops",
+        ("compute", "train"): "already compute-bound: shared-N:M reduced-K",
+        ("compute", "prefill"): "shared-N:M reduced-K matmuls",
+        ("compute", "decode"): "batch more sequences per step",
+    }
+    kind_of = {"train_4k": "train", "prefill_32k": "prefill",
+               "decode_32k": "decode", "long_500k": "decode"}
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skip | — | — | {r['reason']} |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"FAIL | — | — | {r.get('error','')[:60]} |")
+            continue
+        dom = r["dominant"]
+        hint = hints.get((dom, kind_of.get(r["shape"], "train")), "")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.1f} | "
+            f"{r['t_memory']*1e3:.1f} | {r['t_collective']*1e3:.1f} | "
+            f"{dom} | {r['roofline_frac']:.3f} | "
+            f"{r['useful_ratio']:.2f} | {hint} |")
+    return "\n".join(lines)
+
+
+def interesting_cells(recs, mesh="16x16"):
+    """The three hillclimb picks: worst roofline fraction among cells
+    with non-trivial compute (decode steps have Tc ~ 0 by construction,
+    so rf ~ 0 there is not "worst utilization" in a meaningful sense),
+    most collective-bound, most paper-representative (decode cell with
+    the largest memory term — where packed N:M weights bite hardest)."""
+    ok = [r for r in recs if r.get("mesh") == mesh and r["status"] == "ok"]
+    if not ok:
+        return {}
+    compute_cells = [r for r in ok if r["t_compute"] > 0.1] or ok
+    worst = min(compute_cells, key=lambda r: r["roofline_frac"])
+    coll = max(compute_cells, key=lambda r: r["t_collective"] /
+               max(r["t_compute"] + r["t_memory"] + r["t_collective"], 1e-12))
+    decode = [r for r in ok if "decode" in r["shape"] or "long" in r["shape"]]
+    paper = max(decode or ok, key=lambda r: r["t_memory"])
+    return {"worst_roofline": (worst["arch"], worst["shape"]),
+            "most_collective": (coll["arch"], coll["shape"]),
+            "paper_representative": (paper["arch"], paper["shape"])}
+
+
+def main():
+    g = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun/*.json"
+    recs = load(g)
+    if not recs:
+        print(f"# no dry-run records under {g} — run "
+              f"`python -m repro.launch.dryrun --all --out results/dryrun`")
+        return
+    print(render(recs))
+    print()
+    print("picks:", json.dumps(interesting_cells(recs)))
+
+
+if __name__ == "__main__":
+    main()

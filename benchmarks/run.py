@@ -1,0 +1,40 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run table2     # one
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (fig14_resources, fig15_speedup, fig16_layerwise,
+                        fig17_scaling, kernel_bench, roofline, table2_flops,
+                        table4_platforms, table5_accels)
+
+SUITES = {
+    "table2": table2_flops,
+    "fig14": fig14_resources,
+    "fig15": fig15_speedup,
+    "fig16": fig16_layerwise,
+    "table4": table4_platforms,
+    "fig17": fig17_scaling,
+    "table5": table5_accels,
+    "kernels": kernel_bench,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(SUITES)
+    for name in names:
+        mod = SUITES[name]
+        print(f"\n===== {name} ({mod.__name__}) =====")
+        t0 = time.perf_counter()
+        mod.main()
+        print(f"# {name}: {(time.perf_counter() - t0)*1e3:.0f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Table II reproduction: training/inference FLOPs for the five paper
+models under {dense, SR-STE, SDGP, SDWP, BDWP} x {2:4, 2:8, 2:16}.
+
+The paper's accounting: total training FLOPs = epochs x dataset_size x
+per-sample train FLOPs, where per-sample train = FF + BP + WU = 3x the
+inference FLOPs for dense training; N:M methods scale the pruned stages
+by N/M (first layer excluded).  Inference FLOPs = 2 x MACs of the
+forward pass (pruned stages at N/M).
+
+Paper reference values (dense): ResNet9 2.62e16 / ViT 1.45e16 /
+VGG19 9.00e15 / ResNet18 4.82e16 / ResNet50 1.91e18 train FLOPs.
+"""
+
+from __future__ import annotations
+
+from repro.configs.paper_models import PAPER_MODELS
+from repro.satsim.workloads import paper_model_layers
+
+DATASET_SIZE = {"cifar10": 50_000, "cifar100": 50_000,
+                "tinyimagenet": 100_000, "imagenet": 1_281_167}
+
+# (ff_sparse, bp_sparse) per method — WU always dense (Alg. 1)
+METHODS = {
+    "dense": (False, False),
+    "srste": (True, False),
+    "sdgp": (False, True),
+    "bdwp": (True, True),
+}
+
+PAPER_TRAIN_E16 = {  # Table II "Train. FLOPS" dense baselines (x1e16)
+    "resnet9": 2.62, "vit": 1.45, "vgg19": 0.90, "resnet18": 4.82,
+    "resnet50": 191.0,
+}
+
+
+def model_flops(name: str, method: str, n: int, m: int) -> dict:
+    pm = PAPER_MODELS[name]
+    layers = paper_model_layers(name, batch=1)  # per-sample
+    ff_sp, bp_sp = METHODS[method]
+    frac = n / m
+    infer = train = 0.0
+    for l in layers:
+        base = 2.0 * l.macs
+        f_ff = frac if (ff_sp and l.prunable) else 1.0
+        f_bp = frac if (bp_sp and l.prunable) else 1.0
+        infer += base * f_ff
+        train += base * (f_ff + f_bp + 1.0)
+    samples = pm.epochs * DATASET_SIZE[pm.dataset]
+    return {"model": name, "method": method, "nm": f"{n}:{m}",
+            "infer_flops": infer, "train_flops": train * samples}
+
+
+def run() -> list:
+    rows = []
+    for name in PAPER_MODELS:
+        dense = model_flops(name, "dense", 2, 8)
+        for (n, m) in ((2, 4), (2, 8), (2, 16)):
+            for method in ("srste", "sdgp", "bdwp"):
+                r = model_flops(name, method, n, m)
+                r["train_reduction_vs_dense"] = round(
+                    dense["train_flops"] / r["train_flops"], 3)
+                r["infer_reduction_vs_dense"] = round(
+                    dense["infer_flops"] / r["infer_flops"], 3)
+                rows.append(r)
+        dense["train_reduction_vs_dense"] = 1.0
+        dense["infer_reduction_vs_dense"] = 1.0
+        dense["paper_train_e16"] = PAPER_TRAIN_E16[name]
+        dense["ratio_vs_paper"] = round(
+            dense["train_flops"] / (PAPER_TRAIN_E16[name] * 1e16), 3)
+        rows.append(dense)
+    return rows
+
+
+def main():
+    rows = run()
+    avg_red = [r["train_reduction_vs_dense"] for r in rows
+               if r["method"] == "bdwp" and r["nm"] == "2:8"]
+    print("model,method,nm,train_flops,infer_flops,train_red,infer_red")
+    for r in rows:
+        print(f"{r['model']},{r['method']},{r['nm']},"
+              f"{r['train_flops']:.3e},{r['infer_flops']:.3e},"
+              f"{r['train_reduction_vs_dense']},{r['infer_reduction_vs_dense']}")
+    print(f"# BDWP 2:8 mean train reduction: "
+          f"{sum(avg_red)/len(avg_red):.2f}x (paper: 1.93x)")
+
+
+if __name__ == "__main__":
+    main()

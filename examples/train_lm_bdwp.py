@@ -1,0 +1,73 @@
+"""End-to-end driver: train a ~100M-param LM with BDWP 2:8 for a few
+hundred steps on synthetic data, with checkpointing + fault tolerance.
+
+  PYTHONPATH=src python examples/train_lm_bdwp.py [--steps 300]
+
+This is deliverable (b)'s "train ~100M model" example: the same stack
+the production launcher uses (StepBundle -> trainer.fit), at a scale a
+CPU container completes.  Compare --method dense vs bdwp to see the
+loss curves track (Fig. 4's claim) while BDWP executes ~48% fewer
+matmul MACs (printed from the RWG schedule).
+"""
+
+import argparse
+
+import jax
+
+from repro.core import schedule as SCHED
+from repro.core.sparsity import SparsityConfig
+from repro.data import synthetic as D
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer_lm as T
+from repro.optim import sgd
+from repro.train import step as ST
+from repro.train import trainer as TR
+
+LM_100M = T.LMConfig(
+    name="lm-100m", vocab=32768, d_model=640, n_layers=10, n_heads=10,
+    n_kv=5, head_dim=64, d_ff=2560, tie_embed=True, remat=False,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--method", default="bdwp")
+    ap.add_argument("--nm", default="2:8")
+    ap.add_argument("--ckpt-dir", default="/tmp/train_lm_bdwp")
+    args = ap.parse_args()
+
+    n, m = (int(v) for v in args.nm.split(":"))
+    sp_cfg = SparsityConfig(n=n, m=m, method=args.method)
+    params, _ = T.init(jax.random.PRNGKey(0), LM_100M, abstract=True)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {n_params/1e6:.1f}M params | {args.method} {n}:{m}")
+
+    # RWG offline schedule: predicted MAC reduction for this model
+    shapes = {"/".join(str(getattr(k, 'key', k)) for k in path): v.shape
+              for path, v in jax.tree_util.tree_flatten_with_path(params)[0]}
+    plans = SCHED.plan_model(shapes, tokens=args.batch * args.seq, cfg=sp_cfg)
+    summ = SCHED.schedule_summary(plans)
+    print(f"RWG schedule: {summ['n_layers']} matmuls, MAC reduction "
+          f"{summ['reduction']:.2f}x vs dense, mean predicted utilization "
+          f"{summ['mean_utilization']:.2f}")
+
+    mesh = make_host_mesh()
+    opt = sgd.SGDConfig(lr=0.02, warmup_steps=20, total_steps=args.steps)
+    bundle = ST.build_lm_train(LM_100M, mesh, sp_cfg, opt)
+    state = jax.device_put(
+        ST.init_train_state(jax.random.PRNGKey(0), LM_100M),
+        bundle.state_shardings)
+    stream = D.lm_stream(LM_100M.vocab, args.batch, args.seq)
+    tcfg = TR.TrainerConfig(total_steps=args.steps, ckpt_every=100,
+                            log_every=20, ckpt_dir=args.ckpt_dir,
+                            heartbeat_path=f"{args.ckpt_dir}/heartbeat.json")
+    state, history = TR.fit(bundle, state, stream, tcfg)
+    print(f"final loss {history[-1]['loss']:.4f} over {len(history)} steps "
+          f"({sum(h['sec'] for h in history):.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+
+from repro.configs import get_arch, SHAPES
+from repro.core.sparsity import SparsityConfig
+from repro.launch import dryrun as DR, hlo_cost, mesh as M
+
+sp = SparsityConfig(n=2, m=8, method="bdwp")
+mesh = M.make_production_mesh()
+jobs = [("hymba-1.5b", "train_4k", dict(seq_parallel=True)),
+        ("deepseek-v2-lite-16b", "train_4k", dict())]
+for arch_id, shape_id, kw in jobs:
+    comp = DR.lower_cell(get_arch(arch_id), SHAPES[shape_id], mesh, sp,
+                         **kw).compile()
+    bd = hlo_cost.breakdown(comp.as_text(), top=8)
+    print(f"==== {arch_id} {shape_id} {kw} ====")
+    print(f"totals: flops={bd['total_flops']:.3e} "
+          f"bytes={bd['total_bytes']:.3e} coll={bd['total_coll']:.3e}")
+    print("-- top coll --")
+    for r in bd["top_coll"][:7]:
+        print(f"{r['coll']:.2e} w={r['weight']:g} {r['kind']:14s} "
+              f"{r['line'][:115]}")
+    print("-- top bytes --")
+    for r in bd["top_bytes"][:5]:
+        print(f"{r['bytes']:.2e} w={r['weight']:g} {r['kind']:14s} "
+              f"{r['line'][:115]}")
+    sys.stdout.flush()

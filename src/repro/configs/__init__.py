@@ -1,0 +1,41 @@
+"""Architecture registry: ``--arch <id>`` -> ArchSpec."""
+
+from repro.configs import (
+    deepseek_v2_lite,
+    gemma3_12b,
+    glm4_9b,
+    granite_moe_1b,
+    hymba_1_5b,
+    internvl2_26b,
+    mamba2_370m,
+    qwen2_5_32b,
+    qwen3_8b,
+    whisper_large_v3,
+)
+from repro.configs.base import SHAPES, ArchSpec, Shape, lm_input_specs
+
+ARCHS = {
+    a.ARCH.arch_id: a.ARCH
+    for a in (
+        qwen3_8b, qwen2_5_32b, glm4_9b, gemma3_12b, whisper_large_v3,
+        granite_moe_1b, deepseek_v2_lite, mamba2_370m, hymba_1_5b,
+        internvl2_26b,
+    )
+}
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def all_cells():
+    """Every (arch, shape) pair — 40 cells; skips annotated, not dropped."""
+    for arch_id, arch in ARCHS.items():
+        for shape_id, shape in SHAPES.items():
+            yield arch, shape
+
+
+__all__ = ["ARCHS", "SHAPES", "ArchSpec", "Shape", "get_arch",
+           "lm_input_specs", "all_cells"]

@@ -1,0 +1,116 @@
+"""Config registry: architectures x input shapes (the 40 dry-run cells).
+
+Each assigned architecture gets its own module exporting ``ARCH``; this
+module defines the shared dataclasses, the shape table and the
+``input_specs`` builders (ShapeDtypeStruct stand-ins — shardable, weak-
+type-correct, zero allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.encdec import EncDecConfig
+from repro.models.transformer_lm import LMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    shape_id: str
+    seq: int
+    batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                  # "lm" | "encdec"
+    kind: str                    # dense | moe | ssm | hybrid | vlm | audio
+    full: Union[LMConfig, EncDecConfig]
+    smoke: Union[LMConfig, EncDecConfig]
+    source: str                  # provenance tag from the assignment
+    sub_quadratic: bool = False  # may run long_500k
+    prefix_len: int = 0          # stub-frontend prefix tokens (vlm/audio enc)
+
+    def supports(self, shape_id: str) -> bool:
+        if shape_id == "long_500k" and not self.sub_quadratic:
+            return False  # pure full-attention arch: noted skip (DESIGN.md)
+        return True
+
+    def skip_reason(self, shape_id: str) -> str:
+        if shape_id == "long_500k" and not self.sub_quadratic:
+            return "pure full-attention arch; 500k decode requires sub-quadratic attention"
+        return ""
+
+
+def lm_input_specs(arch: ArchSpec, shape: Shape, smoke: bool = False):
+    """ShapeDtypeStruct inputs for one (arch, shape) cell."""
+    cfg = arch.smoke if smoke else arch.full
+    b, s = shape.batch, shape.seq
+    if smoke:
+        b, s = 2, min(s, 64)
+    i32 = jnp.int32
+    if arch.family == "encdec":
+        enc_t = 128 if smoke else cfg.max_source
+        d = cfg.d_model
+        if shape.kind == "train":
+            return {
+                "frames": jax.ShapeDtypeStruct((b, enc_t, d), jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        if shape.kind == "prefill":
+            return {
+                "frames": jax.ShapeDtypeStruct((b, enc_t, d), jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        # decode: enc output + dec cache + one token
+        from repro.models import encdec as E
+
+        cache = jax.eval_shape(lambda: E.init_cache(cfg, b, s))
+        return {
+            "enc_out": jax.ShapeDtypeStruct((b, enc_t, d), jnp.bfloat16),
+            "cache": cache,
+            "token": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+
+    # LM family
+    prefix = arch.prefix_len if not smoke else (8 if arch.prefix_len else 0)
+    s_txt = s - prefix
+    specs = {}
+    if shape.kind == "train":
+        if prefix:
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, prefix, cfg.d_model), jnp.bfloat16)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s_txt), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s_txt), i32)
+        return specs
+    if shape.kind == "prefill":
+        if prefix:
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, prefix, cfg.d_model), jnp.bfloat16)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s_txt), i32)
+        return specs
+    # decode
+    from repro.models import transformer_lm as T
+
+    cache = jax.eval_shape(lambda: T.init_lm_cache(cfg, b, s))
+    return {
+        "cache": cache,
+        "token": jax.ShapeDtypeStruct((b, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }

@@ -1,0 +1,32 @@
+"""gemma3-12b [dense]: 48L d=3840 16H (GQA kv=8) d_ff=15360 vocab=262144.
+
+5:1 local:global sliding-window pattern, 128k context.
+[hf:google/gemma-3-1b-pt; unverified]
+
+long_500k runs: 5/6 of layers are sliding-window (true O(S*W) banded
+attention); the 1-in-6 global layers use distributed flash-decoding over
+the sequence-sharded cache (DESIGN.md §4).
+"""
+
+from repro.configs.base import ArchSpec
+from repro.models.transformer_lm import LMConfig
+
+FULL = LMConfig(
+    name="gemma3-12b", vocab=262144, d_model=3840, n_layers=48,
+    n_heads=16, n_kv=8, head_dim=256, d_ff=15360,
+    rope_theta=1e6, qk_norm=True,
+    pattern=("swa", "swa", "swa", "swa", "swa", "attn"), window=1024,
+    tie_embed=True,
+)
+
+SMOKE = LMConfig(
+    name="gemma3-12b-smoke", vocab=512, d_model=64, n_layers=6,
+    n_heads=4, n_kv=2, head_dim=16, d_ff=128, qk_norm=True,
+    pattern=("swa", "swa", "swa", "swa", "swa", "attn"), window=16,
+    tie_embed=True,
+)
+
+ARCH = ArchSpec(
+    arch_id="gemma3-12b", family="lm", kind="dense", full=FULL, smoke=SMOKE,
+    source="hf:google/gemma-3-1b-pt; unverified", sub_quadratic=True,
+)

@@ -1,0 +1,23 @@
+"""glm4-9b [dense]: 40L d=4096 32H (GQA kv=2) d_ff=13696 vocab=151552.
+
+RoPE, GQA.  [hf:THUDM/glm-4-9b; hf]
+"""
+
+from repro.configs.base import ArchSpec
+from repro.models.transformer_lm import LMConfig
+
+FULL = LMConfig(
+    name="glm4-9b", vocab=151552, d_model=4096, n_layers=40,
+    n_heads=32, n_kv=2, head_dim=128, d_ff=13696,
+    rope_theta=1e4, tie_embed=False,
+)
+
+SMOKE = LMConfig(
+    name="glm4-9b-smoke", vocab=512, d_model=64, n_layers=2,
+    n_heads=4, n_kv=1, head_dim=16, d_ff=128, tie_embed=False,
+)
+
+ARCH = ArchSpec(
+    arch_id="glm4-9b", family="lm", kind="dense", full=FULL, smoke=SMOKE,
+    source="hf:THUDM/glm-4-9b; hf", sub_quadratic=False,
+)

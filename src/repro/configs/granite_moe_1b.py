@@ -1,0 +1,29 @@
+"""granite-moe-1b-a400m [moe]: 24L d=1024 16H (GQA kv=8) d_ff=512
+vocab=49155, MoE 32 experts top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+"""
+
+from repro.configs.base import ArchSpec
+from repro.models.moe import MoEConfig
+from repro.models.transformer_lm import LMConfig
+
+FULL = LMConfig(
+    name="granite-moe-1b-a400m", vocab=49155, d_model=1024, n_layers=24,
+    n_heads=16, n_kv=8, head_dim=64, d_ff=0,
+    moe=MoEConfig(n_experts=32, top_k=8, d_expert=512),
+    tie_embed=True,
+)
+
+SMOKE = LMConfig(
+    name="granite-moe-1b-smoke", vocab=512, d_model=64, n_layers=2,
+    n_heads=4, n_kv=2, head_dim=16, d_ff=0,
+    moe=MoEConfig(n_experts=8, top_k=2, d_expert=32),
+    tie_embed=True,
+)
+
+ARCH = ArchSpec(
+    arch_id="granite-moe-1b-a400m", family="lm", kind="moe",
+    full=FULL, smoke=SMOKE,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base; hf",
+    sub_quadratic=False,
+)

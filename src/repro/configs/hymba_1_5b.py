@@ -1,0 +1,33 @@
+"""hymba-1.5b [hybrid]: 32L d=1600 25H (GQA kv=5) d_ff=5504 vocab=32001,
+ssm_state=16 — parallel attn+mamba heads.  [arXiv:2411.13676; hf]
+
+Each layer runs attention and an SSM head in parallel on the same input
+and mean-combines (models/transformer_lm kind="hybrid").  Attention is
+sliding-window (Hymba uses SWA for all but 3 layers; we use SWA
+everywhere + the SSM path provides global context) -> sub-quadratic,
+long_500k runs.
+"""
+
+from repro.configs.base import ArchSpec
+from repro.models.transformer_lm import LMConfig
+
+FULL = LMConfig(
+    name="hymba-1.5b", vocab=32001, d_model=1600, n_layers=32,
+    n_heads=25, n_kv=5, head_dim=64, d_ff=5504,
+    pattern=("hybrid",), window=1024,
+    ssm_state=16, ssm_head_dim=64, ssm_chunk=128,
+    tie_embed=True,
+)
+
+SMOKE = LMConfig(
+    name="hymba-1.5b-smoke", vocab=512, d_model=64, n_layers=2,
+    n_heads=4, n_kv=2, head_dim=16, d_ff=128,
+    pattern=("hybrid",), window=16,
+    ssm_state=16, ssm_head_dim=16, ssm_chunk=16,
+    tie_embed=True,
+)
+
+ARCH = ArchSpec(
+    arch_id="hymba-1.5b", family="lm", kind="hybrid", full=FULL, smoke=SMOKE,
+    source="arXiv:2411.13676; hf", sub_quadratic=True,
+)

@@ -1,0 +1,26 @@
+"""internvl2-26b [vlm]: 48L d=6144 48H (GQA kv=8) d_ff=16384 vocab=92553.
+
+InternViT + InternLM2 — per assignment the vision frontend is a STUB:
+``input_specs()`` provides precomputed patch embeddings (B, 1024, d)
+consumed as a prefix by the LM backbone.  [arXiv:2404.16821; hf]
+long_500k skipped: full-attention backbone.
+"""
+
+from repro.configs.base import ArchSpec
+from repro.models.transformer_lm import LMConfig
+
+FULL = LMConfig(
+    name="internvl2-26b", vocab=92553, d_model=6144, n_layers=48,
+    n_heads=48, n_kv=8, head_dim=128, d_ff=16384,
+    rope_theta=1e6, tie_embed=False,
+)
+
+SMOKE = LMConfig(
+    name="internvl2-26b-smoke", vocab=512, d_model=64, n_layers=2,
+    n_heads=4, n_kv=2, head_dim=16, d_ff=128, tie_embed=False,
+)
+
+ARCH = ArchSpec(
+    arch_id="internvl2-26b", family="lm", kind="vlm", full=FULL, smoke=SMOKE,
+    source="arXiv:2404.16821; hf", sub_quadratic=False, prefix_len=1024,
+)

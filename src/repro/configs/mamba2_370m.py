@@ -1,0 +1,27 @@
+"""mamba2-370m [ssm]: 48L d=1024 (attention-free) vocab=50280,
+ssm_state=128 — SSD (state-space duality).  [arXiv:2405.21060; unverified]
+
+BDWP applies to in_proj/out_proj (~90% of FLOPs); the SSD scan itself has
+no prunable weight contraction (DESIGN.md §5).  long_500k runs: O(1)
+state decode.
+"""
+
+from repro.configs.base import ArchSpec
+from repro.models.transformer_lm import LMConfig
+
+FULL = LMConfig(
+    name="mamba2-370m", vocab=50280, d_model=1024, n_layers=48,
+    pattern=("mamba",), ssm_state=128, ssm_head_dim=64, ssm_chunk=128,
+    tie_embed=True,
+)
+
+SMOKE = LMConfig(
+    name="mamba2-370m-smoke", vocab=512, d_model=64, n_layers=2,
+    pattern=("mamba",), ssm_state=16, ssm_head_dim=16, ssm_chunk=16,
+    tie_embed=True,
+)
+
+ARCH = ArchSpec(
+    arch_id="mamba2-370m", family="lm", kind="ssm", full=FULL, smoke=SMOKE,
+    source="arXiv:2405.21060; unverified", sub_quadratic=True,
+)

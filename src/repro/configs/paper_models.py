@@ -1,0 +1,39 @@
+"""The paper's own five benchmark models (Table I) for the faithful
+reproduction track: ResNet9, ViT, VGG19, ResNet18, ResNet50.
+
+These drive the Table II FLOP accounting, the Fig. 4 loss-curve study
+and the SAT cycle-model benchmarks (Fig. 15/16).  They are not part of
+the 40 assigned dry-run cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.convnets import ViTConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperModel:
+    name: str
+    dataset: str
+    image: int
+    num_classes: int
+    epochs: int
+    batch: int
+    lr: float
+    wd: float
+    # Table II training/inference FLOPs for the dense baseline (x1e9 fwd)
+    table2_infer_gflops_dense: float = 0.0
+
+
+PAPER_MODELS = {
+    "resnet9": PaperModel("resnet9", "cifar10", 32, 10, 150, 512, 0.5, 5e-4, 1.16),
+    "vit": PaperModel("vit", "cifar100", 32, 100, 150, 512, 0.1, 5e-4, 0.643),
+    "vgg19": PaperModel("vgg19", "cifar100", 32, 100, 150, 512, 0.1, 5e-4, 0.4),
+    "resnet18": PaperModel("resnet18", "tinyimagenet", 64, 200, 88, 512, 0.05, 5e-3, 1.83),
+    "resnet50": PaperModel("resnet50", "imagenet", 224, 1000, 120, 256, 0.1, 5e-5, 4.14),
+}
+
+VIT_PAPER = ViTConfig(image=32, patch=4, d_model=384, n_layers=7, n_heads=6,
+                      d_ff=1536, num_classes=100)

@@ -1,0 +1,24 @@
+"""qwen2.5-32b [dense]: 64L d=5120 40H (GQA kv=8) d_ff=27648 vocab=152064.
+
+GQA, QKV bias.  [hf:Qwen/Qwen2.5-0.5B; hf]
+"""
+
+from repro.configs.base import ArchSpec
+from repro.models.transformer_lm import LMConfig
+
+FULL = LMConfig(
+    name="qwen2.5-32b", vocab=152064, d_model=5120, n_layers=64,
+    n_heads=40, n_kv=8, head_dim=128, d_ff=27648,
+    rope_theta=1e6, qkv_bias=True, tie_embed=False,
+)
+
+SMOKE = LMConfig(
+    name="qwen2.5-32b-smoke", vocab=512, d_model=64, n_layers=2,
+    n_heads=4, n_kv=2, head_dim=16, d_ff=160,
+    rope_theta=1e6, qkv_bias=True, tie_embed=False,
+)
+
+ARCH = ArchSpec(
+    arch_id="qwen2.5-32b", family="lm", kind="dense", full=FULL, smoke=SMOKE,
+    source="hf:Qwen/Qwen2.5-0.5B; hf", sub_quadratic=False,
+)

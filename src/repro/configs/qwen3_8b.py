@@ -1,0 +1,24 @@
+"""qwen3-8b [dense]: 36L d=4096 32H (GQA kv=8) d_ff=12288 vocab=151936.
+
+qk_norm, GQA.  [hf:Qwen/Qwen3-8B; hf]
+"""
+
+from repro.configs.base import ArchSpec
+from repro.models.transformer_lm import LMConfig
+
+FULL = LMConfig(
+    name="qwen3-8b", vocab=151936, d_model=4096, n_layers=36,
+    n_heads=32, n_kv=8, head_dim=128, d_ff=12288,
+    rope_theta=1e6, qk_norm=True, tie_embed=False,
+)
+
+SMOKE = LMConfig(
+    name="qwen3-8b-smoke", vocab=512, d_model=64, n_layers=2,
+    n_heads=4, n_kv=2, head_dim=16, d_ff=128,
+    rope_theta=1e6, qk_norm=True, tie_embed=False,
+)
+
+ARCH = ArchSpec(
+    arch_id="qwen3-8b", family="lm", kind="dense", full=FULL, smoke=SMOKE,
+    source="hf:Qwen/Qwen3-8B; hf", sub_quadratic=False,
+)

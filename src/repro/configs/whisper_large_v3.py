@@ -1,0 +1,31 @@
+"""whisper-large-v3 [audio]: 32L d=1280 20H (kv=20) d_ff=5120 vocab=51866.
+
+Encoder-decoder; conv/mel frontend is a STUB per assignment —
+``input_specs()`` provides precomputed frame embeddings (B, 1500, d).
+[arXiv:2212.04356; unverified]
+
+long_500k skipped: full (self+cross) attention decoder.  Shapes are
+applied to the decoder backbone (max_target stretched to the assigned
+sequence lengths; the real model caps at 448 — noted in DESIGN.md).
+"""
+
+from repro.configs.base import ArchSpec
+from repro.models.encdec import EncDecConfig
+
+FULL = EncDecConfig(
+    name="whisper-large-v3", vocab=51866, d_model=1280,
+    n_layers=32, n_enc_layers=32, n_heads=20, n_kv=20, head_dim=64,
+    d_ff=5120, max_source=1500, max_target=32768,
+)
+
+SMOKE = EncDecConfig(
+    name="whisper-large-v3-smoke", vocab=512, d_model=64,
+    n_layers=2, n_enc_layers=2, n_heads=4, n_kv=4, head_dim=16,
+    d_ff=128, max_source=128, max_target=64,
+)
+
+ARCH = ArchSpec(
+    arch_id="whisper-large-v3", family="encdec", kind="audio",
+    full=FULL, smoke=SMOKE, source="arXiv:2212.04356; unverified",
+    sub_quadratic=False,
+)

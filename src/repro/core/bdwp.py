@@ -1,0 +1,327 @@
+"""BDWP — Bidirectional Weight Pruning for N:M sparse training (Alg. 1).
+
+The paper's training flow, as composable JAX ops with custom VJPs:
+
+  FF : y  = x @ sparsify_{N:M}(W, axis=in)      # srste | bdwp
+  BP : dx = g @ sparsify_{N:M}(W, axis=out)^T   # sdwp  | bdwp
+       dx = sparsify_{N:M}(g, axis=out) @ W^T   # sdgp
+  WU : dW = x^T @ g                             # always dense (paper)
+
+Gradients reach the *dense master weights* by straight-through estimation;
+SR-STE's sparse-refined decay term lam*(1-mask)*W is applied in the
+optimizer (``optim/``; fused kernel in ``kernels/fused_update.py``).
+
+Both ``nm_linear`` (matmul view — linear layers, attention/MLP
+projections, im2col'd convs) and ``nm_conv`` (direct conv view) are
+provided; the conv backward reuses XLA's conv transposes through
+``jax.vjp`` closures, so dgrad runs with the BP-pruned weights and wgrad
+with dense weights — exactly Alg. 1.
+"""
+
+from __future__ import annotations
+
+import re
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import SparsityConfig, sparsify
+
+# ---------------------------------------------------------------------------
+# Matmul view: x (..., K) @ w (K, F) -> (..., F)
+# ---------------------------------------------------------------------------
+
+
+def _ff_weights(w: jax.Array, cfg: SparsityConfig) -> jax.Array:
+    """FF-pruned weights: N:M groups along the input (contraction) axis."""
+    if cfg.prunes_ff_weights():
+        return sparsify(w, cfg, axis=0, share_axis=1)
+    return w
+
+
+def _bp_weights(w: jax.Array, cfg: SparsityConfig) -> jax.Array:
+    """BP-pruned weights: N:M groups along the output axis (dgrad contraction)."""
+    if cfg.prunes_bp_weights():
+        return sparsify(w, cfg, axis=1, share_axis=0)
+    return w
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def nm_linear(x: jax.Array, w: jax.Array, cfg: SparsityConfig) -> jax.Array:
+    """y = x @ w with the cfg.method's N:M sparse training semantics."""
+    return jnp.matmul(x, _ff_weights(w, cfg).astype(x.dtype))
+
+
+def _nm_linear_fwd(x, w, cfg):
+    y = jnp.matmul(x, _ff_weights(w, cfg).astype(x.dtype))
+    return y, (x, w)
+
+
+def _nm_linear_bwd(cfg, res, g):
+    x, w = res
+    # AMP dataflow (paper Fig. 11): BP/WU arithmetic runs in the compute
+    # dtype (bf16 here, FP16 on SAT); only the weight-gradient *result*
+    # accumulates in fp32 for WUVE.  Casting the cotangent down — rather
+    # than the weights up — keeps backward activations, remat recompute
+    # and the TP collectives in 16-bit (2x traffic saving, and faithful).
+    gc = g.astype(x.dtype)
+    # BP: activation gradient with the backward-pruned operand
+    if cfg.prunes_bp_grads():  # SDGP: prune the *output gradients* N:M
+        g_bp = sparsify(gc, cfg, axis=-1)
+        dx = jnp.matmul(g_bp, w.T.astype(gc.dtype))
+    else:
+        w_bp = _bp_weights(w, cfg)
+        dx = jnp.matmul(gc, w_bp.T.astype(gc.dtype))
+    # WU: weight gradient — dense (paper Alg. 1 line 9), straight-through;
+    # fp32 accumulation via preferred_element_type (MXU-native)
+    x2 = x.reshape(-1, x.shape[-1])
+    g2 = gc.reshape(-1, gc.shape[-1])
+    dw = jnp.matmul(x2.T, g2, preferred_element_type=jnp.float32)
+    return dx.reshape(x.shape).astype(x.dtype), dw.astype(w.dtype)
+
+
+nm_linear.defvjp(_nm_linear_fwd, _nm_linear_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Conv view (NHWC x HWIO -> NHWC) — the paper's CNN benchmarks
+# ---------------------------------------------------------------------------
+
+_CONV_IN_AXIS = 2   # HWIO: input-channel axis (FF grouping, Fig. 5a)
+_CONV_OUT_AXIS = 3  # HWIO: output-channel axis (BP grouping, Fig. 5b)
+
+
+def _conv(x, w, stride, padding):
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def nm_conv(x, w, cfg: SparsityConfig, stride: int = 1, padding: str = "SAME"):
+    w_ff = sparsify(w, cfg, axis=_CONV_IN_AXIS, share_axis=_CONV_OUT_AXIS) \
+        if cfg.prunes_ff_weights() else w
+    return _conv(x, w_ff, stride, padding)
+
+
+def _nm_conv_fwd(x, w, cfg, stride, padding):
+    w_ff = sparsify(w, cfg, axis=_CONV_IN_AXIS, share_axis=_CONV_OUT_AXIS) \
+        if cfg.prunes_ff_weights() else w
+    return _conv(x, w_ff, stride, padding), (x, w)
+
+
+def _nm_conv_bwd(cfg, stride, padding, res, g):
+    x, w = res
+    if cfg.prunes_bp_grads():
+        g_eff = sparsify(g, cfg, axis=-1)  # N:M across output channels
+        w_bp = w
+    else:
+        g_eff = g
+        w_bp = sparsify(w, cfg, axis=_CONV_OUT_AXIS, share_axis=_CONV_IN_AXIS) \
+            if cfg.prunes_bp_weights() else w
+    # dgrad through a closure over the BP weights
+    _, dgrad = jax.vjp(lambda xx: _conv(xx, w_bp, stride, padding), x)
+    (dx,) = dgrad(g_eff.astype(x.dtype))
+    # wgrad dense (straight-through to master weights)
+    _, wgrad = jax.vjp(lambda ww: _conv(x, ww, stride, padding), w)
+    (dw,) = wgrad(g.astype(x.dtype))
+    return dx, dw.astype(w.dtype)
+
+
+nm_conv.defvjp(_nm_conv_fwd, _nm_conv_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Packed-forward (inference / pre-generated weights, Fig. 11c)
+# ---------------------------------------------------------------------------
+
+
+def nm_linear_packed(x, vals, idx, cfg: SparsityConfig):
+    """Forward-only matmul consuming SORE-packed weights.
+
+    Used by the serving path: weights live in HBM in compact N:M form
+    (N/M of dense bytes + indices); the Pallas kernel (kernels/nm_spmm)
+    decompresses tile-by-tile in VMEM.  This wrapper uses the oracle path
+    so it is differentiable-free and dry-run friendly.
+    """
+    from repro.kernels import ref  # local import to avoid cycles
+
+    x2 = x.reshape(-1, x.shape[-1])
+    y = ref.ref_nm_spmm(x2, vals, idx, cfg.n, cfg.m)
+    return y.reshape(*x.shape[:-1], vals.shape[-1]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Shared-mode packed serving (beyond-paper, MXU-native reduced-K)
+# ---------------------------------------------------------------------------
+#
+# For serving, the FF weights are N:M sparse anyway (BDWP-trained).  In
+# "shared" granularity one pattern covers every output column, so the
+# contraction axis can be *pre-gathered* offline: w (K, F) becomes
+# vals (K*N/M, F) + row indices (K*N/M,), and the forward is a dense
+# matmul over the shortened K — M/N x fewer MXU FLOPs AND M/N x fewer
+# weight bytes, both visible in lowered HLO (unlike element-mode, whose
+# win lives inside the Pallas kernel's VMEM decompression).
+
+
+def shared_ff_pack(w: jax.Array, cfg: SparsityConfig):
+    """w (K, F) -> (vals (Kc, F), idx (Kc,)); pattern shared across F."""
+    k = w.shape[0]
+    score = jnp.abs(w).astype(jnp.float32).sum(1).reshape(k // cfg.m, cfg.m)
+    _, top = jax.lax.top_k(score, cfg.n)
+    top = jnp.sort(top, axis=-1)
+    idx = (jnp.arange(k // cfg.m)[:, None] * cfg.m + top).reshape(-1)
+    return jnp.take(w, idx, axis=0), idx.astype(jnp.int32)
+
+
+def packed_shared_apply(p: dict, x: jax.Array) -> jax.Array:
+    """y = gather(x, idx) @ vals  — the reduced-K serving matmul."""
+    xg = jnp.take(x, p["idx"], axis=-1)
+    y = jnp.matmul(xg, p["vals"].astype(xg.dtype))
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def serve_packable(name: str, lshape, cfg: SparsityConfig) -> bool:
+    """FF-direction packing eligibility (serving reads only w_FF).
+
+    lm_head is excluded to match training: the logits projection never
+    routes through nm_linear (vocab head kept dense, like the paper's
+    first-layer rule at the other end of the net)."""
+    if cfg.is_dense or len(lshape) != 2:
+        return False
+    # k_up/v_up are consumed directly by the absorbed-matrix MLA decode
+    for frag in (*cfg.excluded, "lm_head", "k_up", "v_up"):
+        if re.search(frag, name):
+            return False
+    k = lshape[0]
+    return k % cfg.m == 0 and k >= 2 * cfg.m
+
+
+def pack_tree_shared(params, cfg: SparsityConfig, pspecs=None):
+    """Transform a param tree for packed serving: every eligible
+    {"w": (…, K, F)} leaf-dict becomes {"vals", "idx"(, "b")}.  Stacked
+    (L, K, F) weights pack per layer (vmapped pattern selection).
+
+    With ``pspecs`` given (a matching tree of PartitionSpecs), returns
+    (packed_params, packed_pspecs) transformed consistently: vals keep
+    w's spec, idx drops the feature axis.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def name_of(path):
+        return "/".join(str(getattr(k, "key", k)) for k in path)
+
+    def walk(node, spec_node, path):
+        if isinstance(node, dict) and "w" in node:
+            w = node["w"]
+            name = name_of(path)
+            lshape = tuple(w.shape[-2:])
+            if serve_packable(name, lshape, cfg):
+                pack = lambda ww: shared_ff_pack(ww, cfg)  # noqa: E731
+                for _ in range(w.ndim - 2):
+                    pack = jax.vmap(pack)
+                if isinstance(w, jax.ShapeDtypeStruct):
+                    vals, idx = jax.eval_shape(pack, w)  # abstract tree
+                else:
+                    vals, idx = pack(w)
+                new = {"vals": vals, "idx": idx}
+                if "b" in node:
+                    new["b"] = node["b"]
+                if spec_node is None:
+                    return new, None
+                w_spec = spec_node["w"]
+                idx_spec = P(*w_spec[:-1]) if len(w_spec) else P()
+                new_spec = {"vals": w_spec, "idx": idx_spec}
+                if "b" in node:
+                    new_spec["b"] = spec_node["b"]
+                return new, new_spec
+            return node, spec_node
+        if isinstance(node, dict):
+            out_p, out_s = {}, {}
+            for key, sub in node.items():
+                sp = spec_node[key] if spec_node is not None else None
+                out_p[key], s = walk(sub, sp, path + (key,))
+                if spec_node is not None:
+                    out_s[key] = s
+            return out_p, (out_s if spec_node is not None else None)
+        return node, spec_node
+
+    packed, packed_specs = walk(params, pspecs, ())
+    return (packed, packed_specs) if pspecs is not None else packed
+
+
+# ---------------------------------------------------------------------------
+# Pruning eligibility — the paper's layer-exclusion policy
+# ---------------------------------------------------------------------------
+
+
+def ff_group_axis(shape) -> int:
+    """FF-pass N:M group axis (input features) for a weight of this rank.
+
+    (K, F) -> 0; conv HWIO (H, W, I, O) -> 2; stacked-layer (L, K, F) and
+    MoE (L, E, K, F) -> rank-2 (the contraction axis in both cases).
+    """
+    if len(shape) == 2:
+        return 0
+    if len(shape) == 3:
+        return 1
+    return len(shape) - 2
+
+
+def bp_group_axis(shape) -> int:
+    """BP-pass group axis (output features): always the last axis."""
+    return len(shape) - 1
+
+
+def should_prune(name: str, shape, cfg: SparsityConfig) -> bool:
+    """Paper policy: prune all conv/linear weights except the first conv
+    layer (accuracy-sensitive, few input channels); here extended with
+    excluded-name fragments (embeddings, routers, norms, frontends) and a
+    divisibility check on every axis the method groups along (BDWP needs
+    both the FF/input and BP/output axes to tile into M-groups)."""
+    if cfg.is_dense:
+        return False
+    if len(shape) < 2:
+        return False
+    for frag in cfg.excluded:
+        if re.search(frag, name):
+            return False
+    axes = []
+    if cfg.prunes_ff_weights():
+        axes.append(ff_group_axis(shape))
+    if cfg.prunes_bp_weights() or cfg.prunes_bp_grads():
+        axes.append(bp_group_axis(shape))  # SDGP groups grads along F
+    if not axes:
+        axes.append(ff_group_axis(shape))
+    return all(shape[a] % cfg.m == 0 and shape[a] >= 2 * cfg.m
+               for a in axes)
+
+
+def pick_cfg(name: str, shape, cfg: SparsityConfig) -> SparsityConfig:
+    """Per-parameter effective config (dense fallback when excluded)."""
+    from repro.core.sparsity import DENSE
+
+    return cfg if should_prune(name, shape, cfg) else DENSE
+
+
+# ---------------------------------------------------------------------------
+# Training-FLOP accounting (Table II's Train FLOPS column)
+# ---------------------------------------------------------------------------
+
+
+def train_macs_per_matmul(b: int, k: int, f: int, cfg: SparsityConfig) -> dict:
+    """MACs of the three training matmuls for one (B,K)x(K,F) layer."""
+    dense = b * k * f
+    frac = cfg.keep_fraction if not cfg.is_dense else 1.0
+    ff = dense * (frac if cfg.prunes_ff_weights() else 1.0)
+    bp = dense * (frac if (cfg.prunes_bp_weights() or cfg.prunes_bp_grads()) else 1.0)
+    wu = dense  # always dense in all five methods
+    return {"ff": ff, "bp": bp, "wu": wu, "total": ff + bp + wu,
+            "dense_total": 3 * dense}

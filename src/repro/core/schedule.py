@@ -1,0 +1,229 @@
+"""Offline dataflow scheduling — the RWG (reconfiguration word generator)
+analogue (paper Fig. 12).
+
+The paper's RWG walks the model once, ahead of time, and emits per-layer
+"configuration words": for each of the three training stages (FF/BP/WU)
+it decides (a) sparse vs dense execution, (b) where the N:M packing runs
+(pre-generated in WU vs inline in FF/BP), and (c) the WS-vs-OS systolic
+dataflow, chosen by predicted utilization of the 32x32 PE array.
+
+On TPU the same decisions exist, relocated:
+  (a) sparse-vs-dense per stage   -> resolved at trace time from the
+      SparsityConfig + the per-parameter exclusion policy (core/bdwp);
+  (b) packing site                -> the fused optimizer kernel
+      (pre-generation, Fig. 11c) vs inline sparsify in the matmul vjp;
+  (c) WS-vs-OS                    -> which operand a Pallas matmul keeps
+      resident in VMEM across grid steps (the "stationary" operand) and
+      the grid iteration order.  The utilization model below is the
+      MXU-tile analogue of the paper's PE-array occupancy predictor.
+
+Everything here is *static*: a ``plan_model`` call returns a plain-python
+list of LayerPlans, consumed at trace time — zero runtime branching, the
+exact property that lets the FPGA version stream configuration words.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.core import bdwp
+from repro.core.sparsity import SparsityConfig
+
+# MXU-tile geometry used by the utilization predictor (v5e-class).
+TILE = 128          # systolic tile edge (rows == cols on the MXU)
+PIPE_FILL = 128     # cycles to fill/drain the array (paper: array edge)
+
+
+@dataclasses.dataclass(frozen=True)
+class StagePlan:
+    """One stage (ff | bp | wu) of one matmul layer."""
+
+    stage: str            # "ff" | "bp" | "wu"
+    sparse: bool          # N:M sparse execution?
+    pack_site: str        # "pregen" | "inline" | "-" (dense)
+    dataflow: str         # "WS" | "OS" (stationary operand choice)
+    utilization: float    # predicted PE/MXU occupancy in [0, 1]
+    macs: int             # MACs executed (after sparsity skipping)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    name: str             # parameter name (matmul id)
+    b: int                # rows of the activation operand (B*S or B*H*W)
+    k: int                # contraction length
+    f: int                # output features
+    ff: StagePlan
+    bp: StagePlan
+    wu: StagePlan
+
+    @property
+    def total_macs(self) -> int:
+        return self.ff.macs + self.bp.macs + self.wu.macs
+
+    def config_word(self) -> dict:
+        """The RWG output: one serializable word per layer."""
+        return {
+            "layer": self.name,
+            "dims": (self.b, self.k, self.f),
+            "ff": (self.ff.dataflow, "sparse" if self.ff.sparse else "dense",
+                   self.ff.pack_site),
+            "bp": (self.bp.dataflow, "sparse" if self.bp.sparse else "dense",
+                   self.bp.pack_site),
+            "wu": (self.wu.dataflow, "sparse" if self.wu.sparse else "dense",
+                   self.wu.pack_site),
+        }
+
+
+# ---------------------------------------------------------------------------
+# WS / OS utilization prediction (the paper's RWG occupancy model, MXU tiles)
+# ---------------------------------------------------------------------------
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def ws_cycles(b: int, k: int, f: int) -> int:
+    """Weight-stationary: the (K,F) operand is preloaded tile-by-tile and
+    the B rows stream through.  Cost per (K,F) tile: preload (TILE) +
+    stream (b) + drain (PIPE_FILL)."""
+    tiles = _ceil_div(k, TILE) * _ceil_div(f, TILE)
+    return tiles * (TILE + b + PIPE_FILL)
+
+
+def os_cycles(b: int, k: int, f: int) -> int:
+    """Output-stationary: each (B,F) tile accumulates over K in place;
+    operands stream in.  Cost per (B,F) tile: k + fill/drain."""
+    tiles = _ceil_div(b, TILE) * _ceil_div(f, TILE)
+    return tiles * (k + PIPE_FILL)
+
+
+def _utilization(macs: int, cycles: int) -> float:
+    peak = TILE * TILE  # MACs per cycle at full occupancy
+    return min(1.0, macs / (cycles * peak)) if cycles else 0.0
+
+
+def pick_dataflow(b: int, k: int, f: int) -> tuple:
+    """Choose the dataflow with the fewer predicted cycles (paper Fig. 12:
+    'RWG calculates the hardware utilization of OS and WS ... and based on
+    predicted results' assigns the dataflow)."""
+    ws, os_ = ws_cycles(b, k, f), os_cycles(b, k, f)
+    macs = b * k * f
+    if ws <= os_:
+        return "WS", _utilization(macs, ws)
+    return "OS", _utilization(macs, os_)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer stage planning
+# ---------------------------------------------------------------------------
+
+
+def plan_layer(name: str, b: int, k: int, f: int,
+               cfg: SparsityConfig) -> LayerPlan:
+    """Plan FF/BP/WU for one matmul  act(B,K) @ W(K,F).
+
+    Stage shapes (im2col'd — Fig. 1c-e):
+      FF : (B,K)  @ (K,F)      contraction K   (sparse if FF-pruned: K·N/M)
+      BP : (B,F)  @ (F,K)      contraction F   (sparse if BP-pruned: F·N/M)
+      WU : (K,B)  @ (B,F)      contraction B   (always dense — Alg. 1)
+    """
+    prune = bdwp.should_prune(name, (k, f), cfg)
+    frac = cfg.keep_fraction
+    ff_sparse = prune and cfg.prunes_ff_weights()
+    bp_sparse = prune and (cfg.prunes_bp_weights() or cfg.prunes_bp_grads())
+
+    # pre-generation (Fig. 11c) applies when the *weights* are what gets
+    # pruned — the optimizer already owns the fresh values at WU time.
+    # SDGP prunes gradients, which only exist inside BP -> inline.
+    pregen_ok = cfg.method in ("srste", "sdwp", "bdwp")
+    pack = "pregen" if pregen_ok else "inline"
+
+    k_ff = int(k * frac) if ff_sparse else k
+    df_ff, u_ff = pick_dataflow(b, k_ff, f)
+    ff = StagePlan("ff", ff_sparse, pack if ff_sparse else "-",
+                   df_ff, u_ff, b * k_ff * f)
+
+    f_bp = int(f * frac) if bp_sparse else f
+    df_bp, u_bp = pick_dataflow(b, f_bp, k)
+    bp = StagePlan("bp", bp_sparse, pack if bp_sparse else "-",
+                   df_bp, u_bp, b * f_bp * k)
+
+    df_wu, u_wu = pick_dataflow(k, b, f)
+    wu = StagePlan("wu", False, "-", df_wu, u_wu, b * k * f)
+
+    return LayerPlan(name, b, k, f, ff, bp, wu)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model planning from a spec tree
+# ---------------------------------------------------------------------------
+
+
+def matmul_dims_of(name: str, shape: tuple, tokens: int) -> Optional[tuple]:
+    """(b, k, f) of the training matmul a parameter participates in, or
+    None for non-matmul params (norms, biases, scalars).
+
+    tokens = B*S for LMs / B*H*W for conv features (im2col rows).
+    Stacked-layer params (L, K, F) contribute L independent matmuls — the
+    caller multiplies; conv HWIO (H, W, I, O) -> k = H*W*I (im2col).
+    """
+    if len(shape) < 2:
+        return None
+    if len(shape) == 2:
+        return (tokens, shape[0], shape[1])
+    if len(shape) == 4 and name.endswith("conv"):
+        h, w, i, o = shape
+        return (tokens, h * w * i, o)
+    # stacked (L, K, F) or (L, E, K, F): per-layer matmul dims
+    return (tokens, shape[-2], shape[-1])
+
+
+def plan_model(named_shapes: dict, tokens: int,
+               cfg: SparsityConfig) -> list:
+    """RWG over a whole model: {param_name: shape} -> [LayerPlan].
+
+    ``named_shapes`` comes from the spec tree the models expose
+    (flattened names with '/' separators, same names the optimizer's
+    exclusion policy sees).
+    """
+    plans = []
+    for name, shape in sorted(named_shapes.items()):
+        dims = matmul_dims_of(name, tuple(shape), tokens)
+        if dims is None:
+            continue
+        b, k, f = dims
+        layers = 1
+        if len(shape) >= 3:  # stacked scan params: L leading
+            layers = int(shape[0]) if not name.endswith("conv") else 1
+        plan = plan_layer(name, b, k, f, cfg)
+        for rep in range(layers):
+            plans.append(plan if layers == 1 else dataclasses.replace(
+                plan, name=f"{name}[{rep}]"))
+    return plans
+
+
+def schedule_summary(plans: list) -> dict:
+    """Aggregate the plan the way the paper reports it: total MACs per
+    stage, dense-equivalent MACs, realized reduction, mean utilization."""
+    tot = {"ff": 0, "bp": 0, "wu": 0}
+    dense = 0
+    util_num = util_den = 0.0
+    for p in plans:
+        tot["ff"] += p.ff.macs
+        tot["bp"] += p.bp.macs
+        tot["wu"] += p.wu.macs
+        dense += 3 * p.b * p.k * p.f
+        for s in (p.ff, p.bp, p.wu):
+            util_num += s.utilization * s.macs
+            util_den += s.macs
+    total = sum(tot.values())
+    return {
+        "macs_ff": tot["ff"], "macs_bp": tot["bp"], "macs_wu": tot["wu"],
+        "macs_total": total, "macs_dense": dense,
+        "reduction": dense / total if total else 1.0,
+        "mean_utilization": util_num / util_den if util_den else 0.0,
+        "n_layers": len(plans),
+    }

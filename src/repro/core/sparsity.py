@@ -1,0 +1,263 @@
+"""N:M fine-grained structured sparsity primitives (pure jnp).
+
+This is the algorithmic substrate of the paper: group the elements of a
+tensor along one axis into consecutive groups of M, keep the N
+largest-magnitude elements per group, zero (or pack away) the rest.
+
+Two granularities:
+  * ``element`` — the paper-faithful pattern: every M-group of every
+    "output column" chooses its own survivors.  On TPU this yields a
+    memory/bandwidth win (compact storage) but no MXU FLOP win.
+  * ``shared``  — beyond-paper, MXU-native: the survivor pattern is shared
+    across a tile of ``tile`` entries of a sibling axis, so the contraction
+    axis can be *gathered and shortened* K -> K*N/M, giving a true FLOP
+    reduction on a rigid systolic array.
+
+All functions are shape-polymorphic, jit-safe and differentiable where it
+makes sense (masking is piecewise constant; gradients flow through the
+kept values only — the straight-through estimator lives in core/bdwp.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """Static description of an N:M sparsity scheme.
+
+    Attributes:
+      n: survivors per group (0 < n <= m).  n == m means dense.
+      m: group size along the grouped axis.
+      method: one of 'dense' | 'srste' | 'sdgp' | 'sdwp' | 'bdwp'.
+        srste: N:M weights in FF only            (Zhou et al., ICLR'21)
+        sdgp : N:M output gradients in BP only   (McDanel et al., ICPR'22)
+        sdwp : N:M weights in BP only            (paper ablation, Fig. 4)
+        bdwp : N:M weights in FF and BP          (the paper's contribution)
+      granularity: 'element' | 'shared' (see module docstring).
+      tile: pattern-sharing tile width for 'shared' granularity.
+      lam: SR-STE sparse-refined regularization strength (lambda_w).
+      excluded: regex fragments of param names excluded from pruning
+        (paper: first conv layer; here also routers/embeddings/norms).
+    """
+
+    n: int = 2
+    m: int = 8
+    method: str = "bdwp"
+    granularity: str = "element"
+    tile: int = 128
+    lam: float = 2e-4
+    excluded: tuple = ("embed", "router", "norm", "frontend", "bias", "head0")
+
+    def __post_init__(self):
+        if not (0 < self.n <= self.m):
+            raise ValueError(f"need 0 < n <= m, got {self.n}:{self.m}")
+        if self.method not in ("dense", "srste", "sdgp", "sdwp", "bdwp"):
+            raise ValueError(f"unknown method {self.method!r}")
+        if self.granularity not in ("element", "shared"):
+            raise ValueError(f"unknown granularity {self.granularity!r}")
+
+    @property
+    def is_dense(self) -> bool:
+        return self.method == "dense" or self.n == self.m
+
+    @property
+    def keep_fraction(self) -> float:
+        return self.n / self.m
+
+    def prunes_ff_weights(self) -> bool:
+        return self.method in ("srste", "bdwp") and not self.is_dense
+
+    def prunes_bp_weights(self) -> bool:
+        return self.method in ("sdwp", "bdwp") and not self.is_dense
+
+    def prunes_bp_grads(self) -> bool:
+        return self.method == "sdgp" and not self.is_dense
+
+
+DENSE = SparsityConfig(method="dense")
+
+
+def _move_axis_last(x: jax.Array, axis: int):
+    axis = axis % x.ndim
+    perm = [i for i in range(x.ndim) if i != axis] + [axis]
+    inv = [perm.index(i) for i in range(x.ndim)]
+    return jnp.transpose(x, perm), inv
+
+
+def nm_mask(x: jax.Array, n: int, m: int, axis: int = -1) -> jax.Array:
+    """Boolean mask keeping the N largest-|x| of each consecutive M along axis.
+
+    Deterministic tie-break: earlier index wins (matches a hardware top-K
+    sorter that only replaces on strict greater-than, like SORE).
+    """
+    if n == m:
+        return jnp.ones_like(x, dtype=bool)
+    xt, inv = _move_axis_last(x, axis)
+    k = xt.shape[-1]
+    if k % m != 0:
+        raise ValueError(f"axis length {k} not divisible by group size {m}")
+    g = xt.reshape(*xt.shape[:-1], k // m, m)
+    score = jnp.abs(g).astype(jnp.float32)
+    # kth-largest value per group = the survival threshold
+    top = jax.lax.top_k(score, n)[0]
+    thresh = top[..., n - 1 : n]
+    # exact tie-break, no epsilon games: keep everything strictly above the
+    # threshold, then fill the remaining quota with the *earliest* entries
+    # that exactly equal it (what a greater-than-only hardware sorter does).
+    greater = score > thresh
+    tie = score == thresh
+    quota = n - greater.sum(axis=-1, keepdims=True)
+    tie_rank = jnp.cumsum(tie.astype(jnp.int32), axis=-1)
+    mask = greater | (tie & (tie_rank <= quota))
+    mask = mask.reshape(*xt.shape[:-1], k)
+    return jnp.transpose(mask, inv)
+
+
+def nm_mask_shared(
+    x: jax.Array, n: int, m: int, axis: int, share_axis: int, tile: int
+) -> jax.Array:
+    """Mask with the N:M pattern shared across tiles of ``share_axis``.
+
+    The group score is the summed |x| over each tile, so all ``tile``
+    columns of an output tile agree on which K-slots survive — allowing a
+    reduced-K gathered matmul on the MXU (true FLOP saving).
+    """
+    if n == m:
+        return jnp.ones_like(x, dtype=bool)
+    axis = axis % x.ndim
+    share_axis = share_axis % x.ndim
+    if share_axis == axis:
+        raise ValueError("share_axis must differ from group axis")
+    s = x.shape[share_axis]
+    pad = (-s) % tile
+    absx = jnp.abs(x).astype(jnp.float32)
+    if pad:
+        pw = [(0, 0)] * x.ndim
+        pw[share_axis] = (0, pad)
+        absx = jnp.pad(absx, pw)
+    # sum |x| within each tile of share_axis
+    st = absx.shape[share_axis] // tile
+    new_shape = list(absx.shape)
+    new_shape[share_axis : share_axis + 1] = [st, tile]
+    scores = absx.reshape(new_shape).sum(axis=share_axis + 1)
+    # scores now has share_axis replaced by the tile index; group axis may
+    # have shifted if it was after share_axis... it was reshape in place, so
+    # axes after share_axis keep their relative order; compute mask on scores
+    g_axis = axis if axis < share_axis else axis  # same position (tile kept)
+    tile_mask = nm_mask(scores, n, m, axis=g_axis)
+    # broadcast back over the tile
+    tile_mask = jnp.repeat(tile_mask, tile, axis=share_axis)
+    slicer = [slice(None)] * x.ndim
+    slicer[share_axis] = slice(0, s)
+    return tile_mask[tuple(slicer)]
+
+
+def sparsify(
+    x: jax.Array,
+    cfg: SparsityConfig,
+    axis: int = -1,
+    share_axis: Optional[int] = None,
+) -> jax.Array:
+    """x * mask with cfg's N:M pattern along ``axis``."""
+    if cfg.is_dense:
+        return x
+    if cfg.granularity == "shared":
+        if share_axis is None:
+            share_axis = (axis % x.ndim) - 1 if (axis % x.ndim) else x.ndim - 1
+        mask = nm_mask_shared(x, cfg.n, cfg.m, axis, share_axis, cfg.tile)
+    else:
+        mask = nm_mask(x, cfg.n, cfg.m, axis)
+    return jnp.where(mask, x, jnp.zeros_like(x))
+
+
+# ---------------------------------------------------------------------------
+# Compact packed format — the SORE output: (values, indices)
+# ---------------------------------------------------------------------------
+#
+# For a tensor with grouped axis length K (divisible by M), packing keeps the
+# N survivors of each group *in ascending index order* (hardware-friendly,
+# deterministic) producing:
+#     values : same shape but grouped axis length K*N/M
+#     indices: uint8, same shape as values, the within-group offsets (0..M-1)
+# Memory: values N/M of dense + indices ceil(log2 M) bits (stored as uint8
+# here; the Pallas kernels treat them as 4-bit-packable).
+
+
+def nm_pack(x: jax.Array, n: int, m: int, axis: int = -1):
+    """Pack x into N:M compact (values, indices) along ``axis``."""
+    xt, inv = _move_axis_last(x, axis)
+    k = xt.shape[-1]
+    if k % m != 0:
+        raise ValueError(f"axis length {k} not divisible by {m}")
+    g = xt.reshape(*xt.shape[:-1], k // m, m)
+    score = jnp.abs(g).astype(jnp.float32)
+    # lax.top_k is stable: on ties the lower index wins, matching nm_mask
+    _, idx = jax.lax.top_k(score, n)  # (..., G, N) indices into the group
+    idx = jnp.sort(idx, axis=-1)  # ascending order inside the group
+    vals = jnp.take_along_axis(g, idx, axis=-1)
+    vals = vals.reshape(*xt.shape[:-1], (k // m) * n)
+    idx = idx.reshape(*xt.shape[:-1], (k // m) * n).astype(jnp.uint8)
+    # inverse-permute back so the packed axis sits where `axis` was
+    vals = jnp.transpose(vals, inv)
+    idx = jnp.transpose(idx, inv)
+    return vals, idx
+
+
+def nm_unpack_n(values: jax.Array, indices: jax.Array, n: int, m: int, axis: int = -1):
+    """Scatter compact (values, indices) back to dense; axis length *m/n."""
+    vt, inv_perm_src = _move_axis_last(values, axis)
+    it, _ = _move_axis_last(indices, axis)
+    kn = vt.shape[-1]
+    if kn % n != 0:
+        raise ValueError(f"packed axis {kn} not divisible by n={n}")
+    groups = kn // n
+    k = groups * m
+    gv = vt.reshape(*vt.shape[:-1], groups, n)
+    gi = it.reshape(*it.shape[:-1], groups, n).astype(jnp.int32)
+    dense_g = jnp.zeros((*vt.shape[:-1], groups, m), dtype=vt.dtype)
+    dense_g = jnp.put_along_axis(dense_g, gi, gv, axis=-1, inplace=False)
+    dense = dense_g.reshape(*vt.shape[:-1], k)
+    return jnp.transpose(dense, inv_perm_src)
+
+
+# ---------------------------------------------------------------------------
+# SR-STE regularized straight-through update term
+# ---------------------------------------------------------------------------
+
+
+def srste_decay(w: jax.Array, mask: jax.Array, lam: float) -> jax.Array:
+    """SR-STE's sparse-refined term: decay *pruned* weights toward zero.
+
+    The update becomes  g <- g + lam * (1 - mask) * w , pulling dormant
+    weights down so the pattern can still flip when a pruned weight's
+    gradient signal is strong (Zhou et al., ICLR'21 eq. 6).
+    """
+    return jnp.where(mask, jnp.zeros_like(w), w) * lam
+
+
+# ---------------------------------------------------------------------------
+# Introspection helpers used by tests & benchmarks
+# ---------------------------------------------------------------------------
+
+
+def group_nonzeros(x: jax.Array, m: int, axis: int = -1) -> jax.Array:
+    """Number of nonzeros per M-group (for property tests)."""
+    xt, _ = _move_axis_last(x, axis)
+    g = xt.reshape(*xt.shape[:-1], xt.shape[-1] // m, m)
+    return (g != 0).sum(axis=-1)
+
+
+def density(x: jax.Array) -> jax.Array:
+    return (x != 0).mean()
+
+
+def nm_flops_fraction(cfg: SparsityConfig) -> float:
+    """Fraction of dense MACs kept by one N:M-sparsified matmul."""
+    return 1.0 if cfg.is_dense else cfg.n / cfg.m

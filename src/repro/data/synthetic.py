@@ -1,0 +1,122 @@
+"""Deterministic synthetic data pipeline (offline container — no real
+corpora).  Seeded per (run, step, host-shard) so restarts resume the
+exact stream; batches are placed directly under the step's input
+shardings (no host-side gather).
+
+Two generators:
+  * token streams with Zipfian unigram structure + a copy-task signal so
+    LMs have something learnable (loss curves order meaningfully —
+    what the Fig. 4 study needs);
+  * CIFAR-like image batches (class-conditional Gaussian blobs) for the
+    paper's CNN track.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenTaskConfig:
+    vocab: int
+    seq: int
+    batch: int
+    copy_period: int = 16  # every k-th token repeats (learnable structure)
+    zipf_a: float = 1.2
+    seed: int = 0
+
+
+def token_batch(cfg: TokenTaskConfig, step: int):
+    """(tokens, labels) — labels are next-token targets."""
+    rng = np.random.default_rng(np.random.PCG64([cfg.seed, step]))
+    ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
+    probs = ranks ** -cfg.zipf_a
+    probs /= probs.sum()
+    toks = rng.choice(cfg.vocab, size=(cfg.batch, cfg.seq + 1), p=probs)
+    # inject copy structure: position i repeats position i - copy_period
+    for i in range(cfg.copy_period, cfg.seq + 1, cfg.copy_period):
+        toks[:, i] = toks[:, i - cfg.copy_period]
+    toks = toks.astype(np.int32)
+    return toks[:, :-1], toks[:, 1:]
+
+
+def token_stream(cfg: TokenTaskConfig, start_step: int = 0, shardings=None):
+    step = start_step
+    while True:
+        tokens, labels = token_batch(cfg, step)
+        batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+        if shardings is not None:
+            batch = {k: jax.device_put(v, shardings[k])
+                     for k, v in batch.items()}
+        yield step, batch
+        step += 1
+
+
+def lm_stream(vocab: int, batch: int, seq: int, *, shardings=None,
+              seed: int = 0, start: int = 0, prefix: int = 0,
+              d_model: int = 0):
+    """Workload-shaped LM stream: (step, {tokens, labels[,prefix_embeds]}).
+
+    prefix > 0 adds stub-frontend embeddings (vlm/audio prefix tokens).
+    """
+    cfg = TokenTaskConfig(vocab=vocab, seq=seq, batch=batch, seed=seed)
+    step = start
+    while True:
+        tokens, labels = token_batch(cfg, step)
+        batch_d = {"tokens": jnp.asarray(tokens),
+                   "labels": jnp.asarray(labels)}
+        if prefix:
+            rng = np.random.default_rng(np.random.PCG64([seed + 7, step]))
+            batch_d["prefix_embeds"] = jnp.asarray(
+                rng.normal(size=(batch, prefix, d_model)).astype(np.float32),
+                dtype=jnp.bfloat16)
+        if shardings is not None:
+            batch_d = {k: jax.device_put(v, shardings[k])
+                       for k, v in batch_d.items() if k in shardings}
+        yield step, batch_d
+        step += 1
+
+
+def encdec_stream(vocab: int, batch: int, seq: int, d_model: int, *,
+                  enc_frames: int = 128, shardings=None, seed: int = 0,
+                  start: int = 0):
+    """Whisper-style stream: stub frame embeddings + target tokens."""
+    cfg = TokenTaskConfig(vocab=vocab, seq=seq, batch=batch, seed=seed)
+    step = start
+    while True:
+        tokens, labels = token_batch(cfg, step)
+        rng = np.random.default_rng(np.random.PCG64([seed + 11, step]))
+        frames = rng.normal(size=(batch, enc_frames, d_model))
+        batch_d = {"frames": jnp.asarray(frames.astype(np.float32),
+                                         dtype=jnp.bfloat16),
+                   "tokens": jnp.asarray(tokens),
+                   "labels": jnp.asarray(labels)}
+        if shardings is not None:
+            batch_d = {k: jax.device_put(v, shardings[k])
+                       for k, v in batch_d.items() if k in shardings}
+        yield step, batch_d
+        step += 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ImageTaskConfig:
+    image: int = 32
+    num_classes: int = 10
+    batch: int = 128
+    noise: float = 0.6
+    seed: int = 0
+
+
+def image_batch(cfg: ImageTaskConfig, step: int):
+    """Class-conditional blobs: learnable but non-trivial."""
+    rng = np.random.default_rng(np.random.PCG64([cfg.seed + 1, step]))
+    labels = rng.integers(0, cfg.num_classes, size=(cfg.batch,))
+    proto_rng = np.random.default_rng(np.random.PCG64([cfg.seed + 2]))
+    protos = proto_rng.normal(size=(cfg.num_classes, cfg.image, cfg.image, 3))
+    x = protos[labels] + cfg.noise * rng.normal(
+        size=(cfg.batch, cfg.image, cfg.image, 3))
+    return x.astype(np.float32), labels.astype(np.int32)

@@ -1,0 +1,113 @@
+"""Fused WUVE + SORE pre-generation — Pallas TPU kernel.
+
+The paper's pre-generation dataflow (Fig. 11c): the optimizer's weight
+update is fused with the N:M compaction so the FF/BP stages of the next
+iteration load only compact sparse weights — saving external-memory
+bandwidth and storage whenever sparsity > 50%.
+
+One grid step performs, on a (TR, TK) fp32 master-weight tile:
+
+  mask  = N:M survivor mask of w (SR-STE's sparse-refined target)
+  g_eff = g + wd*w + lam*(1-mask)*w        # SR-STE regularized gradient
+  v'    = mu*v + g_eff                     # momentum (fp32, WUVE lane)
+  w'    = w - lr*v'
+  (vals, idx) = pack_{N:M}(w')             # SORE, fused — bf16 + uint8
+
+lr/mu/wd/lam stream in as (1,1) fp32 scalars so schedules don't retrace.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.nm_compact import _select_topn
+
+
+def _fused_update_kernel(
+    lr_ref, mu_ref, wd_ref, lam_ref,
+    w_ref, g_ref, v_ref,
+    w_out, v_out, vals_out, idx_out,
+    *, n: int, m: int,
+):
+    tr, tk = w_ref.shape
+    w = w_ref[...]
+    grp = w.reshape(tr, tk // m, m)
+    # survivor mask of the *current* weights (pre-update), per SR-STE
+    _, keep_idx = _select_topn(grp, n, m)  # (TR, G, N) ascending
+    pos = jax.lax.broadcasted_iota(jnp.int32, grp.shape, 2)
+    mask = jnp.zeros(grp.shape, jnp.bool_)
+    for j in range(n):
+        mask = mask | (pos == keep_idx[..., j][..., None])
+    mask = mask.reshape(tr, tk)
+
+    lr = lr_ref[0, 0]
+    mu = mu_ref[0, 0]
+    wd = wd_ref[0, 0]
+    lam = lam_ref[0, 0]
+
+    g_eff = g_ref[...] + wd * w + lam * jnp.where(mask, 0.0, w)
+    v_new = mu * v_ref[...] + g_eff
+    w_new = w - lr * v_new
+
+    v_out[...] = v_new
+    w_out[...] = w_new
+
+    # SORE: pack the updated weights along the last axis
+    pv, pi = _select_topn(w_new.reshape(tr, tk // m, m), n, m)
+    vals_out[...] = pv.reshape(tr, tk // m * n).astype(vals_out.dtype)
+    idx_out[...] = pi.reshape(tr, tk // m * n).astype(jnp.uint8)
+
+
+def fused_update_pallas(
+    w: jax.Array,
+    g: jax.Array,
+    v: jax.Array,
+    lr: jax.Array,
+    mu: jax.Array,
+    wd: jax.Array,
+    lam: jax.Array,
+    n: int,
+    m: int,
+    *,
+    block_r: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+):
+    r, k = w.shape
+    block_r = min(block_r, r)
+    block_k = min(block_k, k)
+    assert r % block_r == 0 and k % block_k == 0 and block_k % m == 0
+    kc_blk = block_k // m * n
+    grid = (r // block_r, k // block_k)
+    scal = lambda: pl.BlockSpec(  # noqa: E731
+        (1, 1), lambda i, j: (0, 0), memory_space=pltpu.MemorySpace.SMEM
+    )
+    blk = lambda bk: pl.BlockSpec(  # noqa: E731
+        (block_r, bk), lambda i, j: (i, j), memory_space=pltpu.MemorySpace.VMEM
+    )
+    as2d = lambda s: jnp.asarray(s, jnp.float32).reshape(1, 1)  # noqa: E731
+    return pl.pallas_call(
+        functools.partial(_fused_update_kernel, n=n, m=m),
+        grid=grid,
+        in_specs=[scal(), scal(), scal(), scal(), blk(block_k), blk(block_k), blk(block_k)],
+        out_specs=(blk(block_k), blk(block_k), blk(kc_blk), blk(kc_blk)),
+        out_shape=(
+            jax.ShapeDtypeStruct((r, k), jnp.float32),
+            jax.ShapeDtypeStruct((r, k), jnp.float32),
+            jax.ShapeDtypeStruct((r, k // m * n), jnp.bfloat16),
+            jax.ShapeDtypeStruct((r, k // m * n), jnp.uint8),
+        ),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.PARALLEL,
+            )
+        ),
+        interpret=interpret,
+        name=f"fused_update_{n}_{m}",
+    )(as2d(lr), as2d(mu), as2d(wd), as2d(lam), w, g, v)

@@ -1,0 +1,120 @@
+"""SORE — N:M sparse online reduction engine, as a Pallas TPU kernel.
+
+The paper's SORE is a 32-lane array of top-K sorters that turns a dense
+M-group stream into (top-N values, within-group indices) in M cycles.
+The TPU-native analogue is a VMEM-tiled vector kernel: each grid step
+loads a (TR, TK) tile, selects the N largest-|x| per consecutive-M group
+with a strictly-earlier-index tie-break (exactly what a greater-than-only
+hardware sorter does), and writes the packed (TR, TK*N/M) values and
+uint8 offsets.
+
+Selection is done with N rounds of masked max (no argsort — Mosaic-safe),
+then an N-element index sorting network so survivors appear in ascending
+group offset, matching the ``ref.py``/`nm_pack` layout and the compact
+format of Mishra et al. (the paper's [21]).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -jnp.inf
+
+
+def _select_topn(g: jax.Array, n: int, m: int):
+    """g: (..., G, M) -> (vals (..., G, N), idx (..., G, N)) sorted by idx."""
+    f32 = g.astype(jnp.float32)
+    pos = jax.lax.broadcasted_iota(jnp.int32, g.shape, g.ndim - 1)
+    # ties broken exactly: each round takes the *first* position attaining
+    # the max (j = min position where score == max), so earlier index wins.
+    score = jnp.abs(f32)
+    vals, idxs = [], []
+    remaining = score
+    for _ in range(n):
+        mx = jnp.max(remaining, axis=-1, keepdims=True)
+        hit = remaining == mx
+        # first position attaining the max
+        j = jnp.min(jnp.where(hit, pos, m), axis=-1, keepdims=True)
+        sel = pos == j
+        vals.append(jnp.sum(jnp.where(sel, g, 0), axis=-1))
+        idxs.append(j[..., 0])
+        remaining = jnp.where(sel, _NEG, remaining)
+    # sort the n (val, idx) pairs ascending by idx — O(n^2) network, n tiny
+    for a in range(n):
+        for b in range(a + 1, n):
+            swap = idxs[a] > idxs[b]
+            ia, ib = idxs[a], idxs[b]
+            va, vb = vals[a], vals[b]
+            idxs[a] = jnp.where(swap, ib, ia)
+            idxs[b] = jnp.where(swap, ia, ib)
+            vals[a] = jnp.where(swap, vb, va)
+            vals[b] = jnp.where(swap, va, vb)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def _compact_kernel(x_ref, vals_ref, idx_ref, *, n: int, m: int):
+    tr, tk = x_ref.shape
+    g = x_ref[...].reshape(tr, tk // m, m)
+    v, i = _select_topn(g, n, m)
+    vals_ref[...] = v.reshape(tr, (tk // m) * n).astype(vals_ref.dtype)
+    idx_ref[...] = i.reshape(tr, (tk // m) * n).astype(jnp.uint8)
+
+
+def nm_compact_pallas(
+    x: jax.Array,
+    n: int,
+    m: int,
+    *,
+    block_r: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+):
+    """Pack (R, K) -> values (R, K*n/m), idx uint8 along the last axis."""
+    r, k = x.shape
+    block_r = min(block_r, r)
+    block_k = min(block_k, k)
+    assert k % m == 0 and block_k % m == 0, (k, block_k, m)
+    assert r % block_r == 0 and k % block_k == 0, (r, k, block_r, block_k)
+    kc_blk = block_k // m * n
+    grid = (r // block_r, k // block_k)
+    out_shape = (
+        jax.ShapeDtypeStruct((r, k // m * n), x.dtype),
+        jax.ShapeDtypeStruct((r, k // m * n), jnp.uint8),
+    )
+    return pl.pallas_call(
+        functools.partial(_compact_kernel, n=n, m=m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (block_r, block_k),
+                lambda i, j: (i, j),
+                memory_space=pltpu.MemorySpace.VMEM,
+            )
+        ],
+        out_specs=(
+            pl.BlockSpec(
+                (block_r, kc_blk),
+                lambda i, j: (i, j),
+                memory_space=pltpu.MemorySpace.VMEM,
+            ),
+            pl.BlockSpec(
+                (block_r, kc_blk),
+                lambda i, j: (i, j),
+                memory_space=pltpu.MemorySpace.VMEM,
+            ),
+        ),
+        out_shape=out_shape,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.PARALLEL,
+            )
+        ),
+        interpret=interpret,
+        name=f"nm_compact_{n}_{m}",
+    )(x)

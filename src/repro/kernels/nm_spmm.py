@@ -1,0 +1,134 @@
+"""Element-mode N:M sparse x dense matmul — Pallas TPU kernel.
+
+Semantics: ``out = act @ unpack(vals, idx)`` where the weight matrix is
+stored in the compact N:M format (values K*N/M of dense, uint8 group
+offsets), pattern chosen independently per output column — the paper's
+faithful sparsity granularity.
+
+TPU adaptation (see DESIGN.md §2): the MXU cannot skip individual MACs,
+so the win here is *memory*: HBM->VMEM weight traffic is N/M of dense
+(+1 byte/val of index), which is the dominant term in decode/serving and
+in the BP pass of training.  Each grid step:
+
+  1. streams a compact (TKc, TF) value tile + its offsets into VMEM,
+  2. decompresses to a dense (TK, TF) tile entirely in VMEM
+     (M-way select against the offset plane — no gather needed),
+  3. feeds the MXU a dense (TB, TK) x (TK, TF) partial matmul,
+  4. accumulates over the K grid axis in an fp32 VMEM tile.
+
+The decompression is O(TK*TF) vector work vs O(TB*TK*TF) MXU work, so it
+pipelines away for TB >= 8 (one sublane quantum).
+
+WS/OS note: this grid order keeps the *output* tile stationary in VMEM
+across the contraction axis (OS dataflow); the weight tile is re-streamed
+— the right choice when weights are compact (small) and outputs are fp32
+(large).  The paper's WS mode corresponds to swapping the grid so the
+decompressed weight tile persists; XLA's emitted loop structure makes OS
+the profitable one on TPU, which we record as a dataflow adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _decompress(vals, idx, n: int, m: int):
+    """(TKc, TF) packed -> (TK, TF) dense, TK = TKc*m/n.
+
+    dense[g*m + s, f] = sum_j vals[g*n + j, f] * (idx[g*n + j, f] == s)
+    Unrolled over the m slot positions: all ops are rank-3 selects/adds.
+    """
+    tkc, tf = vals.shape
+    g = tkc // n
+    v = vals.reshape(g, n, tf)
+    i = idx.reshape(g, n, tf)
+    slots = []
+    for s in range(m):
+        hit = (i == s)
+        slots.append(jnp.sum(jnp.where(hit, v, 0), axis=1))  # (G, TF)
+    dense = jnp.stack(slots, axis=1)  # (G, M, TF)
+    return dense.reshape(g * m, tf)
+
+
+def _spmm_kernel(act_ref, vals_ref, idx_ref, out_ref, *, n: int, m: int, nk: int):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w_dense = _decompress(vals_ref[...], idx_ref[...], n, m)
+    acc = jnp.dot(
+        act_ref[...],
+        w_dense.astype(act_ref.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[...] += acc
+
+
+def nm_spmm_pallas(
+    act: jax.Array,
+    vals: jax.Array,
+    idx: jax.Array,
+    n: int,
+    m: int,
+    *,
+    block_b: int = 128,
+    block_f: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+):
+    """act (B, K) @ packed weights (Kc=K*n/m, F) -> (B, F) fp32."""
+    b, k = act.shape
+    kc, f = vals.shape
+    assert kc * m == k * n, (k, kc, n, m)
+    assert idx.shape == vals.shape
+    block_b = min(block_b, b)
+    block_f = min(block_f, f)
+    block_k = min(block_k, k)
+    assert b % block_b == 0 and f % block_f == 0 and k % block_k == 0
+    assert block_k % m == 0
+    block_kc = block_k // m * n
+    nk = k // block_k
+    grid = (b // block_b, f // block_f, nk)
+    return pl.pallas_call(
+        functools.partial(_spmm_kernel, n=n, m=m, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (block_b, block_k),
+                lambda i, j, kk: (i, kk),
+                memory_space=pltpu.MemorySpace.VMEM,
+            ),
+            pl.BlockSpec(
+                (block_kc, block_f),
+                lambda i, j, kk: (kk, j),
+                memory_space=pltpu.MemorySpace.VMEM,
+            ),
+            pl.BlockSpec(
+                (block_kc, block_f),
+                lambda i, j, kk: (kk, j),
+                memory_space=pltpu.MemorySpace.VMEM,
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (block_b, block_f),
+            lambda i, j, kk: (i, j),
+            memory_space=pltpu.MemorySpace.VMEM,
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, f), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.ARBITRARY,
+            )
+        ),
+        interpret=interpret,
+        name=f"nm_spmm_{n}_{m}",
+    )(act, vals, idx)

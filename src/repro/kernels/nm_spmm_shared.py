@@ -1,0 +1,90 @@
+"""Shared-pattern N:M reduced-K matmul — the MXU-native FLOP-saving mode.
+
+Beyond-paper TPU adaptation (DESIGN.md §2): when the N:M survivor pattern
+is shared across a 128-wide tile of output columns, the contraction axis
+itself can be *gathered and shortened*: instead of decompressing weights
+to dense K, we gather the N/M surviving activation columns once per
+output tile and contract over Kc = K*N/M.  The MXU then executes N/M of
+the dense FLOPs — this recovers on a rigid systolic array the compute
+saving that the paper's value-serial USPE achieves per-element on FPGA.
+
+Layout:
+  act : (B, K) dense
+  vals: (nf, Kc, TF)  per-output-tile packed weights
+  rows: (nf, Kc) int32 absolute K indices of the survivors (ascending)
+  out : (B, nf*TF) fp32
+
+Grid is (B tiles, F tiles); the full K row-panel of activations for a B
+tile is held in VMEM (bounded by ops.py; falls back to the oracle when it
+would not fit) and the gather is a one-shot ``jnp.take`` along lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmm_shared_kernel(act_ref, vals_ref, rows_ref, out_ref):
+    rows = rows_ref[0, :]  # (Kc,) int32, ascending within each M-group
+    act_g = jnp.take(act_ref[...], rows, axis=1)  # (TB, Kc)
+    out_ref[...] = jnp.dot(
+        act_g,
+        vals_ref[0].astype(act_ref.dtype),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def nm_spmm_shared_pallas(
+    act: jax.Array,
+    vals: jax.Array,
+    rows: jax.Array,
+    *,
+    block_b: int = 128,
+    interpret: bool = False,
+):
+    b, k = act.shape
+    nf, kc, tf = vals.shape
+    assert rows.shape == (nf, kc)
+    block_b = min(block_b, b)
+    assert b % block_b == 0
+    grid = (b // block_b, nf)
+    return pl.pallas_call(
+        _spmm_shared_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (block_b, k),
+                lambda i, j: (i, 0),
+                memory_space=pltpu.MemorySpace.VMEM,
+            ),
+            pl.BlockSpec(
+                (1, kc, tf),
+                lambda i, j: (j, 0, 0),
+                memory_space=pltpu.MemorySpace.VMEM,
+            ),
+            pl.BlockSpec(
+                (1, kc),
+                lambda i, j: (j, 0),
+                memory_space=pltpu.MemorySpace.VMEM,
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (block_b, tf),
+            lambda i, j: (i, j),
+            memory_space=pltpu.MemorySpace.VMEM,
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, nf * tf), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.PARALLEL,
+            )
+        ),
+        interpret=interpret,
+        name="nm_spmm_shared",
+    )(act, vals, rows)

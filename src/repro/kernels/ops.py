@@ -1,0 +1,144 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On TPU the kernels run compiled; on CPU (this container) they run in
+``interpret=True`` mode, which executes the kernel body op-by-op and is
+what the test-suite validates against the ``ref.py`` oracles.
+
+``use_pallas=False`` (the default for model code, the dry-run and the
+benchmarks) routes to the oracle implementations — XLA fuses them well
+and keeps the lowered HLO clean for roofline accounting.  The kernels are
+the TPU deployment path; both paths share the exact same semantics, which
+the per-kernel allclose sweeps in tests/test_kernels.py enforce.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparsity as S
+from repro.kernels import ref
+from repro.kernels.fused_update import fused_update_pallas
+from repro.kernels.nm_compact import nm_compact_pallas
+from repro.kernels.nm_spmm import nm_spmm_pallas
+from repro.kernels.nm_spmm_shared import nm_spmm_shared_pallas
+
+# VMEM budget used by the shared-mode act-panel residency check (bytes).
+_VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m", "use_pallas"))
+def nm_compact(x: jax.Array, n: int, m: int, use_pallas: bool = True):
+    """SORE: pack along the last axis -> (values, uint8 indices)."""
+    if not use_pallas:
+        return ref.ref_nm_compact(x, n, m)
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    r, k = x2.shape
+    br = _pick_block(r, (256, 128, 64, 32, 16, 8, 4, 2, 1))
+    bk = _pick_block(k, (512, 256, 128, 64, 32, 16, 8), multiple_of=m)
+    v, i = nm_compact_pallas(x2, n, m, block_r=br, block_k=bk, interpret=_interpret())
+    kc = k // m * n
+    return v.reshape(*shape[:-1], kc), i.reshape(*shape[:-1], kc)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m", "use_pallas"))
+def nm_spmm(act, vals, idx, n: int, m: int, use_pallas: bool = True):
+    """Element-mode sparse matmul: (B,K) @ packed(Kc,F) -> (B,F) fp32."""
+    if not use_pallas:
+        return ref.ref_nm_spmm(act, vals, idx, n, m)
+    b, k = act.shape
+    _, f = vals.shape
+    bb = _pick_block(b, (128, 64, 32, 16, 8, 4, 2, 1))
+    bf = _pick_block(f, (128, 64, 32, 16, 8))
+    bk = _pick_block(k, (512, 256, 128, 64, 32, 16, 8), multiple_of=m)
+    return nm_spmm_pallas(
+        act, vals, idx, n, m, block_b=bb, block_f=bf, block_k=bk,
+        interpret=_interpret(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def nm_spmm_shared(act, vals, rows, use_pallas: bool = True):
+    """Shared-pattern reduced-K matmul: true N/M FLOP saving on the MXU."""
+    b, k = act.shape
+    bb = _pick_block(b, (128, 64, 32, 16, 8, 4, 2, 1))
+    panel_bytes = bb * k * act.dtype.itemsize
+    if not use_pallas or panel_bytes > _VMEM_BUDGET:
+        return ref.ref_nm_spmm_shared(act, vals, rows)
+    return nm_spmm_shared_pallas(act, vals, rows, block_b=bb, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m", "use_pallas"))
+def fused_update(w, g, v, lr, mu, wd, lam, n: int, m: int, use_pallas: bool = True):
+    """Momentum-SGD + SR-STE decay + N:M pre-generation, fused."""
+    if not use_pallas:
+        return ref.ref_fused_update(w, g, v, lr=lr, mu=mu, wd=wd, lam=lam, n=n, m=m)
+    shape = w.shape
+    w2 = w.reshape(-1, shape[-1])
+    g2 = g.reshape(-1, shape[-1]).astype(jnp.float32)
+    v2 = v.reshape(-1, shape[-1])
+    r, k = w2.shape
+    br = _pick_block(r, (256, 128, 64, 32, 16, 8, 4, 2, 1))
+    bk = _pick_block(k, (512, 256, 128, 64, 32, 16, 8), multiple_of=m)
+    nw, nv, vals, idx = fused_update_pallas(
+        w2, g2, v2, lr, mu, wd, lam, n, m, block_r=br, block_k=bk,
+        interpret=_interpret(),
+    )
+    kc = k // m * n
+    return (
+        nw.reshape(shape),
+        nv.reshape(shape),
+        vals.reshape(*shape[:-1], kc),
+        idx.reshape(*shape[:-1], kc),
+    )
+
+
+def pack_shared(w: jax.Array, n: int, m: int, tile: int = 128):
+    """Host-side packer for the shared mode: (K,F) -> (nf, Kc, TF), rows.
+
+    Pattern is chosen per F-tile by summed |w| over the tile (the same
+    scoring the shared-granularity mask in core/sparsity uses), so the
+    kernel and ``sparsify(granularity='shared')`` agree exactly.
+    """
+    k, f = w.shape
+    assert f % tile == 0 and k % m == 0
+    nf = f // tile
+    wt = w.reshape(k, nf, tile)
+    score = jnp.abs(wt).astype(jnp.float32).sum(-1)  # (K, nf)
+    gsc = score.reshape(k // m, m, nf)
+    mask = S.nm_mask(gsc.transpose(2, 0, 1).reshape(nf, -1), n, m, axis=-1)
+    mask = mask.reshape(nf, k // m, m)
+    # rows: absolute K index of each survivor, ascending
+    _, gidx = jax.lax.top_k(
+        jnp.where(mask, 1.0, 0.0)
+        - jnp.arange(m, dtype=jnp.float32)[None, None, :] * 1e-3,
+        n,
+    )
+    gidx = jnp.sort(gidx, axis=-1)  # (nf, K/m, n)
+    base = (jnp.arange(k // m) * m)[None, :, None]
+    rows = (gidx + base).reshape(nf, -1).astype(jnp.int32)  # (nf, Kc)
+    vals = jax.vmap(lambda r, wti: jnp.take(wti, r, axis=0), in_axes=(0, 1))(
+        rows, wt
+    )  # (nf, Kc, tile)
+    return vals, rows
+
+
+def packed_bytes(k: int, f: int, n: int, m: int, dtype_bytes: int = 2,
+                 idx_bits: int = 8) -> int:
+    """HBM footprint of an element-mode packed (K,F) weight."""
+    kc = k // m * n
+    return kc * f * dtype_bytes + kc * f * idx_bits // 8
+
+
+def _pick_block(dim: int, candidates, multiple_of: int = 1) -> int:
+    for c in candidates:
+        if c % multiple_of == 0 and dim % c == 0 and c <= dim:
+            return c
+    return dim

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``ref_*`` function defines the exact semantics the corresponding
+kernel must match (tests assert allclose across shape/dtype sweeps).
+These are also the implementations used on non-TPU backends and inside
+the multi-pod dry-run (XLA fuses them well, and they keep the lowered
+HLO clean for roofline accounting).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparsity as S
+
+
+def ref_nm_compact(x: jax.Array, n: int, m: int):
+    """SORE oracle: pack x N:M along the last axis -> (values, indices)."""
+    return S.nm_pack(x, n, m, axis=-1)
+
+
+def ref_nm_spmm(act: jax.Array, vals: jax.Array, idx: jax.Array, n: int, m: int):
+    """Element-mode N:M sparse matmul oracle.
+
+    act:  (B, K) dense activations
+    vals: (Kc, F) packed weight values, Kc = K*n/m, pattern along K per column
+    idx:  (Kc, F) uint8 within-group offsets
+    out:  (B, F) fp32
+    """
+    w = S.nm_unpack_n(vals, idx, n, m, axis=0)
+    return jnp.dot(act, w.astype(act.dtype), preferred_element_type=jnp.float32)
+
+
+def ref_nm_spmm_shared(act: jax.Array, vals: jax.Array, rows: jax.Array):
+    """Shared-pattern reduced-K matmul oracle.
+
+    act:  (B, K)
+    vals: (nf_tiles, Kc, TF) per-output-tile packed weights
+    rows: (nf_tiles, Kc) int32 absolute K-row of each packed slot
+    out:  (B, nf_tiles*TF) fp32
+    """
+    def per_tile(v, r):
+        a = jnp.take(act, r, axis=1)  # (B, Kc)
+        return jnp.dot(a, v.astype(act.dtype), preferred_element_type=jnp.float32)
+
+    outs = jax.vmap(per_tile, in_axes=(0, 0), out_axes=1)(vals, rows)
+    return outs.reshape(act.shape[0], -1)
+
+
+def ref_fused_update(
+    w: jax.Array,
+    g: jax.Array,
+    v: jax.Array,
+    *,
+    lr: float,
+    mu: float,
+    wd: float,
+    lam: float,
+    n: int,
+    m: int,
+):
+    """WUVE + SORE pre-generation oracle (momentum SGD, fp32 master).
+
+    Returns (new_w fp32, new_v fp32, wff_vals bf16, wff_idx uint8) where the
+    packed pair is the N:M compaction of the *updated* weights along the
+    last axis (the FF contraction axis) — the paper's pre-generation
+    dataflow: FF never reloads dense weights.
+    """
+    mask = S.nm_mask(w, n, m, axis=-1)
+    g_eff = g + wd * w + lam * jnp.where(mask, 0.0, w)
+    new_v = mu * v + g_eff
+    new_w = w - lr * new_v
+    vals, idx = S.nm_pack(new_w, n, m, axis=-1)
+    return new_w, new_v, vals.astype(jnp.bfloat16), idx

@@ -1,0 +1,299 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape) cell, build the real train/serve
+step with its resolved shardings, ``.lower().compile()`` it against the
+production mesh — single-pod (16x16 = 256 chips) and multi-pod
+(2x16x16 = 512 chips) — with ShapeDtypeStruct stand-ins (zero device
+allocation), then extract:
+
+  * ``compiled.memory_analysis()``  — proves the cell fits per-chip HBM,
+  * ``compiled.cost_analysis()``    — HLO FLOPs / bytes for the roofline,
+  * the optimized HLO's collective ops (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute) — summed into
+    per-chip link-byte traffic for the collective roofline term.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+  python -m repro.launch.dryrun --all --out results/dryrun
+Failures (sharding mismatch, OOM at compile, unsupported collective)
+are bugs in the system — the process exits nonzero.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_arch, lm_input_specs
+from repro.core.sparsity import SparsityConfig
+from repro.launch import hlo_cost
+from repro.launch import mesh as M
+from repro.optim import sgd
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+
+def roofline_terms(cost: dict, coll: dict) -> dict:
+    """Three terms in seconds (per chip: SPMD cost_analysis is the
+    per-device partitioned program)."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    t_c = flops / M.PEAK_FLOPS
+    t_m = byts / M.HBM_BW
+    t_x = coll["total"] / M.ICI_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    bound = max(t_c, t_m, t_x)
+    return {"t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+            "dominant": dom,
+            "roofline_frac": (t_c / bound if bound else 0.0),
+            "hlo_flops": flops, "hlo_bytes": byts}
+
+
+def model_flops(arch, shape, chips: int) -> float:
+    """Useful-work FLOPs per chip per step: 6·N_active·D (train) or
+    2·N_active·D (serve fwd), D = tokens processed this step."""
+    cfg = arch.full
+    n_act = (cfg.n_active_params() if hasattr(cfg, "n_active_params")
+             else cfg.n_params())
+    if shape.kind == "train":
+        d = shape.batch * shape.seq
+        mult = 6.0
+    elif shape.kind == "prefill":
+        d = shape.batch * shape.seq
+        mult = 2.0
+    else:  # decode: one new token per sequence
+        d = shape.batch
+        mult = 2.0
+    return mult * n_act * d / chips
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+
+def lower_cell(arch, shape, mesh, sp_cfg: SparsityConfig, *,
+               seq_parallel: bool = False, packed_serve: bool = False,
+               compress: bool = False):
+    """Build + lower one cell; returns the Lowered object.
+
+    seq_parallel: sequence-parallel activations (train cells).
+    packed_serve: shared-mode reduced-K packed weights (serve cells).
+    """
+    from repro.models import encdec as E
+    from repro.models import transformer_lm as T
+    from repro.train import step as ST
+
+    cfg = arch.full
+    opt_cfg = sgd.SGDConfig()
+    specs = lm_input_specs(arch, shape)
+
+    def f32s(tree):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), tree)
+
+    def bf16s(tree):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16), tree)
+
+    if shape.kind == "train":
+        if arch.family == "encdec":
+            bundle = ST.build_encdec_train(cfg, mesh, sp_cfg, opt_cfg,
+                                           donate=False)
+            params, _ = E.init(jax.random.PRNGKey(0), cfg, abstract=True)
+        else:
+            use_c = compress and "pod" in mesh.axis_names
+            bundle = ST.build_lm_train(cfg, mesh, sp_cfg, opt_cfg,
+                                       donate=False,
+                                       seq_parallel=seq_parallel,
+                                       compress=use_c)
+            params, _ = T.init(jax.random.PRNGKey(0), cfg, abstract=True)
+        state = {"master": f32s(params), "momentum": f32s(params),
+                 "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        if shape.kind == "train" and arch.family != "encdec" and \
+                compress and "pod" in mesh.axis_names:
+            state["err"] = f32s(params)
+        return bundle.step_fn.lower(state, specs)
+
+    long_ctx = shape.shape_id == "long_500k"
+    if arch.family == "encdec":
+        params, _ = E.init(jax.random.PRNGKey(0), cfg, abstract=True)
+        params = bf16s(params)
+        if shape.kind == "prefill":
+            bundle = ST.build_encdec_serve(cfg, mesh, sp_cfg, specs,
+                                           prefill=True)
+            return bundle.step_fn.lower(params, specs)
+        bundle = ST.build_encdec_serve(cfg, mesh, sp_cfg, specs)
+        return bundle.step_fn.lower(params, specs["cache"],
+                                    specs["enc_out"], specs["token"],
+                                    specs["pos"])
+    from repro.core import bdwp as B
+
+    params, _ = T.init(jax.random.PRNGKey(0), cfg, abstract=True)
+    params = bf16s(params)
+    if packed_serve:
+        params = B.pack_tree_shared(params, sp_cfg)
+    if shape.kind == "prefill":
+        bundle = ST.build_lm_serve(cfg, mesh, sp_cfg, specs,
+                                   long_context=long_ctx, prefill=True,
+                                   packed=packed_serve)
+        return bundle.step_fn.lower(params, specs)
+    bundle = ST.build_lm_serve(cfg, mesh, sp_cfg, specs,
+                               long_context=long_ctx, packed=packed_serve)
+    return bundle.step_fn.lower(params, specs["cache"], specs["token"],
+                                specs["pos"])
+
+
+def run_cell(arch_id: str, shape_id: str, *, multi_pod: bool,
+             sp_cfg: SparsityConfig, verbose: bool = True,
+             seq_parallel: bool = False, packed_serve: bool = False,
+             compress: bool = False) -> dict:
+    arch = get_arch(arch_id)
+    shape = SHAPES[shape_id]
+    rec = {"arch": arch_id, "shape": shape_id,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "method": sp_cfg.method, "nm": f"{sp_cfg.n}:{sp_cfg.m}",
+           "granularity": sp_cfg.granularity}
+    if not arch.supports(shape_id):
+        rec.update(status="skip", reason=arch.skip_reason(shape_id))
+        return rec
+    mesh = M.make_production_mesh(multi_pod=multi_pod)
+    chips = M.mesh_chips(mesh)
+    t0 = time.perf_counter()
+    lowered = lower_cell(arch, shape, mesh, sp_cfg,
+                         seq_parallel=seq_parallel,
+                         packed_serve=packed_serve, compress=compress)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+
+    xla_cost = compiled.cost_analysis()
+    if isinstance(xla_cost, (list, tuple)):
+        xla_cost = xla_cost[0]
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception:  # CPU backend may not implement it
+        mem_rec = {}
+    # structural analysis with while-body trip expansion (hlo_cost.py) —
+    # XLA's cost_analysis counts scan bodies once and would be ~n_layers off
+    analysis = hlo_cost.analyze(compiled.as_text())
+    coll = analysis["collectives"]
+    terms = roofline_terms({"flops": analysis["flops"],
+                            "bytes accessed": analysis["bytes"]}, coll)
+    mf = model_flops(arch, shape, chips)
+    rec.update(
+        status="ok", chips=chips,
+        lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+        memory=mem_rec, collectives=coll, **terms,
+        model_flops=mf,
+        useful_ratio=(mf / terms["hlo_flops"] if terms["hlo_flops"] else 0.0),
+        xla_cost={"flops": xla_cost.get("flops"),
+                  "bytes": xla_cost.get("bytes accessed")},
+    )
+    if verbose:
+        print(f"[ok] {arch_id:22s} {shape_id:12s} {rec['mesh']:8s} "
+              f"Tc={terms['t_compute']*1e3:9.3f}ms "
+              f"Tm={terms['t_memory']*1e3:9.3f}ms "
+              f"Tx={terms['t_collective']*1e3:9.3f}ms "
+              f"dom={terms['dominant']:10s} "
+              f"useful={rec['useful_ratio']:.2f} "
+              f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)")
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, choices=sorted(ARCHS))
+    ap.add_argument("--shape", default=None, choices=sorted(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) cell")
+    ap.add_argument("--method", default="bdwp",
+                    choices=["dense", "srste", "sdgp", "sdwp", "bdwp"])
+    ap.add_argument("--nm", default="2:8")
+    ap.add_argument("--granularity", default="element",
+                    choices=["element", "shared"])
+    ap.add_argument("--out", default=None, help="JSON output directory")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="sequence-parallel activations (train cells)")
+    ap.add_argument("--packed-serve", action="store_true",
+                    help="shared-mode reduced-K packed weights (serve)")
+    ap.add_argument("--compress", action="store_true",
+                    help="N:M cross-pod gradient compression (multi-pod)")
+    args = ap.parse_args(argv)
+
+    n, m = (int(v) for v in args.nm.split(":"))
+    sp_cfg = SparsityConfig(n=n, m=m, method=args.method,
+                            granularity=args.granularity)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    if args.all:
+        cells = [(a, s) for a in sorted(ARCHS) for s in SHAPES]
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    records, failures = [], []
+    for arch_id, shape_id in cells:
+        for mp in meshes:
+            try:
+                rec = run_cell(arch_id, shape_id, multi_pod=mp,
+                               sp_cfg=sp_cfg,
+                               seq_parallel=args.seq_parallel,
+                               packed_serve=args.packed_serve,
+                               compress=args.compress)
+            except Exception as e:
+                traceback.print_exc()
+                rec = {"arch": arch_id, "shape": shape_id,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "fail", "error": f"{type(e).__name__}: {e}"}
+                failures.append(rec)
+            records.append(rec)
+            if rec["status"] == "skip":
+                print(f"[skip] {arch_id:22s} {shape_id:12s} "
+                      f"{rec['mesh']:8s} {rec['reason']}")
+
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        variant = ("_sp" if args.seq_parallel else "") + \
+            ("_packed" if args.packed_serve else "")
+        suffix = (f"{args.method}_{n}x{m}_{args.granularity}_"
+                  f"{args.mesh}{variant}")
+        path = os.path.join(args.out, f"dryrun_{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {path} ({len(records)} records)")
+
+    ok = sum(r["status"] == "ok" for r in records)
+    sk = sum(r["status"] == "skip" for r in records)
+    print(f"\n{ok} ok, {sk} skip, {len(failures)} fail")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,369 @@
+"""Attention: GQA + RoPE + qk-norm + sliding-window + MLA, train & decode.
+
+Memory-sane by construction: training/prefill attention is chunked with
+an online-softmax accumulator (flash-attention recurrence in pure JAX),
+so lowering 32k-token prefill never materializes an S x S tensor.
+Sliding-window attention is *banded* — a scan over query chunks that
+dynamic-slices only the in-window KV span — so SWA costs O(S*W) FLOPs in
+the compiled HLO, not O(S^2) (this is what makes gemma3/hymba long_500k
+honest).
+
+All projections route through BDWP (core/bdwp) so N:M sparse training
+applies to attention weights exactly as the paper does for ViT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import SparsityConfig
+from repro.models import layers as L
+from repro.sharding.rules import BATCH, act
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    window: Optional[int] = None          # sliding-window width (gemma3 local)
+    # MLA (deepseek-v2): when kv_lora is set, the layer uses compressed KV.
+    kv_lora: Optional[int] = None
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: Optional[int] = None
+    chunk_q: int = 1024
+    chunk_kv: int = 1024
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg: AttnConfig):
+    ks = jax.random.split(key, 8)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    p, s = {}, {}
+    if cfg.kv_lora is None:
+        for i, (name, dout) in enumerate(
+            [("q_proj", h * hd), ("k_proj", kv * hd), ("v_proj", kv * hd)]
+        ):
+            pp, ss = L.dense_init(ks[i], d, dout, axes=("embed", "heads" if name == "q_proj" else "kv"),
+                                  bias=cfg.qkv_bias)
+            p[name], s[name] = pp, ss
+        pp, ss = L.dense_init(ks[3], h * hd, d, axes=("heads", "embed"))
+        p["o_proj"], s["o_proj"] = pp, ss
+        if cfg.qk_norm:
+            p["q_norm"] = {"norm_scale": jnp.ones((hd,), jnp.float32)}
+            p["k_norm"] = {"norm_scale": jnp.ones((hd,), jnp.float32)}
+            s["q_norm"] = {"norm_scale": (None,)}
+            s["k_norm"] = {"norm_scale": (None,)}
+    else:
+        dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+        dv = cfg.v_head_dim or dn
+        pp, ss = L.dense_init(ks[0], d, h * (dn + dr), axes=("embed", "heads"))
+        p["q_proj"], s["q_proj"] = pp, ss
+        pp, ss = L.dense_init(ks[1], d, cfg.kv_lora + dr, axes=("embed", None))
+        p["kv_down"], s["kv_down"] = pp, ss
+        pp, ss = L.dense_init(ks[2], cfg.kv_lora, h * dn, axes=(None, "heads"))
+        p["k_up"], s["k_up"] = pp, ss
+        pp, ss = L.dense_init(ks[3], cfg.kv_lora, h * dv, axes=(None, "heads"))
+        p["v_up"], s["v_up"] = pp, ss
+        pp, ss = L.dense_init(ks[4], h * dv, d, axes=("heads", "embed"))
+        p["o_proj"], s["o_proj"] = pp, ss
+        p["ckv_norm"], sn = L.rmsnorm_init(cfg.kv_lora)
+        s["ckv_norm"] = {"norm_scale": (None,)}
+    return p, s
+
+
+# ---------------------------------------------------------------------------
+# Core chunked attention (online softmax over KV blocks)
+# ---------------------------------------------------------------------------
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (static chunk sizing)."""
+    cap = min(cap, n)
+    for c in range(cap, 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+def _gqa_logits(q, k):
+    """q: (B,Sq,Hkv,G,D), k: (B,Ck,Hkv,D) -> (B,Hkv,G,Sq,Ck)"""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_offset, chunk_kv: int = 1024,
+                      kv_len_mask: Optional[int] = None):
+    """Online-softmax attention, scanning KV chunks.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, Hkv, D); q_offset: scalar — absolute
+    position of q[0] (for causal masking of prefill continuations).
+    """
+    b, sq, h, d = q.shape
+    dv = v.shape[-1]
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    chunk_kv = _largest_divisor(skv, chunk_kv)
+    nk = skv // chunk_kv
+    qg = q.reshape(b, sq, hkv, g, d)
+    scale = d ** -0.5
+    kc = k.reshape(b, nk, chunk_kv, hkv, d)
+    vc = v.reshape(b, nk, chunk_kv, hkv, dv)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        j, kj, vj = inp
+        logits = _gqa_logits(qg, kj) * scale  # (B,Hkv,G,Sq,Ck)
+        k_pos = j * chunk_kv + jnp.arange(chunk_kv)
+        mask = jnp.ones((sq, chunk_kv), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if kv_len_mask is not None:
+            mask &= k_pos[None, :] < kv_len_mask
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vj.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(nk), kc.swapaxes(0, 1), vc.swapaxes(0, 1))
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dv)
+    return out.astype(q.dtype)
+
+
+def banded_attention(q, k, v, *, window: int, chunk_q: int = 1024):
+    """Sliding-window causal attention with true O(S*W) FLOPs.
+
+    Scans query chunks; each step dynamic-slices the static-size KV band
+    [chunk_start - W_pad, chunk_start + Cq) and masks to the exact window.
+    """
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    chunk_q = _largest_divisor(s, chunk_q)
+    nq = s // chunk_q
+    w_pad = ((window + chunk_q - 1) // chunk_q) * chunk_q  # static band padding
+    span = w_pad + chunk_q
+    scale = d ** -0.5
+    # pad kv at the front so every band slice is in-bounds
+    kp = jnp.pad(k, ((0, 0), (w_pad, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (w_pad, 0), (0, 0), (0, 0)))
+
+    def step(_, i):
+        q0 = i * chunk_q
+        qi = jax.lax.dynamic_slice_in_dim(q, q0, chunk_q, axis=1)
+        ki = jax.lax.dynamic_slice_in_dim(kp, q0, span, axis=1)  # [q0-wpad, q0+Cq)
+        vi = jax.lax.dynamic_slice_in_dim(vp, q0, span, axis=1)
+        qg = qi.reshape(b, chunk_q, hkv, g, d)
+        logits = _gqa_logits(qg, ki) * scale  # (B,Hkv,G,Cq,span)
+        q_pos = q0 + jnp.arange(chunk_q)
+        k_pos = q0 - w_pad + jnp.arange(span)  # absolute (pre-pad coords)
+        mask = (q_pos[:, None] >= k_pos[None, :]) \
+            & (q_pos[:, None] - k_pos[None, :] < window) \
+            & (k_pos[None, :] >= 0)
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        out = jnp.einsum(
+            "bhgqk,bkhd->bqhgd",
+            jax.nn.softmax(logits, axis=-1).astype(vi.dtype), vi,
+            preferred_element_type=jnp.float32,
+        )
+        return None, out.reshape(b, chunk_q, h, d)
+
+    _, outs = jax.lax.scan(step, None, jnp.arange(nq))
+    out = outs.swapaxes(0, 1).reshape(b, s, h, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q1, k_cache, v_cache, cur_pos, *, window: Optional[int] = None):
+    """Single-step decode: q1 (B,1,H,D) vs cache (B,Smax,Hkv,D).
+
+    For SWA layers only the last `window` positions are sliced (static
+    size), so FLOPs/bytes are O(W) not O(Smax).  For global layers the
+    full cache participates; under a sequence-sharded cache GSPMD turns
+    the softmax/PV reductions into the distributed flash-decoding
+    pattern (partial max/sum + all-reduce).
+    """
+    b, _, h, d = q1.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    scale = d ** -0.5
+    if window is not None and window < smax:
+        start = jnp.clip(cur_pos + 1 - window, 0, smax - window)
+        kc = jax.lax.dynamic_slice_in_dim(k_cache, start, window, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v_cache, start, window, axis=1)
+        k_pos = start + jnp.arange(window)
+    else:
+        kc, vc = k_cache, v_cache
+        k_pos = jnp.arange(smax)
+    qg = q1.reshape(b, 1, hkv, g, d)
+    logits = _gqa_logits(qg, kc) * scale  # (B,Hkv,G,1,S)
+    mask = k_pos <= cur_pos
+    logits = jnp.where(mask[None, None, None, None, :], logits, NEG_INF)
+    attn = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", attn.astype(vc.dtype), vc,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q1.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention layer (projections + cache plumbing)
+# ---------------------------------------------------------------------------
+
+
+def _split_heads(x, n, d):
+    return x.reshape(*x.shape[:-1], n, d)
+
+
+def attn_apply(p, x, cfg: AttnConfig, sp_cfg: SparsityConfig, *,
+               positions, cache=None, layer_window: Optional[int] = None,
+               decode: bool = False):
+    """Returns (out, new_cache).  cache: dict(k, v) or dict(ckv, kpe) for MLA."""
+    if cfg.kv_lora is not None:
+        return _mla_apply(p, x, cfg, sp_cfg, positions=positions, cache=cache,
+                          decode=decode)
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = _split_heads(L.dense_apply(p["q_proj"], x, "attn/q_proj", sp_cfg), h, hd)
+    k = _split_heads(L.dense_apply(p["k_proj"], x, "attn/k_proj", sp_cfg), kv, hd)
+    v = _split_heads(L.dense_apply(p["v_proj"], x, "attn/v_proj", sp_cfg), kv, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm_apply(p["q_norm"], q)
+        k = L.rmsnorm_apply(p["k_norm"], k)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    # TP anchor AFTER rope: rope's position broadcast is unsharded, and
+    # anchoring before it lets GSPMD replicate the batch through the
+    # rope elementwise chain (observed: full-batch fp32 q/k all-gathers)
+    q = act(q, BATCH, None, "model", None)
+    k = act(k, BATCH, None, "model", None)
+    v = act(v, BATCH, None, "model", None)
+    window = layer_window
+
+    if decode:
+        assert cache is not None
+        cur = cache["pos"]
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cur, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cur, axis=1)
+        # anchor: batch-sharded cache, heads over TP only when divisible —
+        # without this GSPMD reshards heads over a subgroup and re-gathers
+        # the whole stacked cache at the loop boundary
+        k_cache = act(k_cache, BATCH, None, "model", None)
+        v_cache = act(v_cache, BATCH, None, "model", None)
+        out = decode_attention(q, k_cache, v_cache, cur, window=window)
+        new_cache = {"k": k_cache, "v": v_cache, "pos": cur + 1}
+    else:
+        if window is not None:
+            out = banded_attention(q, k, v, window=window, chunk_q=cfg.chunk_q)
+        else:
+            out = chunked_attention(q, k, v, causal=True, q_offset=0,
+                                    chunk_kv=cfg.chunk_kv)
+        new_cache = None
+        if cache is not None:  # prefill: fill the cache
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+            new_cache = {"k": k_cache, "v": v_cache, "pos": jnp.asarray(k.shape[1], jnp.int32)}
+    out = out.reshape(*x.shape[:-1], h * hd)
+    return L.dense_apply(p["o_proj"], out, "attn/o_proj", sp_cfg), new_cache
+
+
+def _mla_apply(p, x, cfg: AttnConfig, sp_cfg, *, positions, cache, decode):
+    """DeepSeek-V2 multi-head latent attention (compressed KV cache)."""
+    h = cfg.n_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    dv = cfg.v_head_dim or dn
+    lora = cfg.kv_lora
+    b = x.shape[0]
+
+    qall = L.dense_apply(p["q_proj"], x, "attn/q_proj", sp_cfg)
+    qall = qall.reshape(*x.shape[:-1], h, dn + dr)
+    qall = act(qall, BATCH, None, "model", None)  # heads over TP
+    q_nope, q_pe = qall[..., :dn], qall[..., dn:]
+    q_pe = L.apply_rope(q_pe, positions, cfg.rope_theta)
+
+    down = L.dense_apply(p["kv_down"], x, "attn/kv_down", sp_cfg)
+    ckv, k_pe = down[..., :lora], down[..., lora:]
+    ckv = L.rmsnorm_apply(p["ckv_norm"], ckv)
+    k_pe = L.apply_rope(k_pe[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+
+    if decode:
+        assert cache is not None
+        cur = cache["pos"]
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv.astype(cache["ckv"].dtype), cur, axis=1)
+        kpe_c = jax.lax.dynamic_update_slice_in_dim(cache["kpe"], k_pe.astype(cache["kpe"].dtype), cur, axis=1)
+        ckv_c = act(ckv_c, BATCH, None, None)
+        kpe_c = act(kpe_c, BATCH, None, None)
+        # absorbed-matrix decode: attention entirely in the lora space
+        wk = p["k_up"]["w"].reshape(lora, h, dn)
+        q_abs = jnp.einsum("bqhd,lhd->bqhl", q_nope.astype(jnp.float32),
+                           wk.astype(jnp.float32))
+        scores = jnp.einsum("bqhl,bsl->bhqs", q_abs, ckv_c.astype(jnp.float32))
+        scores += jnp.einsum("bqhd,bsd->bhqs", q_pe.astype(jnp.float32),
+                             kpe_c.astype(jnp.float32))
+        scores *= (dn + dr) ** -0.5
+        smax = ckv_c.shape[1]
+        mask = jnp.arange(smax) <= cur
+        scores = jnp.where(mask[None, None, None, :], scores, NEG_INF)
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx_c = jnp.einsum("bhqs,bsl->bqhl", attn, ckv_c.astype(jnp.float32))
+        wv = p["v_up"]["w"].reshape(lora, h, dv)
+        ctx = jnp.einsum("bqhl,lhv->bqhv", ctx_c, wv.astype(jnp.float32))
+        new_cache = {"ckv": ckv_c, "kpe": kpe_c, "pos": cur + 1}
+    else:
+        k_nope = L.dense_apply(p["k_up"], ckv, "attn/k_up", sp_cfg)
+        k_nope = k_nope.reshape(*x.shape[:-1], h, dn)
+        val = L.dense_apply(p["v_up"], ckv, "attn/v_up", sp_cfg)
+        val = val.reshape(*x.shape[:-1], h, dv)
+        q = jnp.concatenate([q_nope, q_pe], axis=-1)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe[..., None, :],
+                                                      (*k_pe.shape[:-1], h, dr))], axis=-1)
+        out5 = chunked_attention(q, k, val, causal=True, q_offset=0,
+                                 chunk_kv=cfg.chunk_kv)
+        ctx = out5
+        new_cache = None
+        if cache is not None:
+            ckv_c = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, axis=1)
+            kpe_c = jax.lax.dynamic_update_slice_in_dim(cache["kpe"], k_pe.astype(cache["kpe"].dtype), 0, axis=1)
+            new_cache = {"ckv": ckv_c, "kpe": kpe_c,
+                         "pos": jnp.asarray(x.shape[1], jnp.int32)}
+    ctx = ctx.reshape(*x.shape[:-1], h * dv).astype(x.dtype)
+    return L.dense_apply(p["o_proj"], ctx, "attn/o_proj", sp_cfg), new_cache
+
+
+def init_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if cfg.kv_lora is not None:
+        return {
+            "ckv": jnp.zeros((batch, max_len, cfg.kv_lora), dtype),
+            "kpe": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv, cfg.head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }

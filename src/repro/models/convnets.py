@@ -1,0 +1,303 @@
+"""The paper's own benchmark models: ResNet9/18/50, VGG19, ViT.
+
+These are the five DNNs of Table I/II, built on ``core/bdwp.nm_conv`` /
+``nm_linear`` so BDWP applies exactly as in the paper: every conv layer
+except the first (named ``head0`` — excluded by the default
+SparsityConfig), plus all linear layers of the ViT blocks.  NHWC / HWIO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bdwp
+from repro.core.sparsity import DENSE, SparsityConfig
+from repro.models import layers as L
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    scale = (kh * kw * cin) ** -0.5
+    return {"w": jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * scale}
+
+
+def _bn_init(c):
+    return {"norm_scale": jnp.ones((c,), jnp.float32),
+            "norm_bias": jnp.zeros((c,), jnp.float32)}
+
+
+def _bn_apply(p, x):
+    """Inference-style norm (per-batch statistics; the paper trains with
+    BN — batch statistics are equivalent for our loss-curve studies)."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean((0, 1, 2), keepdims=True)
+    var = xf.var((0, 1, 2), keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + 1e-5) * p["norm_scale"] + p["norm_bias"]
+    return out.astype(x.dtype)
+
+
+def _conv_bn_relu(p, x, sp_cfg, name, stride=1):
+    y = bdwp.nm_conv(x, p["conv"]["w"],
+                     bdwp.pick_cfg(name, p["conv"]["w"].shape, sp_cfg),
+                     stride, "SAME")
+    return jax.nn.relu(_bn_apply(p["bn"], y))
+
+
+# ---------------------------------------------------------------------------
+# ResNet9 (DAWNBench-style, CIFAR)
+# ---------------------------------------------------------------------------
+
+
+def resnet9_init(key, num_classes=10, width=64):
+    ks = jax.random.split(key, 12)
+    w = width
+
+    def cb(k, cin, cout):
+        return {"conv": _conv_init(k, 3, 3, cin, cout), "bn": _bn_init(cout)}
+
+    return {
+        "head0": cb(ks[0], 3, w),
+        "conv1": cb(ks[1], w, 2 * w),
+        "res1a": cb(ks[2], 2 * w, 2 * w),
+        "res1b": cb(ks[3], 2 * w, 2 * w),
+        "conv2": cb(ks[4], 2 * w, 4 * w),
+        "conv3": cb(ks[5], 4 * w, 8 * w),
+        "res2a": cb(ks[6], 8 * w, 8 * w),
+        "res2b": cb(ks[7], 8 * w, 8 * w),
+        "fc": {"w": jax.random.normal(ks[8], (8 * w, num_classes), jnp.float32)
+               * (8 * w) ** -0.5},
+    }
+
+
+def resnet9_apply(p, x, sp_cfg: SparsityConfig = DENSE):
+    x = _conv_bn_relu(p["head0"], x, sp_cfg, "head0")
+    x = _conv_bn_relu(p["conv1"], x, sp_cfg, "conv1")
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    r = _conv_bn_relu(p["res1a"], x, sp_cfg, "res1a")
+    r = _conv_bn_relu(p["res1b"], r, sp_cfg, "res1b")
+    x = x + r
+    x = _conv_bn_relu(p["conv2"], x, sp_cfg, "conv2")
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    x = _conv_bn_relu(p["conv3"], x, sp_cfg, "conv3")
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    r = _conv_bn_relu(p["res2a"], x, sp_cfg, "res2a")
+    r = _conv_bn_relu(p["res2b"], r, sp_cfg, "res2b")
+    x = x + r
+    x = x.max((1, 2))  # global max pool
+    return jnp.matmul(x, p["fc"]["w"].astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# ResNet18 / ResNet50 (standard He et al.)
+# ---------------------------------------------------------------------------
+
+_RESNET_STAGES = {
+    18: ([2, 2, 2, 2], "basic"),
+    50: ([3, 4, 6, 3], "bottleneck"),
+}
+
+
+def resnet_init(key, depth: int, num_classes=1000, width=64):
+    stages, kind = _RESNET_STAGES[depth]
+    ks = iter(jax.random.split(key, 256))
+    p = {"head0": {"conv": _conv_init(next(ks), 7, 7, 3, width),
+                   "bn": _bn_init(width)}}
+    cin = width
+    for si, n_blocks in enumerate(stages):
+        cout = width * (2 ** si)
+        cexp = cout * (4 if kind == "bottleneck" else 1)
+        for bi in range(n_blocks):
+            name = f"s{si}b{bi}"
+            blk = {}
+            if kind == "basic":
+                blk["c1"] = {"conv": _conv_init(next(ks), 3, 3, cin, cout),
+                             "bn": _bn_init(cout)}
+                blk["c2"] = {"conv": _conv_init(next(ks), 3, 3, cout, cout),
+                             "bn": _bn_init(cout)}
+            else:
+                blk["c1"] = {"conv": _conv_init(next(ks), 1, 1, cin, cout),
+                             "bn": _bn_init(cout)}
+                blk["c2"] = {"conv": _conv_init(next(ks), 3, 3, cout, cout),
+                             "bn": _bn_init(cout)}
+                blk["c3"] = {"conv": _conv_init(next(ks), 1, 1, cout, cexp),
+                             "bn": _bn_init(cexp)}
+            if bi == 0 and cin != cexp:
+                blk["proj"] = {"conv": _conv_init(next(ks), 1, 1, cin, cexp),
+                               "bn": _bn_init(cexp)}
+            p[name] = blk
+            cin = cexp
+    p["fc"] = {"w": jax.random.normal(next(ks), (cin, num_classes), jnp.float32)
+               * cin ** -0.5}
+    p["_meta"] = jnp.asarray([depth], jnp.int32)
+    return p
+
+
+def resnet_apply(p, x, depth: int, sp_cfg: SparsityConfig = DENSE, width=64):
+    stages, kind = _RESNET_STAGES[depth]
+    x = _conv_bn_relu(p["head0"], x, sp_cfg, "head0", stride=2)
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for si, n_blocks in enumerate(stages):
+        for bi in range(n_blocks):
+            blk = p[f"s{si}b{bi}"]
+            stride = 2 if (bi == 0 and si > 0) else 1
+            sc = x
+            if "proj" in blk:
+                sc = bdwp.nm_conv(x, blk["proj"]["conv"]["w"],
+                                  bdwp.pick_cfg(f"s{si}b{bi}/proj",
+                                                blk["proj"]["conv"]["w"].shape,
+                                                sp_cfg), stride, "SAME")
+                sc = _bn_apply(blk["proj"]["bn"], sc)
+            if kind == "basic":
+                y = _conv_bn_relu(blk["c1"], x, sp_cfg, f"s{si}b{bi}/c1", stride)
+                y = bdwp.nm_conv(y, blk["c2"]["conv"]["w"],
+                                 bdwp.pick_cfg(f"s{si}b{bi}/c2",
+                                               blk["c2"]["conv"]["w"].shape,
+                                               sp_cfg), 1, "SAME")
+                y = _bn_apply(blk["c2"]["bn"], y)
+            else:
+                y = _conv_bn_relu(blk["c1"], x, sp_cfg, f"s{si}b{bi}/c1", 1)
+                y = _conv_bn_relu(blk["c2"], y, sp_cfg, f"s{si}b{bi}/c2", stride)
+                y = bdwp.nm_conv(y, blk["c3"]["conv"]["w"],
+                                 bdwp.pick_cfg(f"s{si}b{bi}/c3",
+                                               blk["c3"]["conv"]["w"].shape,
+                                               sp_cfg), 1, "SAME")
+                y = _bn_apply(blk["c3"]["bn"], y)
+            x = jax.nn.relu(sc + y)
+    x = x.mean((1, 2))
+    return jnp.matmul(x, p["fc"]["w"].astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# VGG19
+# ---------------------------------------------------------------------------
+
+_VGG19 = [64, 64, "M", 128, 128, "M", 256, 256, 256, 256, "M",
+          512, 512, 512, 512, "M", 512, 512, 512, 512, "M"]
+
+
+def vgg19_init(key, num_classes=100):
+    ks = iter(jax.random.split(key, 64))
+    p = {}
+    cin = 3
+    for i, v in enumerate(_VGG19):
+        if v == "M":
+            continue
+        name = "head0" if cin == 3 else f"conv{i}"
+        p[name] = {"conv": _conv_init(next(ks), 3, 3, cin, v), "bn": _bn_init(v)}
+        cin = v
+    p["fc"] = {"w": jax.random.normal(next(ks), (512, num_classes), jnp.float32)
+               * 512 ** -0.5}
+    return p
+
+
+def vgg19_apply(p, x, sp_cfg: SparsityConfig = DENSE):
+    cin = 3
+    for i, v in enumerate(_VGG19):
+        if v == "M":
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                      (1, 2, 2, 1), "VALID")
+            continue
+        name = "head0" if cin == 3 else f"conv{i}"
+        x = _conv_bn_relu(p[name], x, sp_cfg, name)
+        cin = v
+    x = x.mean((1, 2))
+    return jnp.matmul(x, p["fc"]["w"].astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# ViT (CIFAR-scale, the paper's transformer benchmark)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    image: int = 32
+    patch: int = 4
+    d_model: int = 384
+    n_layers: int = 7
+    n_heads: int = 6
+    d_ff: int = 1536
+    num_classes: int = 100
+
+
+def vit_init(key, cfg: ViTConfig):
+    ks = iter(jax.random.split(key, 8 + 8 * cfg.n_layers))
+    n_patch = (cfg.image // cfg.patch) ** 2
+    pdim = cfg.patch * cfg.patch * 3
+    p = {
+        "patch_frontend": {"w": jax.random.normal(next(ks), (pdim, cfg.d_model),
+                                                  jnp.float32) * pdim ** -0.5},
+        "pos_embed": jax.random.normal(next(ks), (n_patch + 1, cfg.d_model),
+                                       jnp.float32) * 0.02,
+        "cls_embed": jnp.zeros((cfg.d_model,), jnp.float32),
+        "head": {"w": jax.random.normal(next(ks), (cfg.d_model, cfg.num_classes),
+                                        jnp.float32) * cfg.d_model ** -0.5},
+    }
+    hd = cfg.d_model // cfg.n_heads
+    for i in range(cfg.n_layers):
+        blk = {}
+        blk["ln1"], _ = L.layernorm_init(cfg.d_model)
+        blk["ln2"], _ = L.layernorm_init(cfg.d_model)
+        for nm in ("q_proj", "k_proj", "v_proj", "o_proj"):
+            din = cfg.d_model
+            blk[nm] = {"w": jax.random.normal(next(ks), (din, cfg.d_model),
+                                              jnp.float32) * din ** -0.5}
+        blk["w_in"] = {"w": jax.random.normal(next(ks), (cfg.d_model, cfg.d_ff),
+                                              jnp.float32) * cfg.d_model ** -0.5}
+        blk["w_out"] = {"w": jax.random.normal(next(ks), (cfg.d_ff, cfg.d_model),
+                                               jnp.float32) * cfg.d_ff ** -0.5}
+        p[f"block{i}"] = blk
+    return p
+
+
+def vit_apply(p, x, cfg: ViTConfig, sp_cfg: SparsityConfig = DENSE):
+    b = x.shape[0]
+    s = cfg.image // cfg.patch
+    x = x.reshape(b, s, cfg.patch, s, cfg.patch, 3).transpose(0, 1, 3, 2, 4, 5)
+    x = x.reshape(b, s * s, -1).astype(jnp.bfloat16)
+    # patch embedding = the "first layer" -> excluded from pruning by name
+    x = bdwp.nm_linear(x, p["patch_frontend"]["w"],
+                       bdwp.pick_cfg("patch_frontend", p["patch_frontend"]["w"].shape,
+                                     sp_cfg))
+    cls = jnp.broadcast_to(p["cls_embed"].astype(x.dtype), (b, 1, cfg.d_model))
+    x = jnp.concatenate([cls, x], axis=1)
+    x = x + p["pos_embed"].astype(x.dtype)
+    hd = cfg.d_model // cfg.n_heads
+    for i in range(cfg.n_layers):
+        blk = p[f"block{i}"]
+        h = L.layernorm_apply(blk["ln1"], x)
+        q = bdwp.nm_linear(h, blk["q_proj"]["w"],
+                           bdwp.pick_cfg("attn/q_proj", blk["q_proj"]["w"].shape, sp_cfg))
+        k = bdwp.nm_linear(h, blk["k_proj"]["w"],
+                           bdwp.pick_cfg("attn/k_proj", blk["k_proj"]["w"].shape, sp_cfg))
+        v = bdwp.nm_linear(h, blk["v_proj"]["w"],
+                           bdwp.pick_cfg("attn/v_proj", blk["v_proj"]["w"].shape, sp_cfg))
+        q = q.reshape(b, -1, cfg.n_heads, hd)
+        k = k.reshape(b, -1, cfg.n_heads, hd)
+        v = v.reshape(b, -1, cfg.n_heads, hd)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                            preferred_element_type=jnp.float32) * hd ** -0.5
+        attn = jax.nn.softmax(logits, -1).astype(v.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(b, -1, cfg.d_model)
+        o = bdwp.nm_linear(o, blk["o_proj"]["w"],
+                           bdwp.pick_cfg("attn/o_proj", blk["o_proj"]["w"].shape, sp_cfg))
+        x = x + o
+        h2 = L.layernorm_apply(blk["ln2"], x)
+        f = jax.nn.gelu(bdwp.nm_linear(h2, blk["w_in"]["w"],
+                                       bdwp.pick_cfg("mlp/w_in", blk["w_in"]["w"].shape, sp_cfg)))
+        x = x + bdwp.nm_linear(f.astype(x.dtype), blk["w_out"]["w"],
+                               bdwp.pick_cfg("mlp/w_out", blk["w_out"]["w"].shape, sp_cfg))
+    cls_out = x[:, 0]
+    return jnp.matmul(cls_out, p["head"]["w"].astype(cls_out.dtype),
+                      preferred_element_type=jnp.float32)

@@ -1,0 +1,263 @@
+"""Encoder-decoder transformer (Whisper-family backbone).
+
+Per the assignment the conv/mel frontend is a STUB: ``input_specs()``
+provides precomputed frame embeddings (B, T_enc, d) — the encoder is the
+bidirectional transformer stack over those frames, the decoder is a
+causal stack with cross-attention.  GELU MLP + LayerNorm (Whisper uses
+pre-LN GELU blocks, learned positions, no RoPE).
+
+BDWP applies to every projection (the paper prunes all ViT linear
+layers; Whisper's are the same shape class).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import DENSE, SparsityConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.sharding.rules import BATCH, act
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int          # decoder layers
+    n_enc_layers: int      # encoder layers
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    max_source: int = 1500
+    max_target: int = 448
+    remat: bool = True
+    pad_vocab_to: int = 256  # vocab-parallel padding (see LMConfig)
+
+    @property
+    def padded_vocab(self) -> int:
+        return -(-self.vocab // self.pad_vocab_to) * self.pad_vocab_to
+
+    def n_params(self) -> int:
+        import math
+
+        p, _ = init(jax.random.PRNGKey(0), self, abstract=True)
+        return sum(math.prod(x.shape) for x in jax.tree.leaves(p))
+
+    def n_active_params(self) -> int:
+        return self.n_params()
+
+    def attn_cfg(self) -> A.AttnConfig:
+        return A.AttnConfig(d_model=self.d_model, n_heads=self.n_heads,
+                            n_kv=self.n_kv, head_dim=self.head_dim)
+
+
+def _gelu_ffn_init(key, d, d_ff):
+    k1, k2 = jax.random.split(key)
+    p, s = {}, {}
+    p["w_in"], s["w_in"] = L.dense_init(k1, d, d_ff, axes=("embed", "mlp"), bias=True)
+    p["w_out"], s["w_out"] = L.dense_init(k2, d_ff, d, axes=("mlp", "embed"), bias=True)
+    return p, s
+
+
+def _gelu_ffn_apply(p, x, sp_cfg):
+    h = jax.nn.gelu(L.dense_apply(p["w_in"], x, "mlp/w_in", sp_cfg))
+    h = act(h, BATCH, None, "model")
+    return L.dense_apply(p["w_out"], h.astype(x.dtype), "mlp/w_out", sp_cfg)
+
+
+def _xattn_init(key, cfg: EncDecConfig):
+    """Cross-attention: q from decoder, k/v from encoder output."""
+    ks = jax.random.split(key, 4)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    p, s = {}, {}
+    p["q_proj"], s["q_proj"] = L.dense_init(ks[0], d, h * hd, axes=("embed", "heads"))
+    p["k_proj"], s["k_proj"] = L.dense_init(ks[1], d, kv * hd, axes=("embed", "kv"))
+    p["v_proj"], s["v_proj"] = L.dense_init(ks[2], d, kv * hd, axes=("embed", "kv"))
+    p["o_proj"], s["o_proj"] = L.dense_init(ks[3], h * hd, d, axes=("heads", "embed"))
+    return p, s
+
+
+def _xattn_apply(p, x, enc_kv, cfg: EncDecConfig, sp_cfg):
+    """enc_kv: precomputed (k, v) from encoder output (cached for decode)."""
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = L.dense_apply(p["q_proj"], x, "xattn/q_proj", sp_cfg)
+    q = q.reshape(*x.shape[:-1], h, hd)
+    k, v = enc_kv
+    out = A.chunked_attention(q, k, v, causal=False, q_offset=0, chunk_kv=512)
+    out = out.reshape(*x.shape[:-1], h * hd)
+    return L.dense_apply(p["o_proj"], out, "xattn/o_proj", sp_cfg)
+
+
+def _enc_block_init(key, cfg: EncDecConfig):
+    k1, k2 = jax.random.split(key)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = L.layernorm_init(cfg.d_model)
+    p["ln2"], s["ln2"] = L.layernorm_init(cfg.d_model)
+    p["attn"], s["attn"] = A.attn_init(k1, cfg.attn_cfg())
+    p["ffn"], s["ffn"] = _gelu_ffn_init(k2, cfg.d_model, cfg.d_ff)
+    return p, s
+
+
+def _dec_block_init(key, cfg: EncDecConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = L.layernorm_init(cfg.d_model)
+    p["ln2"], s["ln2"] = L.layernorm_init(cfg.d_model)
+    p["ln3"], s["ln3"] = L.layernorm_init(cfg.d_model)
+    p["attn"], s["attn"] = A.attn_init(k1, cfg.attn_cfg())
+    p["xattn"], s["xattn"] = _xattn_init(k2, cfg)
+    p["ffn"], s["ffn"] = _gelu_ffn_init(k3, cfg.d_model, cfg.d_ff)
+    return p, s
+
+
+def init(key, cfg: EncDecConfig, abstract: bool = False):
+    box = {}
+
+    def build(key):
+        ks = jax.random.split(key, 6)
+        p, s = {}, {}
+        p["embed"], s["embed"] = L.embed_init(ks[0], cfg.padded_vocab, cfg.d_model)
+        p["pos_embed_dec"] = jax.random.normal(
+            ks[1], (cfg.max_target, cfg.d_model), jnp.float32) * 0.01
+        s["pos_embed_dec"] = (None, "embed")
+        p["pos_embed_enc"] = jax.random.normal(
+            ks[2], (cfg.max_source, cfg.d_model), jnp.float32) * 0.01
+        s["pos_embed_enc"] = (None, "embed")
+        ekeys = jax.random.split(ks[3], cfg.n_enc_layers)
+        p["enc_blocks"] = jax.vmap(lambda k: _enc_block_init(k, cfg)[0])(ekeys)
+        s["enc_blocks"] = _stack_spec(_spec_of(partial(_enc_block_init, cfg=cfg)))
+        dkeys = jax.random.split(ks[4], cfg.n_layers)
+        p["dec_blocks"] = jax.vmap(lambda k: _dec_block_init(k, cfg)[0])(dkeys)
+        s["dec_blocks"] = _stack_spec(_spec_of(partial(_dec_block_init, cfg=cfg)))
+        p["enc_norm"], s["enc_norm"] = L.layernorm_init(cfg.d_model)
+        p["dec_norm"], s["dec_norm"] = L.layernorm_init(cfg.d_model)
+        box["specs"] = s
+        return p
+
+    if abstract:
+        return jax.eval_shape(build, key), box["specs"]
+    return build(key), box["specs"]
+
+
+def _spec_of(init_fn):
+    box = {}
+
+    def f(k):
+        p, s = init_fn(k)
+        box["s"] = s
+        return p
+
+    jax.eval_shape(f, jax.random.PRNGKey(0))
+    return box["s"]
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def _stack_spec(spec):
+    return jax.tree.map(lambda ax: ("layer",) + tuple(ax), spec, is_leaf=_is_axes)
+
+
+def encode(params, frames, cfg: EncDecConfig, sp_cfg: SparsityConfig = DENSE):
+    """frames: (B, T_enc, d) stub-frontend embeddings -> (B, T_enc, d)."""
+    x = frames.astype(jnp.bfloat16)
+    t = x.shape[1]
+    x = x + params["pos_embed_enc"][:t].astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(t), x.shape[:2])
+
+    def body(xh, bp):
+        xh = act(xh, BATCH, None, None)
+        h = L.layernorm_apply(bp["ln1"], xh)
+        acfg = cfg.attn_cfg()
+        hseq = h
+        q = L.dense_apply(bp["attn"]["q_proj"], hseq, "attn/q_proj", sp_cfg)
+        k = L.dense_apply(bp["attn"]["k_proj"], hseq, "attn/k_proj", sp_cfg)
+        v = L.dense_apply(bp["attn"]["v_proj"], hseq, "attn/v_proj", sp_cfg)
+        q = q.reshape(*hseq.shape[:-1], acfg.n_heads, acfg.head_dim)
+        k = k.reshape(*hseq.shape[:-1], acfg.n_kv, acfg.head_dim)
+        v = v.reshape(*hseq.shape[:-1], acfg.n_kv, acfg.head_dim)
+        attn = A.chunked_attention(q, k, v, causal=False, q_offset=0, chunk_kv=512)
+        attn = attn.reshape(*hseq.shape[:-1], acfg.n_heads * acfg.head_dim)
+        xh = xh + L.dense_apply(bp["attn"]["o_proj"], attn, "attn/o_proj", sp_cfg)
+        xh = xh + _gelu_ffn_apply(bp["ffn"], L.layernorm_apply(bp["ln2"], xh), sp_cfg)
+        return xh, None
+
+    fn = body
+    if cfg.remat:
+        fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(fn, x, params["enc_blocks"])
+    return L.layernorm_apply(params["enc_norm"], x)
+
+
+def _enc_kv(bp, enc_out, cfg: EncDecConfig, sp_cfg):
+    acfg = cfg.attn_cfg()
+    k = L.dense_apply(bp["xattn"]["k_proj"], enc_out, "xattn/k_proj", sp_cfg)
+    v = L.dense_apply(bp["xattn"]["v_proj"], enc_out, "xattn/v_proj", sp_cfg)
+    k = k.reshape(*enc_out.shape[:-1], acfg.n_kv, acfg.head_dim)
+    v = v.reshape(*enc_out.shape[:-1], acfg.n_kv, acfg.head_dim)
+    return k, v
+
+
+def decode(params, tokens, enc_out, cfg: EncDecConfig,
+           sp_cfg: SparsityConfig = DENSE, *, cache=None, decode_step=False,
+           positions=None):
+    """Decoder trunk.  Returns (hidden, new_cache)."""
+    x = L.embed_apply(params["embed"], tokens)
+    b, s = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = x + jnp.take(params["pos_embed_dec"], positions, axis=0).astype(x.dtype)
+    acfg = cfg.attn_cfg()
+
+    def body(carry, xs):
+        xh = carry
+        bp, layer_cache = xs
+        xh = act(xh, BATCH, None, None)
+        h = L.layernorm_apply(bp["ln1"], xh)
+        mix, nc = A.attn_apply(bp["attn"], h, acfg, sp_cfg, positions=positions,
+                               cache=layer_cache, decode=decode_step)
+        xh = xh + mix
+        h2 = L.layernorm_apply(bp["ln2"], xh)
+        kv = _enc_kv(bp, enc_out, cfg, sp_cfg)
+        xh = xh + _xattn_apply(bp["xattn"], h2, kv, cfg, sp_cfg)
+        xh = xh + _gelu_ffn_apply(bp["ffn"], L.layernorm_apply(bp["ln3"], xh), sp_cfg)
+        return xh, nc
+
+    fn = body
+    if cfg.remat and not decode_step:
+        fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    layer_caches = cache["layers"] if cache is not None else None
+    if layer_caches is None:
+        x, _ = jax.lax.scan(lambda c, bp: (fn(c, (bp, None))[0], None),
+                            x, params["dec_blocks"])
+        new_cache = None
+    else:
+        x, new_layers = jax.lax.scan(fn, x, (params["dec_blocks"], layer_caches))
+        new_cache = {"layers": new_layers}
+    x = L.layernorm_apply(params["dec_norm"], x)
+    return x, new_cache
+
+
+def logits_from_hidden(params, hidden, cfg: Optional[EncDecConfig] = None):
+    logits = jnp.matmul(hidden, params["embed"]["embed_table"].T.astype(hidden.dtype),
+                        preferred_element_type=jnp.float32)
+    if cfg is not None and cfg.padded_vocab != cfg.vocab:
+        valid = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(valid, logits, -1e30)
+    return logits
+
+
+def init_cache(cfg: EncDecConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    per = [A.init_cache(cfg.attn_cfg(), batch, max_len, dtype)
+           for _ in range(cfg.n_layers)]
+    return {"layers": jax.tree.map(lambda *xs: jnp.stack(xs), *per)}

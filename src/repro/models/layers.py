@@ -1,0 +1,136 @@
+"""Shared layer primitives: functional params + logical-axis specs.
+
+Parameters live in plain nested dicts; every ``*_init`` returns
+``(params, specs)`` where ``specs`` mirrors the tree with tuples of
+*logical axis names*.  ``sharding/rules.py`` maps logical axes to mesh
+axes per workload (MaxText-style), so one model definition serves every
+(shape x mesh) cell of the dry-run.
+
+Every weight matmul routes through ``core/bdwp`` so the paper's N:M
+sparse training semantics apply uniformly; per-parameter eligibility is
+decided by name via ``bdwp.pick_cfg`` (embeddings, routers, norms and
+frontends stay dense — the paper's first-layer exclusion, generalized).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bdwp
+from repro.core.sparsity import SparsityConfig
+
+# Logical axis vocabulary (see sharding/rules.py):
+#   "embed"   – model width (FSDP-shardable)
+#   "mlp"     – FFN hidden (tensor-parallel)
+#   "heads"   – flattened attention heads*head_dim (tensor-parallel)
+#   "kv"      – kv heads*head_dim
+#   "vocab"   – vocabulary (tensor-parallel)
+#   "expert"  – MoE expert (expert-parallel)
+#   "layer"   – stacked scan-over-layers axis (never sharded)
+#   None      – replicated
+
+
+def dense_init(key, d_in: int, d_out: int, *, axes, bias: bool = False,
+               scale: Optional[float] = None, dtype=jnp.float32):
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    s = {"w": axes}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+        s["b"] = (axes[-1],)
+    return p, s
+
+
+def dense_apply(p, x, name: str, cfg: SparsityConfig, compute_dtype=jnp.bfloat16):
+    """x @ w via BDWP with per-param sparsity eligibility.
+
+    Packed-serving params ({"vals","idx"} from bdwp.pack_tree_shared)
+    route to the reduced-K matmul (shared-mode N:M)."""
+    if "vals" in p:
+        return bdwp.packed_shared_apply(p, x.astype(compute_dtype))
+    w = p["w"]
+    eff = bdwp.pick_cfg(name, w.shape, cfg)
+    y = bdwp.nm_linear(x.astype(compute_dtype), w, eff)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def rmsnorm_init(d: int):
+    return {"norm_scale": jnp.ones((d,), jnp.float32)}, {"norm_scale": ("embed",)}
+
+
+def rmsnorm_apply(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["norm_scale"]
+    return out.astype(x.dtype)
+
+
+def layernorm_init(d: int):
+    return (
+        {"norm_scale": jnp.ones((d,), jnp.float32),
+         "norm_bias": jnp.zeros((d,), jnp.float32)},
+        {"norm_scale": ("embed",), "norm_bias": ("embed",)},
+    )
+
+
+def layernorm_apply(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["norm_scale"] + p["norm_bias"]
+    return out.astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, scale: float = 1.0):
+    p = {"embed_table": jax.random.normal(key, (vocab, d), jnp.float32) * scale * d ** -0.5}
+    return p, {"embed_table": ("vocab", "embed")}
+
+
+def embed_apply(p, tokens, compute_dtype=jnp.bfloat16):
+    return jnp.take(p["embed_table"], tokens, axis=0).astype(compute_dtype)
+
+
+def unembed_apply(p, x, name="lm_head_embed", tied_table=None):
+    """Logits projection (never pruned — 'embed' is in the exclusion list)."""
+    table = tied_table if tied_table is not None else p["embed_table"]
+    return jnp.matmul(x, table.T.astype(x.dtype), preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0):
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(gate: jax.Array, up: jax.Array):
+    return jax.nn.silu(gate) * up
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Numerics policy (the WUVE/AMP analogue at the model level)."""
+
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    param_dtype: jnp.dtype = jnp.float32
+    logits_dtype: jnp.dtype = jnp.float32

@@ -1,0 +1,169 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity dispatch, shared experts.
+
+GShard/Switch-style dense dispatch (one-hot einsums) — the formulation
+GSPMD turns into all-to-alls under expert-parallel sharding of the
+``expert`` logical axis.  Expert FFN weights route through BDWP (the
+paper's N:M sparsity applies per-expert along the contraction axes);
+the router stays dense (excluded by name — accuracy-critical and tiny,
+the spirit of the paper's first-layer exclusion).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bdwp
+from repro.core.sparsity import SparsityConfig
+from repro.models import layers as L
+from repro.sharding.rules import BATCH, act
+
+
+def _slot_gather(src, idx):
+    """out[g, a, b, :] = src[g, idx[g, a, b], :].
+
+    Plain take_along_axis.  (A custom-VJP variant with a manual bf16
+    scatter-add was tried to keep the backward in 16-bit; under GSPMD
+    the explicit scatter replicated the expert-sharded source and
+    *tripled* collective traffic — refuted, see EXPERIMENTS.md §Perf.)
+    """
+    return jnp.take_along_axis(src[:, None], idx[..., None], axis=2)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int          # per-expert FFN hidden size
+    n_shared: int = 0      # always-on shared experts (deepseek-v2 style)
+    capacity_factor: float = 1.25
+    group_size: int = 512  # routing group (GShard): capacity is per-group
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig):
+    ks = jax.random.split(key, 8)
+    e, dff = cfg.n_experts, cfg.d_expert
+    scale = d_model ** -0.5
+    p = {
+        "router": {"w": jax.random.normal(ks[0], (d_model, e), jnp.float32) * scale},
+        "w_gate": jax.random.normal(ks[1], (e, d_model, dff), jnp.float32) * scale,
+        "w_up": jax.random.normal(ks[2], (e, d_model, dff), jnp.float32) * scale,
+        "w_down": jax.random.normal(ks[3], (e, dff, d_model), jnp.float32) * (dff ** -0.5),
+    }
+    s = {
+        "router": {"w": ("embed", None)},
+        "w_gate": ("expert", "embed", "mlp"),
+        "w_up": ("expert", "embed", "mlp"),
+        "w_down": ("expert", "mlp", "embed"),
+    }
+    if cfg.n_shared:
+        sh = cfg.n_shared * dff
+        p["shared"] = {
+            "w_gate": jax.random.normal(ks[4], (d_model, sh), jnp.float32) * scale,
+            "w_up": jax.random.normal(ks[5], (d_model, sh), jnp.float32) * scale,
+            "w_down": jax.random.normal(ks[6], (sh, d_model), jnp.float32) * (sh ** -0.5),
+        }
+        s["shared"] = {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+                       "w_down": ("mlp", "embed")}
+    return p, s
+
+
+def _expert_ffn(w_gate, w_up, w_down, x, sp_cfg: SparsityConfig):
+    """x: (E, C, d) -> (E, C, d); vmapped BDWP matmuls per expert."""
+    def one(wg, wu, wd, xe):
+        cfg_g = bdwp.pick_cfg("moe/expert/w_gate", wg.shape, sp_cfg)
+        cfg_u = bdwp.pick_cfg("moe/expert/w_up", wu.shape, sp_cfg)
+        cfg_d = bdwp.pick_cfg("moe/expert/w_down", wd.shape, sp_cfg)
+        h = L.swiglu(bdwp.nm_linear(xe, wg, cfg_g), bdwp.nm_linear(xe, wu, cfg_u))
+        return bdwp.nm_linear(h.astype(xe.dtype), wd, cfg_d)
+
+    return jax.vmap(one)(w_gate, w_up, w_down, x)
+
+
+def moe_apply(p, x, cfg: MoEConfig, sp_cfg: SparsityConfig):
+    """x: (B, S, d) -> (B, S, d) plus aux load-balancing loss.
+
+    GShard-style *grouped* routing with gather/scatter dispatch: tokens
+    are split into groups of ``group_size`` and capacity is per-group,
+    so no tensor ever scales with (global_tokens x experts x capacity).
+    Dispatch/combine are index gathers (memory ops, fully differentiable
+    through the value path), not dense one-hot matmuls — at the 1M-token
+    train_4k shapes the one-hot formulation would cost more FLOPs than
+    the experts themselves.  Expert-parallel sharding over "model" turns
+    the (G, E, C, d) regroup into the canonical all-to-all.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    sg = min(cfg.group_size, t)
+    while t % sg:  # static: largest divisor fallback
+        sg -= 1
+    g = t // sg
+    xt = x.reshape(g, sg, d)
+
+    logits = jnp.matmul(xt, p["router"]["w"].astype(xt.dtype),
+                        preferred_element_type=jnp.float32)  # (G, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (G, S, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(max(cfg.top_k, round(sg * cfg.capacity_factor * k / e)))
+    cap = min(cap, sg)
+
+    # slot assignment inside each (group, expert) queue
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)  # (G, S, K, E)
+    flat = onehot.reshape(g, sg * k, e)
+    pos_in_e = jnp.cumsum(flat, axis=1) - flat              # (G, S*K, E)
+    pos = (pos_in_e * flat).sum(-1).reshape(g, sg, k)       # (G, S, K)
+    keep = pos < cap
+    gate_vals = gate_vals * keep
+
+    # scatter: slot_token[g, e, c] = index of the token filling that slot
+    gi = jnp.broadcast_to(jnp.arange(g)[:, None, None], gate_idx.shape)
+    si = jnp.broadcast_to(jnp.arange(sg)[None, :, None], gate_idx.shape)
+    pos_c = jnp.where(keep, pos, cap)  # dropped -> sentinel column
+    slot_token = jnp.full((g, e, cap + 1), sg, jnp.int32)  # sg = zero row
+    slot_token = slot_token.at[gi, gate_idx, pos_c].set(si, mode="drop")
+    slot_token = slot_token[..., :cap]                      # (G, E, C)
+
+    # gather dispatched tokens (zero row for unfilled slots)
+    x_pad = jnp.concatenate([xt, jnp.zeros((g, 1, d), xt.dtype)], axis=1)
+    x_e = _slot_gather(x_pad, slot_token)                   # (G, E, C, d)
+    x_e = act(x_e, BATCH, "model", None, None)  # EP: experts over "model"
+    xe2 = x_e.transpose(1, 0, 2, 3).reshape(e, g * cap, d)  # the all-to-all
+    y_e = _expert_ffn(p["w_gate"], p["w_up"], p["w_down"], xe2, sp_cfg)
+    y_e = y_e.reshape(e, g, cap, d).transpose(1, 0, 2, 3)   # (G, E, C, d)
+    y_e = act(y_e, BATCH, "model", None, None)
+    # reshard expert-sharded outputs back to token shards BEFORE the
+    # combine gather — one (G,E,C,d)-sized hop (a2a-class traffic);
+    # gathering from an expert-sharded tensor instead would all-gather
+    # the full dispatched tensor onto every chip (~16x the bytes)
+    y_e = act(y_e, BATCH, None, None, None)
+
+    # combine: token side gathers its K slots back, weighted by gates
+    y_flat = y_e.reshape(g, e * cap, d)
+    slot_of = gate_idx * cap + jnp.where(keep, pos, 0)      # (G, S, K)
+    y_k = _slot_gather(y_flat, slot_of)                     # (G, S, K, d)
+    yt = (y_k * gate_vals[..., None].astype(y_k.dtype)).sum(2)  # (G, S, d)
+    yt = act(yt, BATCH, None, None)
+    yt = yt.reshape(t, d)
+
+    if "shared" in p:
+        sh = p["shared"]
+        xt2 = xt.reshape(t, d)
+        cfg_g = bdwp.pick_cfg("moe/shared/w_gate", sh["w_gate"].shape, sp_cfg)
+        cfg_u = bdwp.pick_cfg("moe/shared/w_up", sh["w_up"].shape, sp_cfg)
+        cfg_d = bdwp.pick_cfg("moe/shared/w_down", sh["w_down"].shape, sp_cfg)
+        h = L.swiglu(bdwp.nm_linear(xt2, sh["w_gate"], cfg_g),
+                     bdwp.nm_linear(xt2, sh["w_up"], cfg_u))
+        yt = yt + bdwp.nm_linear(h.astype(xt2.dtype), sh["w_down"], cfg_d)
+
+    # Switch-style load-balance aux loss (counts from kept assignments)
+    me = probs.mean((0, 1))                                 # (E,)
+    counts = (onehot * keep[..., None]).sum((0, 1, 2)).astype(jnp.float32)
+    ce = counts / jnp.maximum(counts.sum(), 1.0)
+    aux = e * jnp.sum(me * ce)
+    return yt.reshape(b, s, d).astype(x.dtype), aux

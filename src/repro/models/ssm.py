@@ -1,0 +1,202 @@
+"""Mamba-2 (SSD — state-space duality) block, train + single-step decode.
+
+Chunked SSD algorithm (Dao & Gu, 2024, arXiv:2405.21060): within-chunk
+quadratic "attention-like" term + across-chunk recurrent state passing.
+All big projections (in_proj / out_proj) route through BDWP — the SSD
+scan itself has no prunable weight contraction (noted in DESIGN.md
+§Arch-applicability), but the projections are ~90% of block FLOPs.
+
+Shapes follow the minimal mamba2: heads H = d_inner / head_dim P,
+scalar A per head, grouped B/C (n_groups=1), short depthwise causal
+conv on (x, B, C).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import SparsityConfig
+from repro.models import layers as L
+from repro.sharding.rules import BATCH as _BATCH, act as _act
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+
+def ssm_init(key, cfg: SSMConfig):
+    ks = jax.random.split(key, 6)
+    d, di, st, nh = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    d_in_proj = 2 * di + 2 * st + nh  # z, x, B, C, dt
+    scale = d ** -0.5
+    p = {
+        "in_proj": {"w": jax.random.normal(ks[0], (d, d_in_proj), jnp.float32) * scale},
+        "out_proj": {"w": jax.random.normal(ks[1], (di, d), jnp.float32) * (di ** -0.5)},
+        "conv_w": jax.random.normal(ks[2], (cfg.d_conv, cfg.conv_dim), jnp.float32) * 0.3,
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 0.01, jnp.float32))),
+        "ssm_norm": {"norm_scale": jnp.ones((di,), jnp.float32)},
+    }
+    s = {
+        "in_proj": {"w": ("embed", "mlp")},
+        "out_proj": {"w": ("mlp", "embed")},
+        "conv_w": (None, "mlp"),
+        "A_log": (None,), "D": (None,), "dt_bias": (None,),
+        "ssm_norm": {"norm_scale": ("mlp",)},
+    }
+    return p, s
+
+
+def _causal_conv(xbc, conv_w, conv_state=None):
+    """Depthwise causal conv1d. xbc: (B, S, C); conv_w: (K, C)."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i : i + xbc.shape[1]] * conv_w[i].astype(xbc.dtype)
+              for i in range(k))
+    new_state = xp[:, -(k - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunked(x, dt, A, Bmat, Cmat, D, chunk: int):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H); A: (H,) negative decay rates;
+    Bmat/Cmat: (B, S, N); D: (H,).  Returns y: (B, S, H, P).
+    """
+    b, s, h, pdim = x.shape
+    n = Bmat.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, pdim)
+    dtc = dt.reshape(b, nc, chunk, h)
+    bc = Bmat.reshape(b, nc, chunk, n)
+    cc = Cmat.reshape(b, nc, chunk, n)
+
+    dA = dtc * A  # (B,nc,L,H) negative
+    cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative log-decay
+
+    # ---- intra-chunk (quadratic in chunk length) ----
+    # decay(t, s) = exp(cum_t - cum_s) for t >= s.  The (B,nc,L,L,H)
+    # attention-like factors are bounded in [0,1] -> bf16 is safe and
+    # halves the dominant memory term; accumulation stays fp32 via
+    # preferred_element_type (the state recurrence below stays fp32).
+    li = cum[:, :, :, None, :]   # (B,nc,L,1,H) query t
+    lj = cum[:, :, None, :, :]   # (B,nc,1,L,H) key s
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.exp(jnp.where(mask[None, None, :, :, None], li - lj, -jnp.inf))
+    cb = jnp.einsum("bzln,bzmn->bzlm", cc.astype(jnp.bfloat16),
+                    bc.astype(jnp.bfloat16),
+                    preferred_element_type=jnp.float32)  # (B,nc,L,L)
+    att = (cb[..., None] * decay).astype(jnp.bfloat16)  # (B,nc,L,L,H)
+    dtx = (dtc[..., None] * xc).astype(jnp.bfloat16)    # (B,nc,L,H,P)
+    y_intra = jnp.einsum("bzlmh,bzmhp->bzlhp", att, dtx,
+                         preferred_element_type=jnp.float32)
+
+    # ---- chunk states and inter-chunk recurrence ----
+    # state contribution of chunk z: sum_s exp(cum_L - cum_s) dt_s B_s x_s
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,L,H)
+    states = jnp.einsum("bzlh,bzln,bzlhp->bzhnp",
+                        tail.astype(jnp.bfloat16), bc.astype(jnp.bfloat16),
+                        dtx, preferred_element_type=jnp.float32)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H) total decay of a chunk
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp  # (B,H,N,P), (B,H)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev  # emit state *entering* the chunk
+
+    h0 = jnp.zeros((b, h, n, pdim), x.dtype)
+    h_last, h_in = jax.lax.scan(
+        scan_fn, h0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_in = h_in.swapaxes(0, 1)  # (B,nc,H,N,P) state entering each chunk
+
+    # inter-chunk output: y_t += C_t · exp(cum_t) h_in
+    inter_decay = jnp.exp(cum)  # (B,nc,L,H)
+    y_inter = jnp.einsum("bzln,bzlh,bzhnp->bzlhp",
+                         cc.astype(jnp.bfloat16),
+                         inter_decay.astype(jnp.bfloat16),
+                         h_in.astype(jnp.bfloat16),
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(b, s, h, pdim)
+    y = y + x * D[None, None, :, None]
+    return y, h_last
+
+
+def ssm_apply(p, x, cfg: SSMConfig, sp_cfg: SparsityConfig, *, cache=None,
+              decode: bool = False):
+    """x: (B, S, d) -> (B, S, d).  cache: {'state': (B,H,N,P), 'conv': (B,K-1,C)}"""
+    b, s, d = x.shape
+    di, st, nh, pdim = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    proj = L.dense_apply(p["in_proj"], x, "ssm/in_proj", sp_cfg)
+    proj = _act(proj, _BATCH, None, None)  # batch stays data-parallel
+    z, xin, bmat, cmat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + st, 2 * di + 2 * st], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,) negative
+
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_state = cache.get("conv") if cache is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], conv_state if decode else None)
+    xin, bmat, cmat = jnp.split(conv_out, [di, di + st], axis=-1)
+    xh = xin.reshape(b, s, nh, pdim).astype(jnp.float32)
+    bmat = bmat.astype(jnp.float32)
+    cmat = cmat.astype(jnp.float32)
+
+    if decode:
+        assert cache is not None and s == 1
+        h_prev = cache["state"].astype(jnp.float32)  # (B,H,N,P)
+        dt1 = dt[:, 0]  # (B,H)
+        da = jnp.exp(dt1 * A[None, :])  # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhnp", dt1, bmat[:, 0], xh[:, 0])
+        h_new = h_prev * da[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0], h_new)
+        y = y + xh[:, 0] * p["D"][None, :, None]
+        y = y.reshape(b, 1, di)
+        new_cache = {"state": h_new.astype(cache["state"].dtype),
+                     "conv": new_conv.astype(cache["conv"].dtype)}
+    else:
+        y4, h_last = _ssd_chunked(xh, dt, A, bmat, cmat, p["D"], cfg.chunk)
+        y = y4.reshape(b, s, di)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"state": h_last.astype(cache["state"].dtype),
+                         "conv": new_conv.astype(cache["conv"].dtype)}
+
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = L.rmsnorm_apply(p["ssm_norm"], y)
+    return L.dense_apply(p["out_proj"], y, "ssm/out_proj", sp_cfg), new_cache
+
+
+def init_ssm_cache(cfg: SSMConfig, batch: int, dtype=jnp.float32):
+    return {
+        "state": jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.head_dim), dtype),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_dim), dtype),
+    }

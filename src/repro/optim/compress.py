@@ -1,0 +1,88 @@
+"""Cross-pod gradient compression: the paper's N:M top-k, turned into a
+collective-bandwidth optimization with error feedback.
+
+On a multi-pod mesh the "pod" axis rides the slow inter-pod links.  We
+apply the paper's own primitive — keep the N largest-|g| of every
+M-group — to the *gradients* before the cross-pod all-reduce, carrying
+the pruned residual in an error-feedback buffer (Karimireddy et al.,
+2019) so the compression is unbiased over time.  At 2:8 this cuts
+inter-pod gradient bytes ~4x (values) — the same arithmetic as the
+paper's storage claim, applied to the network instead of DRAM.
+
+Implementation note: under pjit/GSPMD the DP mean is implicit in the
+loss, so to compress *only* the pod hop we split the mean: the train
+step computes per-pod-mean gradients (psum over "data" via the loss),
+then this module sparsifies and psums over "pod" inside shard_map.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.sparsity import SparsityConfig, nm_mask
+
+
+def compress_leaf(g, err, n: int, m: int):
+    """N:M-sparsify g+err along the last axis; returns (sparse, new_err)."""
+    size = g.size
+    if size % m != 0 or g.ndim == 0:
+        return g, err  # tiny/ragged leaves ride uncompressed
+    flat = (g + err).reshape(-1, m)
+    mask = nm_mask(flat, n, m, axis=-1)
+    kept = jnp.where(mask, flat, 0.0)
+    new_err = (flat - kept).reshape(g.shape)
+    return kept.reshape(g.shape), new_err
+
+
+def cross_pod_mean(grads, err_state, mesh: Mesh, grad_pspecs,
+                   sp_cfg: SparsityConfig):
+    """All-reduce gradients across the 'pod' axis with N:M compression.
+
+    The sparse tensors are transmitted in PACKED form — bf16 values
+    (N/M of dense) + uint8 within-group indices — via an all-gather
+    over 'pod', then unpacked and averaged locally.  A psum of the
+    masked-dense tensor would move the zeros too and save nothing;
+    packing is where the paper's N:M arithmetic becomes link bytes:
+    2:8 on fp32 grads -> (2/8)*2B + 1B idx per 8*4B group = 0.156x the
+    all-reduce's ring traffic.  Error feedback keeps it unbiased.
+    """
+    if "pod" not in mesh.axis_names:
+        return grads, err_state
+
+    from repro.core.sparsity import nm_pack, nm_unpack_n
+
+    n, m = sp_cfg.n, sp_cfg.m
+    n_pods = mesh.shape["pod"]
+
+    def body(g_tree, e_tree):
+        out_g, out_e = [], []
+        flat_g, tdef = jax.tree_util.tree_flatten(g_tree)
+        flat_e = jax.tree_util.tree_flatten(e_tree)[0]
+        for g, e in zip(flat_g, flat_e):
+            if g.size % m or g.ndim == 0:
+                out_g.append(jax.lax.pmean(g, "pod"))
+                out_e.append(e)
+                continue
+            kept, new_e = compress_leaf(g, e, n, m)
+            # pack: bf16 values + u8 indices, gather over the pod links
+            vals, idx = nm_pack(kept.reshape(-1, m).astype(jnp.bfloat16),
+                                n, m, axis=-1)
+            vals_all = jax.lax.all_gather(vals, "pod")   # (P, G, n)
+            idx_all = jax.lax.all_gather(idx, "pod")
+            dense = jax.vmap(
+                lambda v, i: nm_unpack_n(v, i, n, m, axis=-1))(
+                    vals_all, idx_all)
+            mean = dense.astype(jnp.float32).mean(0).reshape(g.shape)
+            out_g.append(mean)
+            out_e.append(new_e)
+        return (jax.tree_util.tree_unflatten(tdef, out_g),
+                jax.tree_util.tree_unflatten(tdef, out_e))
+
+    specs = jax.tree.map(lambda ps: ps, grad_pspecs,
+                         is_leaf=lambda x: isinstance(x, P))
+    fn = shard_map(body, mesh=mesh, in_specs=(specs, specs),
+                   out_specs=(specs, specs), check_rep=False)
+    return fn(grads, err_state)

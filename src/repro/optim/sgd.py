@@ -1,0 +1,106 @@
+"""WUVE analogue: mixed-precision momentum SGD with SR-STE decay and
+N:M sparse weight *pre-generation* (paper Fig. 11c).
+
+State per parameter:
+  master   fp32  (sharded like the param)
+  momentum fp32
+plus a bf16 *compute copy* emitted by every update — the AMP dataflow:
+the optimizer is the only consumer of fp32; FF/BP load the bf16 (and,
+on TPU, N:M-packed) weights written at WU time, so forward passes never
+touch fp32 and FSDP all-gathers move half the bytes.
+
+The fused Pallas kernel (kernels/fused_update.py) implements the same
+math per tile for the TPU deployment path; this module is the jnp
+formulation that lowers cleanly in the dry-run (identical semantics —
+tests/test_kernels.py pins them together via ref_fused_update).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bdwp
+from repro.core.sparsity import SparsityConfig, nm_mask
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    lr: float = 0.1
+    momentum: float = 0.9
+    weight_decay: float = 5e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.01
+
+
+def lr_schedule(cfg: SGDConfig, step):
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac * cfg.lr + (1 - cfg.min_lr_frac) * cfg.lr \
+        * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_state(params):
+    return {
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        "momentum": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def update(state, grads, opt_cfg: SGDConfig, sp_cfg: SparsityConfig,
+           param_names=None):
+    """One optimizer step. Returns (new_state, compute_params_bf16)."""
+    lr = lr_schedule(opt_cfg, state["step"])
+    names = param_names or _names_of(state["master"])
+
+    def upd(name, w, g, v):
+        g = g.astype(jnp.float32)
+        g = g + opt_cfg.weight_decay * w
+        lshape, off = _logical_shape(name, w.shape)
+        if (not sp_cfg.is_dense and sp_cfg.lam > 0.0
+                and bdwp.should_prune(name, lshape, sp_cfg)
+                and sp_cfg.method in ("srste", "bdwp", "sdwp")):
+            axis = (bdwp.bp_group_axis(lshape) if sp_cfg.method == "sdwp"
+                    else bdwp.ff_group_axis(lshape)) + off
+            mask = nm_mask(w, sp_cfg.n, sp_cfg.m, axis=axis)
+            g = g + sp_cfg.lam * jnp.where(mask, 0.0, w)
+        v_new = opt_cfg.momentum * v + g
+        w_new = w - lr * v_new
+        return w_new, v_new
+
+    flat_w, tdef = jax.tree_util.tree_flatten(state["master"])
+    flat_g = jax.tree_util.tree_flatten(grads)[0]
+    flat_v = jax.tree_util.tree_flatten(state["momentum"])[0]
+    outs = [upd(n, w, g, v) for n, w, g, v in zip(names, flat_w, flat_g, flat_v)]
+    new_master = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+    new_mom = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+    # pre-generation: the bf16 compute copy written at WU time (Fig. 11c)
+    compute = jax.tree.map(lambda w: w.astype(jnp.bfloat16), new_master)
+    new_state = {"master": new_master, "momentum": new_mom,
+                 "step": state["step"] + 1}
+    return new_state, compute
+
+
+_STACKED_PREFIXES = ("blocks/", "enc_blocks/", "dec_blocks/")
+
+
+def _logical_shape(name: str, shape):
+    """Per-layer shape as the model sees it: scanned param trees carry a
+    leading 'layer' axis that must not count as a contraction axis."""
+    if any(name.startswith(p) or f"/{p}" in name for p in _STACKED_PREFIXES):
+        return tuple(shape[1:]), 1
+    return tuple(shape), 0
+
+
+def _names_of(tree):
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return ["/".join(str(getattr(k, "key", k)) for k in path)
+            for path, _ in paths]

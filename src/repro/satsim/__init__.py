@@ -1,0 +1,19 @@
+"""satsim — cycle-accurate performance/resource model of the paper's SAT
+accelerator (STCE + WUVE + SORE on a Xilinx VCU1525 @ 200 MHz).
+
+This re-implements the paper's own evaluation methodology ("a
+cycle-accurate performance model cross-validated with RTL simulation",
+Sec. VI-A) so the FPGA-side results — Fig. 14/15/16/17, Tables IV/V —
+reproduce on CPU.  The TPU port (kernels/, launch/) is the deployment
+path; satsim is the paper-fidelity path.
+"""
+
+from repro.satsim.arch import SATConfig, STCE, WUVE, SORE
+from repro.satsim.model import (layer_time, model_step_time,
+                                runtime_throughput, scale_sweep,
+                                train_step_report)
+from repro.satsim.workloads import paper_model_layers
+
+__all__ = ["SATConfig", "STCE", "WUVE", "SORE", "layer_time",
+           "model_step_time", "runtime_throughput", "scale_sweep",
+           "train_step_report", "paper_model_layers"]

@@ -1,0 +1,176 @@
+"""SAT hardware architecture model: geometry, clocks, engines, resources.
+
+Numbers are taken from the paper:
+  * STCE: 32x32 USPE systolic array, FP16 mul + FP32 acc, both pipelined
+    3 stages; value-serial N:M groups (N cycles per group); dense MatMul
+    decomposed into 2:2 groups (2 cycles each).  (Sec. IV-B, Fig. 7)
+  * WS / OS dataflows via the flexible interconnect.  (Sec. IV-C, Fig. 8)
+  * Interleave mapping: 3 independent dot products fill the 3-stage
+    accumulation loop -> 3x OS throughput.  (Sec. V-A, Fig. 10)
+  * WUVE: 32 lanes of mixed-precision momentum SGD.  (Sec. IV-E)
+  * SORE: 32 lanes, top-K sorter, M cycles per M-group.  (Sec. IV-F)
+  * 200 MHz on XCVU9P; DDR4 off-chip at 25.6 GB/s.  (Table IV)
+  * Peak: dense 409.6 GOPS, 2:8 sparse 1638.4 GOPS.  (Table IV)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class SATConfig:
+    array: int = 32              # STCE is array x array USPEs
+    freq_hz: float = 200e6
+    pipe_stages: int = 3         # multiplier and adder pipeline depth
+    interleave: bool = True      # Fig. 10(c) mapping
+    n: int = 2                   # N:M sparse mode of the built bitstream
+    m: int = 8
+    ddr_bw: float = 25.6e9       # bytes/s
+    wuve_lanes: int = 32
+    sore_lanes: int = 32
+    double_buffer: bool = True   # overlap DDR transfer with compute
+    weight_bytes: int = 2        # FP16 compute weights
+    act_bytes: int = 2
+    master_bytes: int = 4        # FP32 master copy (WUVE traffic)
+    idx_bits: int = 4            # per kept element (ceil(log2 M) <= 4)
+
+    @property
+    def pes(self) -> int:
+        return self.array * self.array
+
+    @property
+    def dense_peak_ops(self) -> float:
+        """GOPS peak for dense ops: each USPE does a 2:2 group (2 MACs)
+        in 2 cycles -> 1 MAC/cycle/PE -> 2 OPs/cycle/PE."""
+        return self.pes * 2.0 * self.freq_hz
+
+    @property
+    def sparse_peak_ops(self) -> float:
+        """Effective OPS counting skipped zeros: an N:M group (M MACs of
+        dense-equivalent work) completes in N cycles -> M/N x dense."""
+        return self.dense_peak_ops * self.m / self.n
+
+
+DEFAULT = SATConfig()
+
+
+# ---------------------------------------------------------------------------
+# Engines
+# ---------------------------------------------------------------------------
+
+
+class STCE:
+    """N:M sparse tensor computing engine: cycle counts for one MatMul."""
+
+    def __init__(self, cfg: SATConfig = DEFAULT):
+        self.cfg = cfg
+
+    def ws_cycles(self, b: int, k: int, f: int, *, sparse: bool) -> int:
+        """Weight-stationary: compact weight groups preloaded per (K,F)
+        tile; B activation rows stream through (Fig. 8a/c).
+
+        A tile covers ``array`` groups of the contraction dim x ``array``
+        output columns.  Sparse: group spans M logical weights, N cycles
+        per row.  Dense: 2:2 groups, 2 cycles per row.
+        """
+        c = self.cfg
+        g_len = c.m if sparse else 2              # logical K per group
+        cpg = c.n if sparse else 2                # cycles per group-row
+        k_tiles = math.ceil(k / (g_len * c.array))
+        f_tiles = math.ceil(f / c.array)
+        preload = c.array                         # pipelined preload
+        drain = 2 * c.array + c.pipe_stages       # array skew + pipes
+        per_tile = preload + b * cpg + drain
+        return k_tiles * f_tiles * per_tile
+
+    def os_cycles(self, b: int, k: int, f: int, *, sparse: bool) -> int:
+        """Output-stationary: each (B,F) tile accumulates over K in place
+        (Fig. 8b/d).  Without interleave mapping the 3-stage accumulation
+        loop stalls the PE to 1 op per ``pipe_stages`` cycles (Fig. 10b);
+        interleaving 3 independent dot products recovers full rate."""
+        c = self.cfg
+        g_len = c.m if sparse else 2
+        cpg = c.n if sparse else 2
+        groups = math.ceil(k / g_len)
+        stall = 1 if c.interleave else c.pipe_stages
+        b_tiles = math.ceil(b / c.array)
+        f_tiles = math.ceil(f / c.array)
+        fill_drain = 2 * c.array + c.pipe_stages
+        per_tile = groups * cpg * stall + fill_drain
+        return b_tiles * f_tiles * per_tile
+
+    def best_cycles(self, b: int, k: int, f: int, *, sparse: bool):
+        """(dataflow, cycles) with the RWG per-layer selection (Fig. 12)."""
+        ws = self.ws_cycles(b, k, f, sparse=sparse)
+        os_ = self.os_cycles(b, k, f, sparse=sparse)
+        return ("WS", ws) if ws <= os_ else ("OS", os_)
+
+
+class WUVE:
+    """Weight-update vector engine: 32 lanes, 1 param/cycle/lane."""
+
+    def __init__(self, cfg: SATConfig = DEFAULT):
+        self.cfg = cfg
+
+    def cycles(self, n_params: int) -> int:
+        return math.ceil(n_params / self.cfg.wuve_lanes)
+
+    def ddr_bytes(self, n_params: int) -> int:
+        """Read FP32 master+momentum + FP16 grads; write FP32 back."""
+        c = self.cfg
+        return n_params * (2 * c.master_bytes + 2 + 2 * c.master_bytes)
+
+
+class SORE:
+    """Sparse online reduction engine: top-K sorter per lane, streaming
+    one element per cycle -> a group of M costs M cycles per lane."""
+
+    def __init__(self, cfg: SATConfig = DEFAULT):
+        self.cfg = cfg
+
+    def cycles(self, n_params: int) -> int:
+        return math.ceil(n_params / self.cfg.sore_lanes)
+
+    def packed_bytes(self, n_params: int) -> int:
+        """Compact (values + indexes) output size."""
+        c = self.cfg
+        kept = n_params * c.n // c.m
+        return kept * c.weight_bytes + math.ceil(kept * c.idx_bits / 8)
+
+
+# ---------------------------------------------------------------------------
+# FPGA resource model (Fig. 14 reproduction)
+# ---------------------------------------------------------------------------
+
+# Per-USPE base costs calibrated against Table III: STCE (32x32 = 1024
+# USPEs) = 389K LUT, 589K FF, 1024 DSP at 2:8.
+_USPE_BASE_LUT = 280.0       # dense PE: mul+add control
+_USPE_BASE_FF = 260.0        # dense PE pipeline registers
+_USPE_DSP = 1.0
+
+
+def uspe_resources(n: int, m: int, dense: bool = False) -> dict:
+    """LUT/FF/DSP of one USPE supporting N:M (or a dense-only PE).
+
+    The paper reports (Fig. 14, relative to a 4x4 dense array):
+      LUT x1.1 / x1.2 / x1.3   at 2:4 / 2:8 / 2:16
+      FF  x1.7 / x2.2 / x3.3
+    The FF growth is the M-deep west-input register file + index regs;
+    LUT growth is the sparse index decode mux.
+    """
+    if dense:
+        return {"lut": _USPE_BASE_LUT, "ff": _USPE_BASE_FF, "dsp": _USPE_DSP}
+    idx_bits = max(1, math.ceil(math.log2(m)))
+    lut = _USPE_BASE_LUT * (1.0 + 0.05 * idx_bits)        # decode mux
+    ff = _USPE_BASE_FF * (1.0 + 0.30 * (m / 2) * (2 / max(n, 1)) * 0.5) \
+        + 16.0 * m + 8.0 * idx_bits * n                   # group regs
+    return {"lut": lut, "ff": ff, "dsp": _USPE_DSP}
+
+
+def stce_resources(cfg: SATConfig, dense: bool = False,
+                   array: int | None = None) -> dict:
+    a = array or cfg.array
+    per = uspe_resources(cfg.n, cfg.m, dense=dense)
+    return {k: v * a * a for k, v in per.items()}

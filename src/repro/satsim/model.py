@@ -1,0 +1,193 @@
+"""SAT training-time model: layers x stages x engines -> seconds.
+
+Reproduces the paper's evaluation pipeline:
+  Fig. 15 — per-batch and TTA speedup of {SR-STE, SDGP, BDWP} vs dense,
+  Fig. 16 — ResNet18 layer-wise runtime breakdown,
+  Fig. 17 — throughput scaling vs array size x DDR bandwidth,
+  Table IV — runtime/peak throughput + energy efficiency vs CPU/GPU.
+
+Method semantics per stage (Fig. 3):
+  dense : FF dense,    BP dense,   WU dense
+  srste : FF sparse,   BP dense,   WU dense   (weights pruned along C_i)
+  sdgp  : FF dense,    BP sparse,  WU dense   (output grads pruned)
+  sdwp  : FF dense,    BP sparse,  WU dense   (weights pruned along C_o)
+  bdwp  : FF sparse,   BP sparse,  WU dense   (the paper's contribution)
+
+DDR traffic per stage (double-buffered: stage time = max(compute, DDR)
+per Sec. IV-A; Fig. 16's non-overlapped variant adds them instead).
+Pre-generation (Fig. 11c) moves SORE into the WU stage pipeline and
+makes FF/BP load *packed* weights; without it FF/BP load dense weights
+and pay SORE latency inline (Fig. 11b).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List
+
+from repro.satsim.arch import DEFAULT, SATConfig, SORE, STCE, WUVE
+from repro.satsim.workloads import MatMulLayer, model_params
+
+_METHOD_STAGES = {
+    "dense": (False, False),
+    "srste": (True, False),
+    "sdgp": (False, True),
+    "sdwp": (False, True),
+    "bdwp": (True, True),
+}
+
+
+@dataclasses.dataclass
+class StageTime:
+    stage: str
+    dataflow: str
+    compute_s: float
+    ddr_s: float
+    sore_s: float = 0.0
+
+    @property
+    def overlapped(self) -> float:
+        return max(self.compute_s + self.sore_s, self.ddr_s)
+
+    @property
+    def serial(self) -> float:
+        return self.compute_s + self.sore_s + self.ddr_s
+
+
+def _packed_weight_bytes(cfg: SATConfig, n_w: int) -> int:
+    kept = n_w * cfg.n // cfg.m
+    return kept * cfg.weight_bytes + math.ceil(kept * cfg.idx_bits / 8)
+
+
+def layer_time(layer: MatMulLayer, method: str = "bdwp",
+               cfg: SATConfig = DEFAULT, *, pregen: bool = True
+               ) -> List[StageTime]:
+    """Cycle/DDR model for one layer's FF, BP, WU."""
+    stce, sore = STCE(cfg), SORE(cfg)
+    ff_sp, bp_sp = _METHOD_STAGES[method]
+    ff_sp &= layer.prunable
+    bp_sp &= layer.prunable
+    rows, k, f = layer.rows, layer.k, layer.f
+    n_w = k * f
+    hz = cfg.freq_hz
+    out: List[StageTime] = []
+
+    # pre-generation only applies when *weights* are pruned (srste/sdwp/
+    # bdwp); SDGP prunes gradients that exist only inside BP.
+    can_pregen = pregen and method in ("srste", "sdwp", "bdwp")
+
+    # ---- FF: (rows,K) @ (K,F) ----
+    df, cyc = stce.best_cycles(rows, k, f, sparse=ff_sp)
+    w_bytes = (_packed_weight_bytes(cfg, n_w) if (ff_sp and can_pregen)
+               else n_w * cfg.weight_bytes)
+    ddr = (rows * k * cfg.act_bytes + w_bytes + rows * f * cfg.act_bytes)
+    sore_s = 0.0 if (not ff_sp or can_pregen) else sore.cycles(n_w) / hz
+    out.append(StageTime("ff", df, cyc / hz, ddr / cfg.ddr_bw, sore_s))
+
+    # ---- BP: (rows,F) @ (F,K) ----
+    df, cyc = stce.best_cycles(rows, f, k, sparse=bp_sp)
+    w_bytes = (_packed_weight_bytes(cfg, n_w) if (bp_sp and can_pregen)
+               else n_w * cfg.weight_bytes)
+    ddr = (rows * f * cfg.act_bytes + w_bytes + rows * k * cfg.act_bytes)
+    sore_s = 0.0 if (not bp_sp or can_pregen) else sore.cycles(n_w) / hz
+    out.append(StageTime("bp", df, cyc / hz, ddr / cfg.ddr_bw, sore_s))
+
+    # ---- WU: (K,rows) @ (rows,F) — always dense (Alg. 1 line 9) ----
+    df, cyc = stce.best_cycles(k, rows, f, sparse=False)
+    ddr = (rows * k * cfg.act_bytes + rows * f * cfg.act_bytes
+           + n_w * cfg.weight_bytes)
+    # pre-generation: SORE packs the fresh weights inside the WU/optimizer
+    # pipeline (fine-grained overlap -> no added latency, Fig. 11c), and
+    # the packed copies are what FF/BP will stream next iteration.
+    out.append(StageTime("wu", df, cyc / hz, ddr / cfg.ddr_bw, 0.0))
+    return out
+
+
+def model_step_time(layers: List[MatMulLayer], method: str = "bdwp",
+                    cfg: SATConfig = DEFAULT, *, pregen: bool = True,
+                    overlap: bool = True) -> dict:
+    """One training step (single batch) end to end, incl. WUVE."""
+    wuve = WUVE(cfg)
+    total = 0.0
+    per_stage = {"ff": 0.0, "bp": 0.0, "wu": 0.0}
+    for layer in layers:
+        for st in layer_time(layer, method, cfg, pregen=pregen):
+            t = st.overlapped if overlap else st.serial
+            total += t
+            per_stage[st.stage] += t
+    n_params = model_params(layers)
+    wuve_s = max(wuve.cycles(n_params) / cfg.freq_hz,
+                 wuve.ddr_bytes(n_params) / cfg.ddr_bw)
+    total += wuve_s
+    macs = {
+        "dense": 3 * sum(l.macs for l in layers),
+        method: sum(
+            l.macs * ((cfg.n / cfg.m if (_METHOD_STAGES[method][0] and l.prunable) else 1.0)
+                      + (cfg.n / cfg.m if (_METHOD_STAGES[method][1] and l.prunable) else 1.0)
+                      + 1.0)
+            for l in layers),
+    }
+    return {"total_s": total, "per_stage": per_stage, "wuve_s": wuve_s,
+            "macs": macs, "n_params": n_params}
+
+
+def train_step_report(layers: List[MatMulLayer], method: str,
+                      cfg: SATConfig = DEFAULT, *, pregen: bool = True
+                      ) -> List[dict]:
+    """Per-layer breakdown (Fig. 16): stage times + engine attribution."""
+    rows = []
+    sore = SORE(cfg)
+    for layer in layers:
+        sts = layer_time(layer, method, cfg, pregen=pregen)
+        rows.append({
+            "layer": layer.name,
+            "dims": (layer.rows, layer.k, layer.f),
+            "prunable": layer.prunable,
+            **{f"{st.stage}_s": st.overlapped for st in sts},
+            **{f"{st.stage}_df": st.dataflow for st in sts},
+            "sore_s": sore.cycles(layer.k * layer.f) / cfg.freq_hz,
+            "total_s": sum(st.overlapped for st in sts),
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Throughput / energy (Table IV, Fig. 17)
+# ---------------------------------------------------------------------------
+
+# Measured average power from the paper (Table IV), used to report
+# energy efficiency of modelled runtimes.
+POWER_DENSE_W = 20.73
+POWER_SPARSE_W = 24.15
+POWER_AVG_W = 22.38
+
+
+def runtime_throughput(layers: List[MatMulLayer], method: str,
+                       cfg: SATConfig = DEFAULT) -> dict:
+    """Dense-equivalent OPs per second the accelerator sustains on this
+    workload (the paper counts dense-equivalent work for sparse runs —
+    'Runtime Throughput' in Table IV)."""
+    rep = model_step_time(layers, method, cfg)
+    dense_ops = 2.0 * rep["macs"]["dense"]
+    gops = dense_ops / rep["total_s"]
+    power = POWER_SPARSE_W if method != "dense" else POWER_DENSE_W
+    return {"gops": gops / 1e9, "total_s": rep["total_s"],
+            "gops_per_w": gops / 1e9 / power,
+            "peak_dense_gops": cfg.dense_peak_ops / 1e9,
+            "peak_sparse_gops": cfg.sparse_peak_ops / 1e9}
+
+
+def scale_sweep(layers: List[MatMulLayer], method: str,
+                arrays=(16, 32, 64, 128),
+                bandwidths=(25.6e9, 102.4e9, 409.6e9)) -> List[dict]:
+    """Fig. 17: runtime throughput when scaling USPE count x DDR BW."""
+    out = []
+    for bw in bandwidths:
+        for a in arrays:
+            cfg = dataclasses.replace(DEFAULT, array=a, ddr_bw=bw)
+            r = runtime_throughput(layers, method, cfg)
+            out.append({"array": a, "bw_gbs": bw / 1e9,
+                        "tops": r["gops"] / 1e3,
+                        "peak_sparse_tops": cfg.sparse_peak_ops / 1e12})
+    return out

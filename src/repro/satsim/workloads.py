@@ -1,0 +1,134 @@
+"""Layer shape tables (im2col'd MatMul dims) for the paper's five
+benchmark models — Table I — used by the SAT cycle model.
+
+Each layer is (name, rows, k, f, prunable):
+  rows = B * H_out * W_out (conv, im2col) or B * seq (ViT)
+  k    = kh*kw*C_in (conv) or F_in (linear)
+  f    = C_out / F_out
+The first conv / patch-embed layer is excluded from N:M pruning
+(Sec. VI-A), matching ``core/bdwp.should_prune``'s ``head0`` rule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+@dataclasses.dataclass(frozen=True)
+class MatMulLayer:
+    name: str
+    rows: int
+    k: int
+    f: int
+    prunable: bool = True
+
+    @property
+    def macs(self) -> int:
+        return self.rows * self.k * self.f
+
+
+def _conv(name, batch, hw, kh, cin, cout, stride=1, prunable=True):
+    out_hw = hw // stride
+    return MatMulLayer(name, batch * out_hw * out_hw, kh * kh * cin, cout,
+                       prunable)
+
+
+def resnet9_layers(batch=512) -> List[MatMulLayer]:
+    L = [
+        _conv("head0", batch, 32, 3, 3, 64, prunable=False),
+        _conv("conv1", batch, 32, 3, 64, 128),
+        # pool -> 16
+        _conv("res1a", batch, 16, 3, 128, 128),
+        _conv("res1b", batch, 16, 3, 128, 128),
+        _conv("conv2", batch, 16, 3, 128, 256),
+        # pool -> 8
+        _conv("conv3", batch, 8, 3, 256, 512),
+        # pool -> 4
+        _conv("res2a", batch, 4, 3, 512, 512),
+        _conv("res2b", batch, 4, 3, 512, 512),
+        MatMulLayer("fc", batch, 512, 10, prunable=False),
+    ]
+    return L
+
+
+def vgg19_layers(batch=512, num_classes=100) -> List[MatMulLayer]:
+    spec = [(32, 3, 64, False), (32, 64, 64, True),
+            (16, 64, 128, True), (16, 128, 128, True),
+            (8, 128, 256, True)] + [(8, 256, 256, True)] * 3 + \
+           [(4, 256, 512, True)] + [(4, 512, 512, True)] * 3 + \
+           [(2, 512, 512, True)] * 4
+    out = []
+    for i, (hw, cin, cout, prunable) in enumerate(spec):
+        name = "head0" if not prunable else f"conv{i}"
+        out.append(_conv(name, batch, hw, 3, cin, cout, prunable=prunable))
+    out.append(MatMulLayer("fc", batch, 512, num_classes, prunable=False))
+    return out
+
+
+def resnet18_layers(batch=512, image=64, num_classes=200) -> List[MatMulLayer]:
+    L = [_conv("head0", batch, image, 7, 3, 64, stride=2, prunable=False)]
+    hw = image // 4  # stride-2 head + maxpool
+    cin = 64
+    for si, cout in enumerate((64, 128, 256, 512)):
+        for bi in range(2):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            L.append(_conv(f"s{si}b{bi}/c1", batch, hw, 3, cin, cout, stride))
+            hw_out = hw // stride
+            L.append(_conv(f"s{si}b{bi}/c2", batch, hw_out, 3, cout, cout))
+            if cin != cout:
+                L.append(_conv(f"s{si}b{bi}/proj", batch, hw, 1, cin, cout,
+                               stride))
+            cin, hw = cout, hw_out
+    L.append(MatMulLayer("fc", batch, 512, num_classes, prunable=False))
+    return L
+
+
+def resnet50_layers(batch=256, image=224, num_classes=1000) -> List[MatMulLayer]:
+    L = [_conv("head0", batch, image, 7, 3, 64, stride=2, prunable=False)]
+    hw = image // 4
+    cin = 64
+    blocks = ((3, 64), (4, 128), (6, 256), (3, 512))
+    for si, (n_blocks, cout) in enumerate(blocks):
+        cexp = cout * 4
+        for bi in range(n_blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            L.append(_conv(f"s{si}b{bi}/c1", batch, hw, 1, cin, cout))
+            L.append(_conv(f"s{si}b{bi}/c2", batch, hw, 3, cout, cout, stride))
+            hw_out = hw // stride
+            L.append(_conv(f"s{si}b{bi}/c3", batch, hw_out, 1, cout, cexp))
+            if cin != cexp:
+                L.append(_conv(f"s{si}b{bi}/proj", batch, hw, 1, cin, cexp,
+                               stride))
+            cin, hw = cexp, hw_out
+    L.append(MatMulLayer("fc", batch, 2048, num_classes, prunable=False))
+    return L
+
+
+def vit_layers(batch=512, d=384, d_ff=1536, n_layers=7, seq=65,
+               num_classes=100) -> List[MatMulLayer]:
+    rows = batch * seq
+    L = [MatMulLayer("patch_frontend", rows, 48, d, prunable=False)]
+    for i in range(n_layers):
+        for nm in ("q_proj", "k_proj", "v_proj", "o_proj"):
+            L.append(MatMulLayer(f"block{i}/{nm}", rows, d, d))
+        L.append(MatMulLayer(f"block{i}/w_in", rows, d, d_ff))
+        L.append(MatMulLayer(f"block{i}/w_out", rows, d_ff, d))
+    L.append(MatMulLayer("head", batch, d, num_classes, prunable=False))
+    return L
+
+
+def paper_model_layers(name: str, batch: int | None = None):
+    table = {
+        "resnet9": (resnet9_layers, 512),
+        "vit": (vit_layers, 512),
+        "vgg19": (vgg19_layers, 512),
+        "resnet18": (resnet18_layers, 512),
+        "resnet50": (resnet50_layers, 256),
+    }
+    fn, default_b = table[name]
+    return fn(batch or default_b)
+
+
+def model_params(layers: List[MatMulLayer]) -> int:
+    return sum(l.k * l.f for l in layers)

@@ -1,0 +1,264 @@
+"""Logical-axis -> mesh-axis rule tables (MaxText-style GSPMD planning).
+
+One model definition + one spec tree serve every (shape x mesh) cell:
+the rule table chosen per workload maps each logical axis to mesh axes.
+
+Workloads:
+  TRAIN       — FSDP("data") x TP("model"); pure DP across "pod"
+                (hierarchical: params replicated across pods, weight
+                all-gathers stay intra-pod, grad sync crosses pods once).
+  SERVE_BATCH — prefill/decode with real batch: TP("model") weights
+                (replicated over "data" — no per-step FSDP gathers),
+                batch over ("pod","data"), KV cache sequence over "model"?
+                no — cache follows batch; attention stays local.
+  SERVE_LONG  — batch=1, 500k context: weights TP("model"), the KV/global
+                cache sequence-sharded over "data" => distributed
+                flash-decoding (partial softmax + small all-reduces).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple, or None=replicated)
+TRAIN_RULES = {
+    "embed": "data",      # FSDP: shard the width axis of every weight
+    "mlp": "model",       # Megatron TP
+    "heads": "model",
+    "kv": "model",
+    "vocab": "model",
+    "expert": "model",    # expert parallelism
+    "layer": None,
+}
+
+SERVE_BATCH_RULES = {
+    "embed": None,
+    "mlp": "model",
+    "heads": "model",
+    "kv": "model",
+    "vocab": "model",
+    "expert": "model",
+    "layer": None,
+}
+
+SERVE_LONG_RULES = dict(SERVE_BATCH_RULES)
+
+
+def rules_for(shape_kind: str):
+    if shape_kind == "train":
+        return TRAIN_RULES
+    return SERVE_BATCH_RULES
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def spec_to_pspec(axes: tuple, rules: dict, shape=None,
+                  mesh: Optional[Mesh] = None) -> P:
+    """Logical axes -> PartitionSpec with two production guards:
+
+    * dedupe — a mesh axis may appear once per spec (stacked MoE weights
+      map both "expert" and "mlp" to "model": first occurrence wins,
+      later ones fall back to replicated);
+    * divisibility — with ``shape`` + ``mesh`` given, any dim the mesh
+      axis doesn't divide evenly is replicated instead (e.g. hymba's
+      fused ssm in_proj output of 6482).
+    """
+    entries, used = [], set()
+    for i, ax in enumerate(axes):
+        target = rules.get(ax) if ax is not None else None
+        if target is not None:
+            tgt_axes = target if isinstance(target, tuple) else (target,)
+            if any(t in used for t in tgt_axes):
+                target = None
+            elif shape is not None and mesh is not None:
+                size = 1
+                for t in tgt_axes:
+                    size *= mesh.shape.get(t, 1)
+                if shape[i] % size:
+                    target = None
+            if target is not None:
+                used.update(tgt_axes)
+        entries.append(target)
+    return P(*entries)
+
+
+def params_pspecs(specs_tree, rules: dict, params=None,
+                  mesh: Optional[Mesh] = None):
+    """Map a logical-axis spec tree to a PartitionSpec tree.
+
+    params (optional): matching tree of arrays/ShapeDtypeStructs enabling
+    the divisibility fallback; mesh required alongside."""
+    if params is None:
+        return jax.tree.map(lambda ax: spec_to_pspec(ax, rules), specs_tree,
+                            is_leaf=_is_axes)
+    flat_s, tdef = jax.tree_util.tree_flatten(specs_tree, is_leaf=_is_axes)
+    flat_p = jax.tree_util.tree_flatten(params)[0]
+    out = [spec_to_pspec(ax, rules, shape=tuple(p.shape), mesh=mesh)
+           for ax, p in zip(flat_s, flat_p)]
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def params_shardings(specs_tree, mesh: Mesh, rules: dict, params=None):
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps),
+                        params_pspecs(specs_tree, rules, params, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_axes(mesh: Mesh):
+    """DP axes for the activation batch dimension on this mesh."""
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# Input / cache PartitionSpecs per workload
+# ---------------------------------------------------------------------------
+
+
+def train_input_pspecs(input_specs: dict, mesh: Mesh):
+    dp = batch_axes(mesh)
+    out = {}
+    for name, leaf in input_specs.items():
+        if name in ("tokens", "labels"):
+            out[name] = P(dp, None)
+        elif name in ("frames", "prefix_embeds"):
+            out[name] = P(dp, None, None)
+        else:
+            out[name] = P()
+    return out
+
+
+def serve_input_pspecs(input_specs: dict, mesh: Mesh, *, long_context: bool):
+    """decode/prefill inputs; caches handled leaf-by-leaf by rank/name."""
+    dp = batch_axes(mesh)
+    bp = None if long_context else dp
+
+    tp = mesh.shape.get("model", 1)
+
+    def cache_spec(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        rank = len(leaf.shape)
+        # rank discriminates stacked (leading scan-layer dim) vs the
+        # unstacked prelude cache (deepseek's dense first layer)
+        if name in ("k", "v"):  # (L, B, S, Hkv, D) or (B, S, Hkv, D)
+            seq_ax = "data" if long_context else None
+            head_ax = "model" if leaf.shape[rank - 2] % tp == 0 else None
+            tail = (bp, seq_ax, head_ax, None)
+            return P(*(((None,) + tail) if rank == 5 else tail))
+        if name in ("ckv", "kpe"):  # (L, B, S, dim) or (B, S, dim)
+            seq_ax = "data" if long_context else None
+            tail = (bp, seq_ax, None)
+            return P(*(((None,) + tail) if rank == 4 else tail))
+        if name == "state":  # (L, B, H, N, Pd) or (B, H, N, Pd)
+            head_ax = "model" if leaf.shape[rank - 3] % tp == 0 else None
+            tail = (bp, head_ax, None, None)
+            return P(*(((None,) + tail) if rank == 5 else tail))
+        if name == "conv":  # (L, B, K-1, C) or (B, K-1, C)
+            ch_ax = "model" if leaf.shape[rank - 1] % tp == 0 else None
+            tail = (bp, None, ch_ax)
+            return P(*(((None,) + tail) if rank == 4 else tail))
+        if name == "pos":
+            return P() if rank == 0 else P(None)
+        return P(*([None] * rank))
+
+    out = {}
+    for name, leaf in input_specs.items():
+        if name == "cache":
+            out[name] = jax.tree_util.tree_map_with_path(cache_spec, leaf)
+        elif name == "token":
+            out[name] = P(bp, None)
+        elif name == "tokens":
+            out[name] = P(bp, None)
+        elif name in ("frames", "prefix_embeds", "enc_out"):
+            out[name] = P(bp, None, None)
+        elif name == "pos":
+            out[name] = P()
+        else:
+            out[name] = P()
+    return out
+
+
+def constrain(x, mesh: Mesh, *axes):
+    """with_sharding_constraint helper tolerant of absent mesh axes."""
+    fixed = []
+    for ax in axes:
+        if ax is None:
+            fixed.append(None)
+        elif isinstance(ax, tuple):
+            sub = tuple(a for a in ax if a in mesh.axis_names)
+            fixed.append(sub if sub else None)
+        else:
+            fixed.append(ax if ax in mesh.axis_names else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fixed)))
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding context
+# ---------------------------------------------------------------------------
+#
+# Without explicit activation constraints GSPMD's propagation is free to
+# replicate the token batch and shard hidden dims over "data" instead —
+# which it *does* for these models (full-batch activation all-reduces,
+# ~TB-scale per-chip traffic).  The step builders enter this context at
+# trace time; model code calls ``act()`` at block boundaries and on TP
+# internals (FFN hidden, attention heads, MoE expert dim).  ``BATCH``
+# resolves to the workload's data-parallel axes; when no context is
+# active (unit tests, single-device examples) everything is a no-op.
+
+import contextlib
+
+BATCH = "__batch__"  # sentinel: the workload's DP axes tuple
+SEQ = "__seq__"      # sentinel: sequence dim — "model" under sequence
+#                      parallelism (halves TP traffic: AR -> RS+AG and
+#                      norms/residuals run seq-sharded), else replicated
+
+_ACT_CTX = {"mesh": None, "dp": None, "sp": False}
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Optional[Mesh], dp, sp: bool = False):
+    """dp: tuple of mesh axes carrying the batch dim (or None).
+    sp: enable sequence parallelism over the "model" axis."""
+    old = dict(_ACT_CTX)
+    _ACT_CTX.update(mesh=mesh, dp=dp, sp=sp)
+    try:
+        yield
+    finally:
+        _ACT_CTX.update(old)
+
+
+def act(x, *axes):
+    """Constrain an activation under the ambient context.
+
+    ``axes`` uses logical names: BATCH -> context dp axes, "model"/"data"
+    -> mesh axes, None -> replicated.  No-op without an active context or
+    when a named dim doesn't divide evenly (constraint would be invalid).
+    """
+    mesh = _ACT_CTX["mesh"]
+    if mesh is None:
+        return x
+    dp = _ACT_CTX["dp"]
+    fixed = []
+    for i, ax in enumerate(axes):
+        if ax is SEQ:
+            ax = "model" if _ACT_CTX["sp"] else None
+        ax = dp if ax is BATCH else ax
+        if ax is None:
+            fixed.append(None)
+            continue
+        sub = tuple(a for a in (ax if isinstance(ax, tuple) else (ax,))
+                    if a in mesh.axis_names)
+        size = 1
+        for a in sub:
+            size *= mesh.shape[a]
+        if not sub or x.shape[i] % size:
+            fixed.append(None)
+        else:
+            fixed.append(sub if len(sub) > 1 else sub[0])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fixed)))

@@ -1,0 +1,82 @@
+"""Fault tolerance & straggler mitigation for the training loop.
+
+At 1000+-node scale three things kill runs: crashed hosts, slow hosts
+and lost work.  The pieces here:
+
+  * StragglerMonitor — per-step wall-time EWMA + deviation tracking;
+    flags steps slower than ``threshold x`` the running mean.  On a real
+    cluster the flag feeds the scheduler (evict + restart from the last
+    checkpoint); here it drives the trainer's logging and tests.
+  * Heartbeat — a JSON liveness file written every step; an external
+    watchdog (launch/train.py --watchdog) restarts the process from the
+    latest checkpoint when the heartbeat goes stale.
+  * recover_or_init — the restart path: restore the newest checkpoint
+    under the *current* mesh (elastic: the checkpoint may come from a
+    different device count) or fall back to fresh init.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Optional
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 2.0, ewma: float = 0.9,
+                 warmup: int = 3):
+        self.threshold = threshold
+        self.alpha = ewma
+        self.warmup = warmup
+        self.mean: Optional[float] = None
+        self.count = 0
+        self.flagged = []
+
+    def record(self, step: int, seconds: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.count += 1
+        if self.mean is None:
+            self.mean = seconds
+            return False
+        is_straggler = (self.count > self.warmup
+                        and seconds > self.threshold * self.mean)
+        if is_straggler:
+            self.flagged.append((step, seconds, self.mean))
+        else:
+            # stragglers don't poison the running mean
+            self.mean = self.alpha * self.mean + (1 - self.alpha) * seconds
+        return is_straggler
+
+
+class Heartbeat:
+    def __init__(self, path: str):
+        self.path = path
+
+    def beat(self, step: int, **info):
+        payload = {"step": step, "time": time.time(), **info}
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, self.path)
+
+    def age(self) -> Optional[float]:
+        try:
+            with open(self.path) as f:
+                return time.time() - json.load(f)["time"]
+        except (FileNotFoundError, json.JSONDecodeError, KeyError):
+            return None
+
+    def is_stale(self, timeout: float) -> bool:
+        age = self.age()
+        return age is None or age > timeout
+
+
+def recover_or_init(ckpt_mgr, init_fn, like_state=None, shardings=None):
+    """Restart path: newest checkpoint (elastic resharding) or fresh init."""
+    step = ckpt_mgr.latest_step()
+    if step is None:
+        return init_fn(), 0
+    like = like_state if like_state is not None else init_fn()
+    state = ckpt_mgr.restore(like, step=step, shardings=shardings)
+    return state, step

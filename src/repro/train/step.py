@@ -1,0 +1,284 @@
+"""Train / serve step builders: model cfg + mesh + rules -> jitted fns.
+
+This is the piece the launcher, the dry-run, the trainer and the
+examples all share.  A step builder resolves:
+  * parameter shardings from the logical-axis spec tree (sharding/rules),
+  * input shardings per workload,
+  * the AMP numerics flow (fp32 master -> bf16 compute at step start),
+  * the BDWP sparse-training semantics (via core/bdwp inside the model),
+  * optional cross-pod N:M gradient compression (optim/compress).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.sparsity import SparsityConfig
+from repro.models import encdec as E
+from repro.models import transformer_lm as T
+from repro.optim import sgd
+from repro.optim.compress import cross_pod_mean
+from repro.sharding import rules as R
+
+AUX_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# LM-family
+# ---------------------------------------------------------------------------
+
+
+def lm_train_step(state, batch, *, cfg, sp_cfg, opt_cfg, mesh, names,
+                  compress=False, grad_pspecs=None, seq_parallel=False):
+    def loss_fn(master):
+        compute = jax.tree.map(lambda w: w.astype(jnp.bfloat16), master)
+        hidden, _, aux = T.forward(compute, batch["tokens"], cfg, sp_cfg,
+                                   prefix_embeds=batch.get("prefix_embeds"))
+        labels = batch["labels"]
+        if "prefix_embeds" in batch:
+            hidden = hidden[:, batch["prefix_embeds"].shape[1]:]
+        loss = T.lm_loss(compute, hidden, labels, cfg)
+        return loss + AUX_COEF * aux, (loss, aux)
+
+    with R.activation_sharding(mesh, R.batch_axes(mesh), sp=seq_parallel):
+        (total, (loss, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["master"])
+    if compress and "pod" in mesh.axis_names:
+        grads, new_err = cross_pod_mean(grads, state["err"], mesh,
+                                        grad_pspecs, sp_cfg)
+        state = dict(state, err=new_err)
+    new_state, _ = sgd.update(state_core(state), grads, opt_cfg, sp_cfg,
+                              param_names=names)
+    new_state = dict(state, **new_state)
+    metrics = {"loss": loss, "aux": aux, "total": total,
+               "lr": sgd.lr_schedule(opt_cfg, state["step"])}
+    return new_state, metrics
+
+
+def state_core(state):
+    return {k: state[k] for k in ("master", "momentum", "step")}
+
+
+def init_train_state(key, cfg, family="lm", compress=False):
+    """Real (allocating) state init for the trainer/examples."""
+    if family == "encdec":
+        params, _ = E.init(key, cfg)
+    else:
+        params, _ = T.init(key, cfg)
+    state = sgd.init_state(params)
+    if compress:
+        state["err"] = jax.tree.map(
+            lambda p: jnp.zeros_like(p, jnp.float32), state["master"])
+    return state
+
+
+def encdec_train_step(state, batch, *, cfg, sp_cfg, opt_cfg, mesh, names):
+    def loss_fn(master):
+        compute = jax.tree.map(lambda w: w.astype(jnp.bfloat16), master)
+        enc = E.encode(compute, batch["frames"], cfg, sp_cfg)
+        hidden, _ = E.decode(compute, batch["tokens"], enc, cfg, sp_cfg)
+        logits = E.logits_from_hidden(compute, hidden, cfg)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["labels"][..., None],
+                                   axis=-1)[..., 0]
+        loss = (logz - gold).mean()
+        return loss, loss
+
+    with R.activation_sharding(mesh, R.batch_axes(mesh)):
+        (_, loss), grads = jax.value_and_grad(loss_fn,
+                                              has_aux=True)(state["master"])
+    new_state, _ = sgd.update(state_core(state), grads, opt_cfg, sp_cfg,
+                              param_names=names)
+    new_state = dict(state, **new_state)
+    return new_state, {"loss": loss, "lr": sgd.lr_schedule(opt_cfg, state["step"])}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def _serve_dp(mesh, long_context):
+    """Batch axes for serving activations (None: 500k batch=1 decode)."""
+    return None if (mesh is None or long_context) else R.batch_axes(mesh)
+
+
+def lm_prefill_step(params, batch, *, cfg, sp_cfg, mesh=None,
+                    long_context=False):
+    b, s = batch["tokens"].shape
+    prefix = batch.get("prefix_embeds")
+    s_tot = s + (prefix.shape[1] if prefix is not None else 0)
+    with R.activation_sharding(mesh, _serve_dp(mesh, long_context)):
+        cache = T.init_lm_cache(cfg, b, s_tot)
+        hidden, cache, _ = T.forward(params, batch["tokens"], cfg, sp_cfg,
+                                     prefix_embeds=prefix, cache=cache)
+        logits = T.logits_from_hidden(params, hidden[:, -1:], cfg)
+    return logits, cache
+
+
+def lm_decode_step(params, cache, token, pos, *, cfg, sp_cfg, mesh=None,
+                   long_context=False):
+    b = token.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    with R.activation_sharding(mesh, _serve_dp(mesh, long_context)):
+        hidden, new_cache, _ = T.forward(params, token, cfg, sp_cfg,
+                                         cache=cache, decode=True,
+                                         positions=positions)
+        logits = T.logits_from_hidden(params, hidden, cfg)
+    return logits, new_cache
+
+
+def encdec_prefill_step(params, batch, *, cfg, sp_cfg, mesh=None):
+    with R.activation_sharding(mesh, _serve_dp(mesh, False)):
+        enc = E.encode(params, batch["frames"], cfg, sp_cfg)
+        b, s = batch["tokens"].shape
+        cache = E.init_cache(cfg, b, s)
+        hidden, cache = E.decode(params, batch["tokens"], enc, cfg, sp_cfg,
+                                 cache=cache)
+        logits = E.logits_from_hidden(params, hidden[:, -1:], cfg)
+    return logits, cache, enc
+
+
+def encdec_decode_step(params, cache, enc_out, token, pos, *, cfg, sp_cfg,
+                       mesh=None):
+    b = token.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    with R.activation_sharding(mesh, _serve_dp(mesh, False)):
+        hidden, new_cache = E.decode(params, token, enc_out, cfg, sp_cfg,
+                                     cache=cache, decode_step=True,
+                                     positions=positions)
+        logits = E.logits_from_hidden(params, hidden, cfg)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Builders: resolve shardings + jit
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StepBundle:
+    step_fn: callable            # jitted
+    state_shardings: object
+    input_pspecs: dict
+    names: list
+    specs: object                # logical-axis tree
+
+
+def build_lm_train(cfg, mesh: Mesh, sp_cfg: SparsityConfig,
+                   opt_cfg: sgd.SGDConfig, *, compress=False,
+                   donate=True, seq_parallel=False) -> StepBundle:
+    aparams, specs = T.init(jax.random.PRNGKey(0), cfg, abstract=True)
+    rules = R.TRAIN_RULES
+    p_pspecs = R.params_pspecs(specs, rules, aparams, mesh)
+    names = sgd._names_of(p_pspecs)
+    state_pspecs = {"master": p_pspecs,
+                    "momentum": p_pspecs,
+                    "step": P()}
+    if compress and "pod" in mesh.axis_names:
+        state_pspecs = dict(state_pspecs, err=p_pspecs)
+    state_sh = jax.tree.map(lambda ps: NamedSharding(mesh, ps), state_pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    dp = R.batch_axes(mesh)
+    in_pspecs = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if cfg.name.startswith("internvl"):
+        in_pspecs["prefix_embeds"] = P(dp, None, None)
+    batch_sh = jax.tree.map(lambda ps: NamedSharding(mesh, ps), in_pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    fn = partial(lm_train_step, cfg=cfg, sp_cfg=sp_cfg, opt_cfg=opt_cfg,
+                 mesh=mesh, names=names, compress=compress,
+                 grad_pspecs=p_pspecs, seq_parallel=seq_parallel)
+    jitted = jax.jit(fn,
+                     in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None),
+                     donate_argnums=(0,) if donate else ())
+    return StepBundle(jitted, state_sh, in_pspecs, names, specs)
+
+
+def build_encdec_train(cfg, mesh: Mesh, sp_cfg, opt_cfg,
+                       donate=True) -> StepBundle:
+    aparams, specs = E.init(jax.random.PRNGKey(0), cfg, abstract=True)
+    p_pspecs = R.params_pspecs(specs, R.TRAIN_RULES, aparams, mesh)
+    names = sgd._names_of(p_pspecs)
+    state_pspecs = {"master": p_pspecs, "momentum": p_pspecs, "step": P()}
+    state_sh = jax.tree.map(lambda ps: NamedSharding(mesh, ps), state_pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    dp = R.batch_axes(mesh)
+    in_pspecs = {"frames": P(dp, None, None), "tokens": P(dp, None),
+                 "labels": P(dp, None)}
+    batch_sh = jax.tree.map(lambda ps: NamedSharding(mesh, ps), in_pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    fn = partial(encdec_train_step, cfg=cfg, sp_cfg=sp_cfg, opt_cfg=opt_cfg,
+                 mesh=mesh, names=names)
+    jitted = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None),
+                     donate_argnums=(0,) if donate else ())
+    return StepBundle(jitted, state_sh, in_pspecs, names, specs)
+
+
+def build_lm_serve(cfg, mesh: Mesh, sp_cfg: SparsityConfig, input_specs,
+                   *, long_context=False, prefill=False,
+                   packed=False) -> StepBundle:
+    """packed=True: serve from shared-mode pre-gathered N:M weights —
+    reduced-K matmuls (M/N x fewer FLOPs AND weight bytes).  The param
+    tree (and its shardings) is transformed by bdwp.pack_tree_shared;
+    callers pack real weights with the same function."""
+    from repro.core import bdwp as B
+
+    aparams, specs = T.init(jax.random.PRNGKey(0), cfg, abstract=True)
+    rules = R.SERVE_LONG_RULES if long_context else R.SERVE_BATCH_RULES
+    p_pspecs = R.params_pspecs(specs, rules, aparams, mesh)
+    if packed:
+        _, p_pspecs = B.pack_tree_shared(aparams, sp_cfg, pspecs=p_pspecs)
+    param_sh = jax.tree.map(lambda ps: NamedSharding(mesh, ps), p_pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    in_pspecs = R.serve_input_pspecs(input_specs, mesh,
+                                     long_context=long_context)
+    in_sh = jax.tree.map(lambda ps: NamedSharding(mesh, ps), in_pspecs,
+                         is_leaf=lambda x: isinstance(x, P))
+    if prefill:
+        fn = partial(lm_prefill_step, cfg=cfg, sp_cfg=sp_cfg, mesh=mesh,
+                     long_context=long_context)
+        jitted = jax.jit(fn, in_shardings=(param_sh, in_sh))
+    else:
+        fn = partial(lm_decode_step, cfg=cfg, sp_cfg=sp_cfg, mesh=mesh,
+                     long_context=long_context)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(param_sh, in_sh["cache"], in_sh["token"],
+                          in_sh["pos"]),
+            out_shardings=(None, in_sh["cache"]),
+            donate_argnums=(1,),
+        )
+    return StepBundle(jitted, param_sh, in_pspecs, [], specs)
+
+
+def build_encdec_serve(cfg, mesh: Mesh, sp_cfg, input_specs, *,
+                       prefill=False) -> StepBundle:
+    aparams, specs = E.init(jax.random.PRNGKey(0), cfg, abstract=True)
+    p_pspecs = R.params_pspecs(specs, R.SERVE_BATCH_RULES, aparams, mesh)
+    param_sh = jax.tree.map(lambda ps: NamedSharding(mesh, ps), p_pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    in_pspecs = R.serve_input_pspecs(input_specs, mesh, long_context=False)
+    in_sh = jax.tree.map(lambda ps: NamedSharding(mesh, ps), in_pspecs,
+                         is_leaf=lambda x: isinstance(x, P))
+    if prefill:
+        fn = partial(encdec_prefill_step, cfg=cfg, sp_cfg=sp_cfg, mesh=mesh)
+        jitted = jax.jit(fn, in_shardings=(param_sh, in_sh))
+    else:
+        fn = partial(encdec_decode_step, cfg=cfg, sp_cfg=sp_cfg, mesh=mesh)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(param_sh, in_sh["cache"], in_sh["enc_out"],
+                          in_sh["token"], in_sh["pos"]),
+            out_shardings=(None, in_sh["cache"]),
+            donate_argnums=(1,),
+        )
+    return StepBundle(jitted, param_sh, in_pspecs, [], specs)

@@ -1,0 +1,63 @@
+"""Training loop: step fn + data + checkpoints + fault tolerance.
+
+The loop a launcher drives.  Composes:
+  * StepBundle (jitted train step with resolved shardings),
+  * synthetic (or user) data stream placed under input shardings,
+  * CheckpointManager (async atomic saves every ``ckpt_every``),
+  * StragglerMonitor + Heartbeat,
+  * auto-resume (elastic: restores onto whatever mesh is current).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterator, Optional
+
+import jax
+
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault import Heartbeat, StragglerMonitor
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    log_every: int = 10
+    ckpt_dir: Optional[str] = None
+    heartbeat_path: Optional[str] = None
+    straggler_threshold: float = 2.0
+
+
+def fit(bundle, state, data_iter: Iterator, tcfg: TrainerConfig,
+        log_fn: Callable = print):
+    """Runs the loop; returns (final_state, history)."""
+    ckpt = CheckpointManager(tcfg.ckpt_dir) if tcfg.ckpt_dir else None
+    hb = Heartbeat(tcfg.heartbeat_path) if tcfg.heartbeat_path else None
+    mon = StragglerMonitor(tcfg.straggler_threshold)
+    history = []
+    start_step = int(state["step"])
+    for step, batch in data_iter:
+        if step >= tcfg.total_steps:
+            break
+        t0 = time.perf_counter()
+        state, metrics = bundle.step_fn(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        straggler = mon.record(step, dt)
+        rec = {"step": step, "loss": float(metrics["loss"]),
+               "sec": dt, "straggler": straggler}
+        history.append(rec)
+        if hb is not None:
+            hb.beat(step, loss=rec["loss"])
+        if straggler:
+            log_fn(f"[straggler] step {step}: {dt:.3f}s "
+                   f"(mean {mon.mean:.3f}s)")
+        if step % tcfg.log_every == 0:
+            log_fn(f"step {step:5d} loss {rec['loss']:.4f} {dt*1e3:.1f}ms")
+        if ckpt is not None and step > start_step and step % tcfg.ckpt_every == 0:
+            ckpt.save(step, state)
+    if ckpt is not None:
+        ckpt.save(int(state["step"]), state, blocking=True)
+    return state, history

@@ -1,0 +1,97 @@
+"""Structural HLO cost-model tests (launch/hlo_cost.py).
+
+The critical property: while-loop bodies are multiplied by their
+known_trip_count — XLA's own cost_analysis counts them once, which
+would make every scan-over-layers roofline wrong by ~n_layers.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_cost as H
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _scan_matmul_hlo(n_layers=16, b=32, d=64):
+    def step(params, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, params)
+        return y.sum()
+
+    params = jax.ShapeDtypeStruct((n_layers, d, d), jnp.float32)
+    x = jax.ShapeDtypeStruct((b, d), jnp.float32)
+    return jax.jit(jax.grad(step)).lower(params, x).compile().as_text()
+
+
+class TestTripExpansion:
+    def test_scan_flops_match_hand_count(self):
+        n_layers, b, d = 16, 32, 64
+        txt = _scan_matmul_hlo(n_layers, b, d)
+        got = H.analyze(txt)["flops"]
+        # fwd + dx + dw = 3 matmuls/layer, 2*b*d*d flops each
+        want = 3 * 2 * b * d * d * n_layers
+        assert got == pytest.approx(want, rel=0.10)
+
+    def test_trip_count_parsed(self):
+        txt = _scan_matmul_hlo(n_layers=12)
+        model = H.HloCostModel(txt)
+        trips = [int(m.group(1)) for m in
+                 H._TRIP_RE.finditer(txt)]
+        assert 12 in trips
+
+    def test_bytes_scale_with_layers(self):
+        small = H.analyze(_scan_matmul_hlo(n_layers=4))["bytes"]
+        big = H.analyze(_scan_matmul_hlo(n_layers=16))["bytes"]
+        assert 2.5 < big / small < 6.0  # ~4x, loop-invariant slack
+
+
+SYNTHETIC_COLLECTIVE_HLO = """
+HloModule test, num_partitions=8
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[128,256]) -> f32[128,256] {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ag = f32[128,256]{1,0} all-gather(%p0), replica_groups=[2,4]<=[8], dimensions={0}
+  ROOT %ar = f32[128,256]{1,0} all-reduce(%ag), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+}
+"""
+
+
+class TestCollectives:
+    def test_ring_accounting(self):
+        out = H.analyze(SYNTHETIC_COLLECTIVE_HLO)
+        size = 128 * 256 * 4
+        coll = out["collectives"]
+        assert coll["all-gather"] == int(size * 3 / 4)
+        assert coll["all-reduce"] == int(2 * size * 3 / 4)
+        assert coll["count"] == 2
+
+    def test_group_size_iota_and_list(self):
+        assert H._group_size("replica_groups=[2,4]<=[8]") == 4
+        assert H._group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+        assert H._group_size("no groups here") == 1
+
+
+class TestDotFlops:
+    def test_plain_matmul(self):
+        txt = jax.jit(lambda a, b: a @ b).lower(
+            jax.ShapeDtypeStruct((32, 48), jnp.float32),
+            jax.ShapeDtypeStruct((48, 16), jnp.float32)).compile().as_text()
+        got = H.analyze(txt)["flops"]
+        assert got == pytest.approx(2 * 32 * 48 * 16, rel=0.01)
+
+    def test_fusion_boundary_bytes(self):
+        txt = jax.jit(lambda a: jnp.tanh(a) * 2 + 1).lower(
+            jax.ShapeDtypeStruct((1024,), jnp.float32)).compile().as_text()
+        got = H.analyze(txt)["bytes"]
+        # one fused pass: read + write (allow convert/copy slack)
+        assert got <= 4 * 1024 * 4

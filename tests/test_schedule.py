@@ -1,0 +1,91 @@
+"""RWG offline-scheduling tests (core/schedule.py)."""
+
+import pytest
+
+from repro.core import schedule as S
+from repro.core.sparsity import SparsityConfig
+
+BDWP = SparsityConfig(n=2, m=8, method="bdwp")
+DENSE = SparsityConfig(method="dense")
+
+
+class TestDataflowModel:
+    def test_ws_better_for_tall_skinny(self):
+        # few rows streaming, big weight: WS amortizes the preload
+        df, _ = S.pick_dataflow(b=16384, k=256, f=256)
+        assert df == "WS"
+
+    def test_os_better_for_small_batch_long_k(self):
+        df, _ = S.pick_dataflow(b=128, k=16384, f=128)
+        assert df == "OS"
+
+    def test_utilization_bounded(self):
+        for dims in ((64, 64, 64), (4096, 4096, 4096), (1, 8, 8)):
+            _, u = S.pick_dataflow(*dims)
+            assert 0.0 <= u <= 1.0
+
+    def test_big_square_matmul_high_utilization(self):
+        _, u = S.pick_dataflow(8192, 4096, 4096)
+        assert u > 0.9
+
+
+class TestLayerPlan:
+    def test_bdwp_stages(self):
+        p = S.plan_layer("mlp/w_in", b=1024, k=512, f=512, cfg=BDWP)
+        assert p.ff.sparse and p.bp.sparse and not p.wu.sparse
+        assert p.ff.pack_site == "pregen"  # Fig. 11c
+        assert p.ff.macs == 1024 * 128 * 512    # K shrunk by N/M
+        assert p.bp.macs == 1024 * 128 * 512    # F shrunk by N/M
+        assert p.wu.macs == 1024 * 512 * 512    # dense
+
+    def test_sdgp_packs_inline(self):
+        cfg = SparsityConfig(n=2, m=8, method="sdgp")
+        p = S.plan_layer("mlp/w_in", 1024, 512, 512, cfg)
+        assert not p.ff.sparse and p.bp.sparse
+        assert p.bp.pack_site == "inline"  # grads exist only inside BP
+
+    def test_excluded_layer_stays_dense(self):
+        p = S.plan_layer("head0", 1024, 512, 512, BDWP)
+        assert not p.ff.sparse and not p.bp.sparse
+        assert p.total_macs == 3 * 1024 * 512 * 512
+
+    def test_config_word_roundtrip(self):
+        w = S.plan_layer("attn/q_proj", 256, 512, 512, BDWP).config_word()
+        assert w["ff"][1] == "sparse" and w["wu"][1] == "dense"
+        assert w["ff"][0] in ("WS", "OS")
+
+
+class TestModelPlan:
+    SHAPES = {
+        "embed/embed_table": (1024, 64),   # excluded by name
+        "blocks/attn/q_proj/w": (4, 64, 64),
+        "blocks/mlp/w_in/w": (4, 64, 256),
+        "final_norm/norm_scale": (64,),    # rank-1: skipped
+    }
+
+    def test_plan_expands_stacked_layers(self):
+        plans = S.plan_model(self.SHAPES, tokens=512, cfg=BDWP)
+        names = [p.name for p in plans]
+        assert sum("q_proj" in n for n in names) == 4
+        assert sum("w_in" in n for n in names) == 4
+        assert not any("norm" in n for n in names)
+
+    def test_summary_reduction_matches_analytic(self):
+        plans = S.plan_model(self.SHAPES, tokens=512, cfg=BDWP)
+        summ = S.schedule_summary(plans)
+        # embed stays dense (excluded); the 8 block matmuls run FF/BP at
+        # N/M=1/4: per-layer factor (0.25+0.25+1)/3 = 0.5
+        embed = 512 * 1024 * 64 * 3
+        blocks = 4 * (512 * 64 * 64 + 512 * 64 * 256) * 3
+        expected = (embed + blocks) / (embed + blocks * 0.5)
+        assert summ["reduction"] == pytest.approx(expected, rel=1e-6)
+        # and the block-only reduction is exactly 2x
+        block_plans = [p for p in plans if "blocks" in p.name]
+        bsumm = S.schedule_summary(block_plans)
+        assert bsumm["reduction"] == pytest.approx(2.0, rel=1e-6)
+
+    def test_dense_summary_identity(self):
+        plans = S.plan_model(self.SHAPES, tokens=512, cfg=DENSE)
+        summ = S.schedule_summary(plans)
+        assert summ["reduction"] == 1.0
+        assert summ["macs_total"] == summ["macs_dense"]

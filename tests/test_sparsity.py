@@ -1,0 +1,162 @@
+"""Property + unit tests for the N:M sparsity core (hypothesis-driven)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparsity as S
+
+jax.config.update("jax_platform_name", "cpu")
+
+NM = st.sampled_from([(1, 4), (2, 4), (2, 8), (4, 8), (2, 16), (1, 8), (8, 8)])
+
+
+def _rand(shape, seed, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype=dtype)
+
+
+class TestMask:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        nm=NM,
+        rows=st.integers(1, 9),
+        groups=st.integers(1, 6),
+        seed=st.integers(0, 2**16),
+    )
+    def test_exact_n_survivors_per_group(self, nm, rows, groups, seed):
+        n, m = nm
+        x = _rand((rows, groups * m), seed)
+        mask = S.nm_mask(x, n, m, axis=-1)
+        nnz = np.asarray(S.group_nonzeros(jnp.where(mask, 1.0, 0.0), m, -1))
+        assert (nnz == n).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(nm=NM, seed=st.integers(0, 2**16))
+    def test_keeps_largest_magnitudes(self, nm, seed):
+        n, m = nm
+        x = _rand((4, 4 * m), seed)
+        kept = jnp.where(S.nm_mask(x, n, m), jnp.abs(x), jnp.inf)
+        dropped = jnp.where(S.nm_mask(x, n, m), -jnp.inf, jnp.abs(x))
+        kept_g = kept.reshape(4, 4, m).min(-1)
+        drop_g = dropped.reshape(4, 4, m).max(-1)
+        assert (np.asarray(kept_g) >= np.asarray(drop_g) - 1e-7).all()
+
+    def test_dense_when_n_equals_m(self):
+        x = _rand((3, 16), 0)
+        assert bool(S.nm_mask(x, 8, 8).all())
+
+    def test_axis0(self):
+        x = _rand((16, 5), 1)
+        mask = S.nm_mask(x, 2, 8, axis=0)
+        nnz = np.asarray(mask.sum(0))
+        assert (nnz == 4).all()  # 16/8 = 2 groups * 2 survivors
+
+    def test_tie_break_prefers_earlier_index(self):
+        x = jnp.ones((1, 8))
+        mask = S.nm_mask(x, 2, 8)
+        assert np.asarray(mask)[0].tolist() == [True, True] + [False] * 6
+
+    def test_all_zero_group(self):
+        mask = S.nm_mask(jnp.zeros((2, 8)), 2, 8)
+        assert int(mask.sum()) == 4  # deterministic, 2 per group
+
+    def test_indivisible_axis_raises(self):
+        with pytest.raises(ValueError):
+            S.nm_mask(_rand((2, 10), 0), 2, 8)
+
+
+class TestPack:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        nm=NM,
+        rows=st.integers(1, 8),
+        groups=st.integers(1, 5),
+        seed=st.integers(0, 2**16),
+        dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    )
+    def test_pack_unpack_roundtrip_equals_sparsify(self, nm, rows, groups, seed, dtype):
+        n, m = nm
+        x = _rand((rows, groups * m), seed, dtype)
+        v, i = S.nm_pack(x, n, m, axis=-1)
+        assert v.shape == (rows, groups * n)
+        assert i.dtype == jnp.uint8
+        dense = S.nm_unpack_n(v, i, n, m, axis=-1)
+        sp = S.sparsify(x, S.SparsityConfig(n=n, m=m), axis=-1)
+        np.testing.assert_array_equal(np.asarray(dense), np.asarray(sp))
+
+    @settings(max_examples=20, deadline=None)
+    @given(nm=NM, seed=st.integers(0, 2**16))
+    def test_indices_ascending_within_group(self, nm, seed):
+        n, m = nm
+        _, i = S.nm_pack(_rand((3, 4 * m), seed), n, m, axis=-1)
+        ig = np.asarray(i).reshape(3, 4, n)
+        assert (np.diff(ig.astype(int), axis=-1) > 0).all() or n == 1
+
+    def test_pack_axis0(self):
+        x = _rand((16, 6), 2)
+        v, i = S.nm_pack(x, 2, 8, axis=0)
+        assert v.shape == (4, 6)
+        dense = S.nm_unpack_n(v, i, 2, 8, axis=0)
+        sp = S.sparsify(x, S.SparsityConfig(n=2, m=8), axis=0)
+        np.testing.assert_array_equal(np.asarray(dense), np.asarray(sp))
+
+
+class TestShared:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**16), tile=st.sampled_from([8, 16, 32]))
+    def test_pattern_identical_within_tile(self, seed, tile):
+        x = _rand((32, 64), seed)
+        mask = S.nm_mask_shared(x, 2, 8, axis=0, share_axis=1, tile=tile)
+        m = np.asarray(mask)
+        for t0 in range(0, 64, tile):
+            ref_col = m[:, t0]
+            assert (m[:, t0 : t0 + tile] == ref_col[:, None]).all()
+
+    def test_exact_survivors(self):
+        x = _rand((32, 64), 7)
+        cfg = S.SparsityConfig(n=2, m=8, granularity="shared", tile=16)
+        sp = S.sparsify(x, cfg, axis=0, share_axis=1)
+        nnz = np.asarray(S.group_nonzeros(sp, 8, 0))
+        assert (nnz <= 2).all()
+
+    def test_non_divisible_tile_padding(self):
+        x = _rand((16, 40), 9)
+        mask = S.nm_mask_shared(x, 2, 8, axis=0, share_axis=1, tile=16)
+        assert mask.shape == x.shape
+
+
+class TestConfig:
+    def test_method_routing(self):
+        assert S.SparsityConfig(method="bdwp").prunes_ff_weights()
+        assert S.SparsityConfig(method="bdwp").prunes_bp_weights()
+        assert not S.SparsityConfig(method="bdwp").prunes_bp_grads()
+        assert S.SparsityConfig(method="srste").prunes_ff_weights()
+        assert not S.SparsityConfig(method="srste").prunes_bp_weights()
+        assert S.SparsityConfig(method="sdwp").prunes_bp_weights()
+        assert not S.SparsityConfig(method="sdwp").prunes_ff_weights()
+        assert S.SparsityConfig(method="sdgp").prunes_bp_grads()
+        assert S.DENSE.is_dense
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            S.SparsityConfig(n=9, m=8)
+        with pytest.raises(ValueError):
+            S.SparsityConfig(method="nope")
+
+    def test_flops_fraction(self):
+        assert S.nm_flops_fraction(S.SparsityConfig(n=2, m=8)) == 0.25
+        assert S.nm_flops_fraction(S.DENSE) == 1.0
+
+
+class TestSRSTE:
+    def test_decay_only_pruned(self):
+        x = _rand((4, 16), 3)
+        mask = S.nm_mask(x, 2, 8)
+        d = S.srste_decay(x, mask, 0.5)
+        assert np.allclose(np.asarray(d[mask]), 0.0)
+        pruned = ~np.asarray(mask)
+        np.testing.assert_allclose(
+            np.asarray(d)[pruned], 0.5 * np.asarray(x)[pruned], rtol=1e-6
+        )

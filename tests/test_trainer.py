@@ -1,0 +1,140 @@
+"""Fault-tolerance stack tests: checkpoint atomicity/retention/elastic
+restore, straggler detection, heartbeat, auto-resume, full trainer loop."""
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault import Heartbeat, StragglerMonitor, recover_or_init
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _state(step=0, scale=1.0):
+    return {
+        "master": {"w": jnp.full((4, 8), scale, jnp.float32),
+                   "b": jnp.arange(8, dtype=jnp.float32) * scale},
+        "momentum": {"w": jnp.zeros((4, 8)), "b": jnp.zeros((8,))},
+        "step": jnp.asarray(step, jnp.int32),
+    }
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        st = _state(step=7, scale=3.5)
+        mgr.save(7, st, blocking=True)
+        out = mgr.restore(_state())
+        assert int(out["step"]) == 7
+        np.testing.assert_array_equal(np.asarray(out["master"]["w"]),
+                                      np.asarray(st["master"]["w"]))
+
+    def test_async_save_commits(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(3, _state(3))
+        mgr.wait()
+        assert mgr.latest_step() == 3
+        assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+    def test_retention_keeps_newest(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, _state(s), blocking=True)
+        assert mgr.all_steps() == [3, 4]
+
+    def test_torn_write_never_visible(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        # a stale .tmp from a crashed writer must not count as a checkpoint
+        os.makedirs(tmp_path / "step_00000099.tmp")
+        assert mgr.latest_step() is None
+
+    def test_structure_mismatch_rejected(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, _state(), blocking=True)
+        with pytest.raises(ValueError):
+            mgr.restore({"only": jnp.zeros(3)})
+
+    def test_elastic_restore_under_new_shardings(self, tmp_path):
+        """Checkpoint is mesh-agnostic: restore re-device_puts under the
+        current mesh's shardings (1-device container: identity mesh)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        mgr = CheckpointManager(str(tmp_path))
+        st = _state(5)
+        mgr.save(5, st, blocking=True)
+        mesh = jax.make_mesh((1,), ("data",))
+        sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), st)
+        out = mgr.restore(_state(), shardings=sh)
+        assert out["master"]["w"].sharding == NamedSharding(mesh, P())
+
+
+class TestRecoverOrInit:
+    def test_fresh_when_no_checkpoint(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        st, step = recover_or_init(mgr, lambda: _state(0))
+        assert step == 0 and int(st["step"]) == 0
+
+    def test_resumes_latest(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(11, _state(11, scale=2.0), blocking=True)
+        st, step = recover_or_init(mgr, lambda: _state(0))
+        assert step == 11 and float(st["master"]["w"][0, 0]) == 2.0
+
+
+class TestStraggler:
+    def test_flags_slow_step(self):
+        mon = StragglerMonitor(threshold=2.0, warmup=2)
+        for i in range(5):
+            assert not mon.record(i, 0.1)
+        assert mon.record(5, 0.5)   # 5x the EWMA mean
+        assert not mon.record(6, 0.1)
+
+    def test_warmup_never_flags(self):
+        mon = StragglerMonitor(threshold=1.01, warmup=3)
+        assert not mon.record(0, 10.0)
+        assert not mon.record(1, 0.0001)
+
+
+class TestHeartbeat:
+    def test_beat_and_staleness(self, tmp_path):
+        hb = Heartbeat(str(tmp_path / "hb.json"))
+        hb.beat(3, loss=1.5)
+        assert not hb.is_stale(60.0)
+        data = json.load(open(tmp_path / "hb.json"))
+        assert data["step"] == 3
+        assert hb.age() < 5.0
+
+
+class TestTrainerLoop:
+    def test_fit_runs_checkpoints_and_history(self, tmp_path):
+        from repro.configs import get_arch
+        from repro.core.sparsity import SparsityConfig
+        from repro.data import synthetic as D
+        from repro.launch.mesh import make_host_mesh
+        from repro.optim import sgd
+        from repro.train import step as ST
+        from repro.train import trainer as TR
+
+        arch = get_arch("qwen3-8b")
+        mesh = make_host_mesh()
+        sp = SparsityConfig(n=2, m=8, method="bdwp")
+        bundle = ST.build_lm_train(arch.smoke, mesh, sp,
+                                   sgd.SGDConfig(total_steps=6))
+        state = jax.device_put(
+            ST.init_train_state(jax.random.PRNGKey(0), arch.smoke),
+            bundle.state_shardings)
+        tcfg = TR.TrainerConfig(total_steps=6, ckpt_every=3, log_every=100,
+                                ckpt_dir=str(tmp_path))
+        stream = D.lm_stream(arch.smoke.vocab, 2, 32)
+        state, hist = TR.fit(bundle, state, stream, tcfg,
+                             log_fn=lambda *_: None)
+        assert len(hist) == 6
+        assert all(np.isfinite(h["loss"]) for h in hist)
+        mgr = CheckpointManager(str(tmp_path))
+        assert mgr.latest_step() == 6
