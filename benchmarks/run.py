@@ -2,16 +2,18 @@
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run table2     # one
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI-fast subset
 """
 
 from __future__ import annotations
 
+import inspect
 import sys
 import time
 
 from benchmarks import (fig14_resources, fig15_speedup, fig16_layerwise,
-                        fig17_scaling, kernel_bench, roofline, table2_flops,
-                        table4_platforms, table5_accels)
+                        fig17_scaling, kernel_bench, roofline, serve_bench,
+                        table2_flops, table4_platforms, table5_accels)
 
 SUITES = {
     "table2": table2_flops,
@@ -23,16 +25,27 @@ SUITES = {
     "table5": table5_accels,
     "kernels": kernel_bench,
     "roofline": roofline,
+    "serve": serve_bench,
 }
+
+# cheap suites CI can afford on every push
+SMOKE_SUITES = ["table2", "serve"]
 
 
 def main() -> None:
-    names = sys.argv[1:] or list(SUITES)
+    argv = sys.argv[1:]
+    smoke = "--smoke" in argv
+    names = [a for a in argv if not a.startswith("-")]
+    if not names:
+        names = SMOKE_SUITES if smoke else list(SUITES)
     for name in names:
         mod = SUITES[name]
         print(f"\n===== {name} ({mod.__name__}) =====")
         t0 = time.perf_counter()
-        mod.main()
+        kwargs = {}
+        if "smoke" in inspect.signature(mod.main).parameters:
+            kwargs["smoke"] = smoke  # suites opt in by accepting smoke=
+        mod.main(**kwargs)
         print(f"# {name}: {(time.perf_counter() - t0)*1e3:.0f} ms")
 
 

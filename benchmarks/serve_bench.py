@@ -1,0 +1,131 @@
+"""Serve-engine benchmark: throughput vs. offered load.
+
+  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
+
+Drives the continuous-batching engine with Poisson arrivals and mixed
+prompt lengths at a sweep of offered loads (requests per decode step),
+measuring delivered tok/s, per-request latency (in engine steps) and
+slot utilization — the "serves heavy traffic" axis of the roadmap, on
+the smoke config so it runs on CPU CI.
+
+Writes a JSON summary to results/BENCH_serve.json so the bench
+trajectory accumulates across PRs (CI uploads it as an artifact).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.sparsity import SparsityConfig
+from repro.models import transformer_lm as T
+from repro.serve import ServeConfig, ServeEngine
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+def run_load(engine: ServeEngine, *, n_requests: int, load: float,
+             prompt_lens, max_new: int, seed: int = 0) -> dict:
+    """Offered load = Poisson arrivals at `load` requests per decode step."""
+    rng = np.random.default_rng(seed)
+    # exponential inter-arrival times in units of engine steps
+    arrivals = np.cumsum(rng.exponential(1.0 / max(load, 1e-9), n_requests))
+    plens = rng.choice(prompt_lens, n_requests)
+    prompts = [rng.integers(0, engine.cfg.vocab, int(p)).tolist()
+               for p in plens]
+    submitted = 0
+    t0 = time.perf_counter()
+    while submitted < n_requests or engine.n_running or engine.n_queued:
+        while submitted < n_requests and arrivals[submitted] <= engine.step_count:
+            engine.submit(prompts[submitted], max_new_tokens=max_new)
+            submitted += 1
+        engine.step()
+    dt = time.perf_counter() - t0
+    lats = [r.finish_step - r.submit_step for r in engine.finished_requests]
+    done = engine.harvest()
+    st = engine.stats()
+    tokens_out = sum(len(v) for v in done.values())
+    return {
+        "offered_load_req_per_step": load,
+        "n_requests": n_requests,
+        "tokens": tokens_out,
+        "wall_s": dt,
+        "tok_per_s": tokens_out / dt if dt else 0.0,
+        "decode_steps": st["decode_steps"],
+        "engine_steps": st["steps"],
+        # first token of each request comes from its prefill, not a
+        # decode step — exclude it from per-step lane accounting
+        "tokens_per_decode_step": (tokens_out - n_requests)
+        / max(st["decode_steps"], 1),
+        "slot_utilization": (tokens_out - n_requests) / max(
+            st["decode_steps"] * engine.serve_cfg.n_slots, 1),
+        "latency_steps_mean": float(np.mean(lats)) if lats else 0.0,
+        "latency_steps_p50": _percentile(lats, 50),
+        "latency_steps_p95": _percentile(lats, 95),
+    }
+
+
+def main(smoke: bool = False, out_path: str | None = None) -> dict:
+    arch = get_arch("qwen3-8b")
+    cfg = arch.smoke
+    sp_cfg = SparsityConfig(n=2, m=8, method="bdwp")
+    params, _ = T.init(jax.random.PRNGKey(0), cfg)
+    params = jax.tree.map(lambda w: w.astype(jnp.bfloat16), params)
+
+    if smoke:
+        loads, n_requests, max_new, slots = [0.2, 1.0], 6, 6, 2
+    else:
+        loads, n_requests, max_new, slots = [0.1, 0.3, 1.0, 3.0], 24, 12, 4
+    serve_cfg = ServeConfig(n_slots=slots, prompt_bucket=16,
+                            max_len=16 + max_new, packed=True)
+
+    # one engine for the whole sweep: pack + compile once, reset() the
+    # host-side counters between load levels
+    engine = ServeEngine(params, cfg, sp_cfg, serve_cfg)
+    hbm = engine.hbm_report()
+    rows = []
+    for load in loads:
+        engine.reset()
+        row = run_load(engine, n_requests=n_requests, load=load,
+                       prompt_lens=(4, 8, 12, 16), max_new=max_new, seed=17)
+        rows.append(row)
+        print(f"load={load:5.2f} req/step: {row['tok_per_s']:8.1f} tok/s  "
+              f"util={row['slot_utilization']:.2f}  "
+              f"steps={row['engine_steps']}")
+
+    summary = {
+        "bench": "serve_bench",
+        "arch": cfg.name,
+        "sparsity": {"n": sp_cfg.n, "m": sp_cfg.m, "method": sp_cfg.method},
+        "serve": {"n_slots": slots, "prompt_bucket": 16,
+                  "max_len": 16 + max_new, "packed": True},
+        "hbm": hbm,
+        "smoke": smoke,
+        "loads": rows,
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    out_path = out_path or os.path.join(RESULTS, "BENCH_serve.json")
+    with open(out_path, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"wrote {out_path}")
+    return summary
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    main(smoke=args.smoke, out_path=args.out)

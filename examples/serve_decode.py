@@ -1,12 +1,16 @@
-"""Serving example: batched prefill + KV-cache decode with N:M-packed
-weights (the paper's inference-side win: weights stream at N/M of the
-dense bytes).
+"""Serving example: the continuous-batching engine on N:M-packed weights.
 
-  PYTHONPATH=src python examples/serve_decode.py [--tokens 32]
+  PYTHONPATH=src python examples/serve_decode.py [--tokens 24]
 
-Uses the same build_lm_serve path the 32k-decode dry-run cells lower,
-on the qwen3 smoke config, and reports decode throughput plus the
-HBM-byte saving of SORE-packed weights.
+A thin client of ``repro.serve.ServeEngine``: three mixed-length
+requests share a 2-slot engine, so the third request *joins mid-flight*
+into the slot freed by the first — and every per-request token stream
+is identical to decoding that request alone (the engine's per-slot
+position/mask semantics make batch composition invisible to a request).
+
+With ``--packed`` (default on) decode runs from element-mode SORE-packed
+(vals, idx) weights through kernels/nm_spmm — the paper's Fig. 11c
+inference win: weights stream at ~N/M of the dense HBM bytes.
 """
 
 import argparse
@@ -14,78 +18,79 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_arch
-from repro.core.sparsity import SparsityConfig, nm_pack, sparsify
-from repro.launch.mesh import make_host_mesh
+from repro.core.sparsity import SparsityConfig
 from repro.models import transformer_lm as T
-from repro.train import step as ST
+from repro.serve import ServeConfig, ServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=48)
-    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=24,
+                    help="max new tokens per request")
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--dense", action="store_true",
+                    help="serve re-masked dense weights instead of packed")
     args = ap.parse_args()
 
     arch = get_arch("qwen3-8b")
     cfg = arch.smoke
     sp_cfg = SparsityConfig(n=2, m=8, method="bdwp")
-    mesh = make_host_mesh()
 
     params, _ = T.init(jax.random.PRNGKey(0), cfg)
     params = jax.tree.map(lambda w: w.astype(jnp.bfloat16), params)
 
-    # paper Fig. 11c: serve from FF-pruned (packed) weights
-    packed_bytes = dense_bytes = 0
-    def pack_weights(path, w):
-        nonlocal packed_bytes, dense_bytes
-        name = "/".join(str(getattr(k, "key", k)) for k in path)
-        from repro.core import bdwp as B
-        if w.ndim >= 2 and B.should_prune(name.split("/")[-1], w.shape[-2:], sp_cfg):
-            dense_bytes += w.size * 2
-            v, i = nm_pack(w, sp_cfg.n, sp_cfg.m, axis=w.ndim - 2)
-            packed_bytes += v.size * 2 + i.size
-            return sparsify(w, sp_cfg, axis=w.ndim - 2)  # masked = unpack(pack)
-        return w
-    params = jax.tree_util.tree_map_with_path(pack_weights, params)
-    if dense_bytes:
-        print(f"packed weights: {packed_bytes/1e6:.2f} MB vs dense "
-              f"{dense_bytes/1e6:.2f} MB ({dense_bytes/packed_bytes:.2f}x HBM saving)")
+    serve_cfg = ServeConfig(n_slots=args.slots, prompt_bucket=16,
+                            max_len=16 + args.tokens,
+                            packed=not args.dense)
 
-    max_len = args.prompt_len + args.tokens
-    tokens = jax.random.randint(jax.random.PRNGKey(1), (args.batch, args.prompt_len),
-                                0, cfg.vocab)
-    # prefill
-    logits, cache = ST.lm_prefill_step(params, {"tokens": tokens},
-                                       cfg=cfg, sp_cfg=sp_cfg)
-    # the prefill cache is sized to the prompt; re-seat into a max_len cache
-    full = T.init_lm_cache(cfg, args.batch, max_len)
-    def seat(dst, src):
-        if dst.ndim == 0 or dst.shape == src.shape:
-            return src.astype(dst.dtype)
-        sl = tuple(slice(0, s) for s in src.shape)
-        return dst.at[sl].set(src.astype(dst.dtype))
-    cache = jax.tree.map(seat, full, cache)
+    key = jax.random.PRNGKey(1)
+    prompts = [np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                             (plen,), 0, cfg.vocab))
+               for i, plen in enumerate((5, 11, 14))]
 
-    decode = jax.jit(lambda p, c, t, pos: ST.lm_decode_step(
-        p, c, t, pos, cfg=cfg, sp_cfg=sp_cfg), donate_argnums=(1,))
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    out = [tok]
+    # --- solo references: each request decoded alone (one engine, reused
+    # sequentially — run() drains between submissions) ----------------------
+    engine = ServeEngine(params, cfg, sp_cfg, serve_cfg)
+    solo = {}
+    for i, p in enumerate(prompts):
+        rid = engine.submit(p, max_new_tokens=args.tokens)
+        solo[i] = engine.run()[rid]
+
+    # --- mixed workload: r2 joins mid-flight when r0's slot frees ----------
+    engine.reset()
+    if engine.store is not None:
+        r = engine.hbm_report()
+        print(f"packed weights: {r['packed_weight_bytes']/1e6:.2f} MB vs "
+              f"dense {r['dense_weight_bytes']/1e6:.2f} MB "
+              f"({r['hbm_saving']:.2f}x HBM saving, "
+              f"{r['n_packed']} tensors packed)")
+    r0 = engine.submit(prompts[0], max_new_tokens=args.tokens // 2)
+    r1 = engine.submit(prompts[1], max_new_tokens=args.tokens)
+    r2 = None
     t0 = time.perf_counter()
-    for i in range(args.tokens):
-        pos = jnp.asarray(args.prompt_len + i, jnp.int32)
-        logits, cache = decode(params, cache, tok, pos)
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        out.append(tok)
-    jax.block_until_ready(tok)
+    while engine.n_running or engine.n_queued or r2 is None:
+        events = engine.step()
+        if r2 is None and r0 in events["finished"]:
+            # slot freed this step -> the next step admits r2 mid-flight
+            r2 = engine.submit(prompts[2], max_new_tokens=args.tokens)
     dt = time.perf_counter() - t0
-    total = args.batch * args.tokens
-    print(f"decoded {total} tokens in {dt:.2f}s "
-          f"({total/dt:.1f} tok/s, batch={args.batch})")
-    seq = jnp.concatenate(out, axis=1)
-    print("sample token ids:", seq[0, :12].tolist())
+    out = engine.harvest()
+
+    ok = (out[r0] == solo[0][:len(out[r0])]
+          and out[r1] == solo[1] and out[r2] == solo[2])
+    for rid, sref in ((r0, solo[0]), (r1, solo[1]), (r2, solo[2])):
+        print(f"req {rid}: {len(out[rid])} tokens, first 8 = "
+              f"{out[rid][:8]}")
+    st = engine.stats()
+    print(f"decoded {st['decoded_tokens']} tokens in {dt:.2f}s "
+          f"({st['decoded_tokens']/dt:.1f} tok/s, {st['decode_steps']} "
+          f"decode steps, {args.slots} slots)")
+    print("continuous-batching streams identical to solo decode:", ok)
+    if not ok:
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

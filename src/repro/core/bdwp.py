@@ -141,18 +141,19 @@ nm_conv.defvjp(_nm_conv_fwd, _nm_conv_bwd)
 # ---------------------------------------------------------------------------
 
 
-def nm_linear_packed(x, vals, idx, cfg: SparsityConfig):
+def nm_linear_packed(x, vals, idx, cfg: SparsityConfig, use_pallas: bool = False):
     """Forward-only matmul consuming SORE-packed weights.
 
     Used by the serving path: weights live in HBM in compact N:M form
     (N/M of dense bytes + indices); the Pallas kernel (kernels/nm_spmm)
-    decompresses tile-by-tile in VMEM.  This wrapper uses the oracle path
-    so it is differentiable-free and dry-run friendly.
+    decompresses tile-by-tile in VMEM.  Routes through kernels/ops so
+    TPU runs the kernel; the default oracle path keeps the lowered HLO
+    clean for roofline accounting and is dry-run friendly.
     """
-    from repro.kernels import ref  # local import to avoid cycles
+    from repro.kernels import ops  # local import to avoid cycles
 
     x2 = x.reshape(-1, x.shape[-1])
-    y = ref.ref_nm_spmm(x2, vals, idx, cfg.n, cfg.m)
+    y = ops.nm_spmm(x2, vals, idx, cfg.n, cfg.m, use_pallas=use_pallas)
     return y.reshape(*x.shape[:-1], vals.shape[-1]).astype(x.dtype)
 
 

@@ -26,7 +26,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels import pallas_compat as pltpu
 
 
 def _spmm_shared_kernel(act_ref, vals_ref, rows_ref, out_ref):

@@ -1,0 +1,35 @@
+"""Version-compat facade over ``jax.experimental.pallas.tpu``.
+
+The Pallas TPU API renamed several symbols across JAX releases:
+
+  new (>= 0.5.x)              old (0.4.x, this container)
+  ------------------------    ---------------------------------
+  MemorySpace                 TPUMemorySpace
+  CompilerParams              TPUCompilerParams
+  GridDimensionSemantics.X    the strings "parallel"/"arbitrary"
+
+Kernels import this module *as* ``pltpu`` and write against the new
+spelling; on older JAX the aliases below resolve to the old names, and
+every other attribute falls through to the real module.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+MemorySpace = getattr(_pltpu, "MemorySpace", None) \
+    or getattr(_pltpu, "TPUMemorySpace")
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or getattr(_pltpu, "TPUCompilerParams")
+
+if hasattr(_pltpu, "GridDimensionSemantics"):
+    GridDimensionSemantics = _pltpu.GridDimensionSemantics
+else:
+    class GridDimensionSemantics:
+        """Old API: dimension_semantics takes plain strings."""
+        PARALLEL = "parallel"
+        ARBITRARY = "arbitrary"
+
+
+def __getattr__(name):
+    return getattr(_pltpu, name)

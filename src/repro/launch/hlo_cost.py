@@ -48,6 +48,7 @@ _TRIP_RE = re.compile(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)')
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
 _WINDOW_RE = re.compile(r"window=\{size=([\dx]+)")
 
 _FREE_OPS = {
@@ -213,8 +214,14 @@ def parse_module(text: str) -> Dict[str, Computation]:
                 depth -= 1
             i += 1
         arg_text = tail[: i - 1] if depth == 0 else tail
-        operands = [a.lstrip("%") for a in _split_top_args(arg_text)
-                    if a.startswith("%")]
+        # Operand parts are either bare names ("%p0") or, in newer XLA
+        # dumps, inline-typed ("f32[32,48]{1,0} %Arg_0.1") — take the
+        # trailing %name of each top-level part either way.
+        operands = []
+        for part in _split_top_args(arg_text):
+            names = _OPERAND_NAME_RE.findall(part)
+            if names:
+                operands.append(names[-1])
         op = Op(name, kind, type_text.strip(), operands, line)
         cur.ops.append(op)
         cur.table[name] = op.type_text

@@ -202,17 +202,26 @@ def banded_attention(q, k, v, *, window: int, chunk_q: int = 1024):
 def decode_attention(q1, k_cache, v_cache, cur_pos, *, window: Optional[int] = None):
     """Single-step decode: q1 (B,1,H,D) vs cache (B,Smax,Hkv,D).
 
-    For SWA layers only the last `window` positions are sliced (static
-    size), so FLOPs/bytes are O(W) not O(Smax).  For global layers the
-    full cache participates; under a sequence-sharded cache GSPMD turns
-    the softmax/PV reductions into the distributed flash-decoding
-    pattern (partial max/sum + all-reduce).
+    ``cur_pos`` is either a scalar (whole batch at one position — the
+    classic synchronized-decode path) or a (B,) vector of per-request
+    positions (continuous batching: every slot is at its own depth).
+
+    For SWA layers with a scalar position only the last `window`
+    positions are sliced (static size), so FLOPs/bytes are O(W) not
+    O(Smax); with per-slot positions the slice start would differ per
+    row, so the window is enforced by masking instead.  For global
+    layers the full cache participates; under a sequence-sharded cache
+    GSPMD turns the softmax/PV reductions into the distributed
+    flash-decoding pattern (partial max/sum + all-reduce).
     """
     b, _, h, d = q1.shape
     smax, hkv = k_cache.shape[1], k_cache.shape[2]
     g = h // hkv
     scale = d ** -0.5
-    if window is not None and window < smax:
+    cur_pos = jnp.asarray(cur_pos)
+    per_slot = cur_pos.ndim > 0
+    cur_b = cur_pos if per_slot else jnp.broadcast_to(cur_pos, (b,))  # (B,)
+    if window is not None and window < smax and not per_slot:
         start = jnp.clip(cur_pos + 1 - window, 0, smax - window)
         kc = jax.lax.dynamic_slice_in_dim(k_cache, start, window, axis=1)
         vc = jax.lax.dynamic_slice_in_dim(v_cache, start, window, axis=1)
@@ -222,8 +231,10 @@ def decode_attention(q1, k_cache, v_cache, cur_pos, *, window: Optional[int] = N
         k_pos = jnp.arange(smax)
     qg = q1.reshape(b, 1, hkv, g, d)
     logits = _gqa_logits(qg, kc) * scale  # (B,Hkv,G,1,S)
-    mask = k_pos <= cur_pos
-    logits = jnp.where(mask[None, None, None, None, :], logits, NEG_INF)
+    mask = k_pos[None, :] <= cur_b[:, None]  # (B,S)
+    if window is not None and per_slot:
+        mask &= (cur_b[:, None] - k_pos[None, :]) < window
+    logits = jnp.where(mask[:, None, None, None, :], logits, NEG_INF)
     attn = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", attn.astype(vc.dtype), vc,
                      preferred_element_type=jnp.float32)
@@ -241,11 +252,16 @@ def _split_heads(x, n, d):
 
 def attn_apply(p, x, cfg: AttnConfig, sp_cfg: SparsityConfig, *,
                positions, cache=None, layer_window: Optional[int] = None,
-               decode: bool = False):
-    """Returns (out, new_cache).  cache: dict(k, v) or dict(ckv, kpe) for MLA."""
+               decode: bool = False, per_slot: bool = False):
+    """Returns (out, new_cache).  cache: dict(k, v) or dict(ckv, kpe) for MLA.
+
+    per_slot=True (decode only): cache reads/writes are indexed by the
+    per-row `positions` instead of the shared `cache["pos"]` cursor, so
+    each batch row is an independent request slot (continuous batching).
+    """
     if cfg.kv_lora is not None:
         return _mla_apply(p, x, cfg, sp_cfg, positions=positions, cache=cache,
-                          decode=decode)
+                          decode=decode, per_slot=per_slot)
     h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
     q = _split_heads(L.dense_apply(p["q_proj"], x, "attn/q_proj", sp_cfg), h, hd)
     k = _split_heads(L.dense_apply(p["k_proj"], x, "attn/k_proj", sp_cfg), kv, hd)
@@ -265,16 +281,31 @@ def attn_apply(p, x, cfg: AttnConfig, sp_cfg: SparsityConfig, *,
 
     if decode:
         assert cache is not None
-        cur = cache["pos"]
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cur, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cur, axis=1)
+        if per_slot:
+            # slot-indexed cache write: every request (batch row) sits at
+            # its own position — `positions` (B,1) is the absolute
+            # position the incoming token is written to (continuous
+            # batching: rows join/leave the batch independently)
+            b = x.shape[0]
+            wpos = jnp.clip(positions[:, -1].astype(jnp.int32), 0,
+                            cache["k"].shape[1] - 1)
+            b_idx = jnp.arange(b)
+            k_cache = cache["k"].at[b_idx, wpos].set(
+                k[:, 0].astype(cache["k"].dtype))
+            v_cache = cache["v"].at[b_idx, wpos].set(
+                v[:, 0].astype(cache["v"].dtype))
+            cur = positions[:, -1]
+        else:
+            cur = cache["pos"]
+            k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cur, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cur, axis=1)
         # anchor: batch-sharded cache, heads over TP only when divisible —
         # without this GSPMD reshards heads over a subgroup and re-gathers
         # the whole stacked cache at the loop boundary
         k_cache = act(k_cache, BATCH, None, "model", None)
         v_cache = act(v_cache, BATCH, None, "model", None)
         out = decode_attention(q, k_cache, v_cache, cur, window=window)
-        new_cache = {"k": k_cache, "v": v_cache, "pos": cur + 1}
+        new_cache = {"k": k_cache, "v": v_cache, "pos": cache["pos"] + 1}
     else:
         if window is not None:
             out = banded_attention(q, k, v, window=window, chunk_q=cfg.chunk_q)
@@ -292,7 +323,8 @@ def attn_apply(p, x, cfg: AttnConfig, sp_cfg: SparsityConfig, *,
     return L.dense_apply(p["o_proj"], out, "attn/o_proj", sp_cfg), new_cache
 
 
-def _mla_apply(p, x, cfg: AttnConfig, sp_cfg, *, positions, cache, decode):
+def _mla_apply(p, x, cfg: AttnConfig, sp_cfg, *, positions, cache, decode,
+               per_slot: bool = False):
     """DeepSeek-V2 multi-head latent attention (compressed KV cache)."""
     h = cfg.n_heads
     dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
@@ -313,9 +345,19 @@ def _mla_apply(p, x, cfg: AttnConfig, sp_cfg, *, positions, cache, decode):
 
     if decode:
         assert cache is not None
-        cur = cache["pos"]
-        ckv_c = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv.astype(cache["ckv"].dtype), cur, axis=1)
-        kpe_c = jax.lax.dynamic_update_slice_in_dim(cache["kpe"], k_pe.astype(cache["kpe"].dtype), cur, axis=1)
+        if per_slot:
+            wpos = jnp.clip(positions[:, -1].astype(jnp.int32), 0,
+                            cache["ckv"].shape[1] - 1)
+            b_idx = jnp.arange(b)
+            ckv_c = cache["ckv"].at[b_idx, wpos].set(
+                ckv[:, 0].astype(cache["ckv"].dtype))
+            kpe_c = cache["kpe"].at[b_idx, wpos].set(
+                k_pe[:, 0].astype(cache["kpe"].dtype))
+            cur = positions[:, -1]
+        else:
+            cur = cache["pos"]
+            ckv_c = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv.astype(cache["ckv"].dtype), cur, axis=1)
+            kpe_c = jax.lax.dynamic_update_slice_in_dim(cache["kpe"], k_pe.astype(cache["kpe"].dtype), cur, axis=1)
         ckv_c = act(ckv_c, BATCH, None, None)
         kpe_c = act(kpe_c, BATCH, None, None)
         # absorbed-matrix decode: attention entirely in the lora space
@@ -327,13 +369,14 @@ def _mla_apply(p, x, cfg: AttnConfig, sp_cfg, *, positions, cache, decode):
                              kpe_c.astype(jnp.float32))
         scores *= (dn + dr) ** -0.5
         smax = ckv_c.shape[1]
-        mask = jnp.arange(smax) <= cur
-        scores = jnp.where(mask[None, None, None, :], scores, NEG_INF)
+        cur_b = jnp.broadcast_to(jnp.asarray(cur), (b,))  # (B,) per-row
+        mask = jnp.arange(smax)[None, :] <= cur_b[:, None]
+        scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
         attn = jax.nn.softmax(scores, axis=-1)
         ctx_c = jnp.einsum("bhqs,bsl->bqhl", attn, ckv_c.astype(jnp.float32))
         wv = p["v_up"]["w"].reshape(lora, h, dv)
         ctx = jnp.einsum("bqhl,lhv->bqhv", ctx_c, wv.astype(jnp.float32))
-        new_cache = {"ckv": ckv_c, "kpe": kpe_c, "pos": cur + 1}
+        new_cache = {"ckv": ckv_c, "kpe": kpe_c, "pos": cache["pos"] + 1}
     else:
         k_nope = L.dense_apply(p["k_up"], ckv, "attn/k_up", sp_cfg)
         k_nope = k_nope.reshape(*x.shape[:-1], h, dn)

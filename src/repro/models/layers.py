@@ -48,10 +48,20 @@ def dense_init(key, d_in: int, d_out: int, *, axes, bias: bool = False,
 def dense_apply(p, x, name: str, cfg: SparsityConfig, compute_dtype=jnp.bfloat16):
     """x @ w via BDWP with per-param sparsity eligibility.
 
-    Packed-serving params ({"vals","idx"} from bdwp.pack_tree_shared)
-    route to the reduced-K matmul (shared-mode N:M)."""
+    Packed-serving params route by leaf format:
+      * element-packed ({"vals","idx"} with idx.ndim == vals.ndim, from
+        serve.packed_params) -> kernels/nm_spmm consuming the compact
+        (vals, uint8 idx) pair directly (N/M of dense HBM bytes);
+      * shared-packed ({"vals","idx"} with per-row idx, from
+        bdwp.pack_tree_shared) -> the reduced-K gathered matmul."""
     if "vals" in p:
-        return bdwp.packed_shared_apply(p, x.astype(compute_dtype))
+        xc = x.astype(compute_dtype)
+        if p["idx"].ndim == p["vals"].ndim:
+            y = bdwp.nm_linear_packed(xc, p["vals"], p["idx"], cfg)
+            if "b" in p:
+                y = y + p["b"].astype(y.dtype)
+            return y
+        return bdwp.packed_shared_apply(p, xc)
     w = p["w"]
     eff = bdwp.pick_cfg(name, w.shape, cfg)
     y = bdwp.nm_linear(x.astype(compute_dtype), w, eff)

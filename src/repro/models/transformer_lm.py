@@ -161,7 +161,7 @@ def _block_init(key, cfg: LMConfig):
 
 
 def _block_apply(p, x, cfg: LMConfig, sp_cfg, *, positions, is_global,
-                 cache=None, decode=False):
+                 cache=None, decode=False, per_slot=False):
     """Returns (x, new_cache, aux_loss)."""
     kinds = cfg.layer_kinds()
     kind0 = kinds[0] if len(set(kinds)) == 1 else None
@@ -183,7 +183,8 @@ def _block_apply(p, x, cfg: LMConfig, sp_cfg, *, positions, is_global,
             if cache is not None else None
         a_out, a_nc = A.attn_apply(p["attn"], h, acfg, sp_cfg,
                                    positions=positions, cache=a_cache,
-                                   layer_window=cfg.window, decode=decode)
+                                   layer_window=cfg.window, decode=decode,
+                                   per_slot=per_slot)
         s_out, s_nc = S.ssm_apply(p["ssm"], h, cfg.ssm_cfg(), sp_cfg,
                                   cache=s_cache, decode=decode)
         mix = 0.5 * (a_out + s_out)  # hymba: parallel heads, mean-combined
@@ -197,19 +198,22 @@ def _block_apply(p, x, cfg: LMConfig, sp_cfg, *, positions, is_global,
             def global_branch(h_):
                 return A.attn_apply(p["attn"], h_, acfg, sp_cfg,
                                     positions=positions, cache=cache,
-                                    layer_window=None, decode=decode)
+                                    layer_window=None, decode=decode,
+                                    per_slot=per_slot)
 
             def local_branch(h_):
                 return A.attn_apply(p["attn"], h_, acfg, sp_cfg,
                                     positions=positions, cache=cache,
-                                    layer_window=cfg.window, decode=decode)
+                                    layer_window=cfg.window, decode=decode,
+                                    per_slot=per_slot)
 
             mix, nc = jax.lax.cond(is_global, global_branch, local_branch, h)
         else:
             window = cfg.window if kinds[0] == "swa" else None
             mix, nc = A.attn_apply(p["attn"], h, acfg, sp_cfg,
                                    positions=positions, cache=cache,
-                                   layer_window=window, decode=decode)
+                                   layer_window=window, decode=decode,
+                                   per_slot=per_slot)
         if nc is not None:
             new_cache = nc
     x = x + mix
@@ -294,11 +298,17 @@ def _layer_flags(cfg: LMConfig):
 
 
 def forward(params, tokens, cfg: LMConfig, sp_cfg: SparsityConfig = DENSE, *,
-            prefix_embeds=None, cache=None, decode=False, positions=None):
+            prefix_embeds=None, cache=None, decode=False, positions=None,
+            per_slot=False):
     """Shared trunk: returns (hidden (B,S,d), new_cache, aux_loss).
 
     prefix_embeds: (B, S_img, d) stub-frontend embeddings prepended to the
     token embeddings (internvl2 / whisper-style modality prefix).
+
+    per_slot (decode only): treat every batch row as an independent
+    request slot — cache writes/masks are indexed by the per-row
+    ``positions`` instead of the shared ``cache["pos"]`` cursor (the
+    serve engine's continuous-batching mode).
     """
     x = L.embed_apply(params["embed"], tokens)
     if prefix_embeds is not None:
@@ -314,7 +324,8 @@ def forward(params, tokens, cfg: LMConfig, sp_cfg: SparsityConfig = DENSE, *,
         pc = cache["prelude"] if cache is not None else None
         h = L.rmsnorm_apply(pre["ln1"], x)
         mix, pre_nc = A.attn_apply(pre["attn"], h, cfg.attn_cfg(), sp_cfg,
-                                   positions=positions, cache=pc, decode=decode)
+                                   positions=positions, cache=pc, decode=decode,
+                                   per_slot=per_slot)
         x = x + mix
         x = x + ffn_apply(pre["ffn"], L.rmsnorm_apply(pre["ln2"], x), sp_cfg)
     else:
@@ -326,7 +337,7 @@ def forward(params, tokens, cfg: LMConfig, sp_cfg: SparsityConfig = DENSE, *,
         xh, aux = carry
         bp, flag, layer_cache = xs
         fn = partial(_block_apply, cfg=cfg, sp_cfg=sp_cfg, positions=positions,
-                     decode=decode)
+                     decode=decode, per_slot=per_slot)
         if cfg.remat and not decode:
             fn = jax.checkpoint(
                 fn, policy=jax.checkpoint_policies.nothing_saveable,

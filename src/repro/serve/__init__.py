@@ -1,0 +1,23 @@
+"""Serving subsystem: continuous-batching decode from N:M-packed weights.
+
+Layering (each importable on its own):
+  packed_params — element-mode (SORE) packed parameter store: eligible
+                  weights live in HBM as compact (vals, idx) tensors and
+                  decode consumes them through kernels/nm_spmm, with
+                  actual-byte accounting (the paper's Fig. 11c win).
+  batcher       — fixed-capacity slot-paged KV cache + the single
+                  compiled decode step; requests join mid-flight into
+                  free slots and evict without recompiling.
+  engine        — request lifecycle (submit/step/harvest): admission,
+                  slot allocation, per-request stop conditions.
+"""
+
+from repro.serve.batcher import ContinuousBatcher, SlotKVCache, seat_cache
+from repro.serve.engine import Request, ServeConfig, ServeEngine
+from repro.serve.packed_params import PackedParamStore, pack_tree_element
+
+__all__ = [
+    "ContinuousBatcher", "SlotKVCache", "seat_cache",
+    "Request", "ServeConfig", "ServeEngine",
+    "PackedParamStore", "pack_tree_element",
+]

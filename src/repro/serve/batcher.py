@@ -1,0 +1,182 @@
+"""Continuous batching over a fixed-capacity slot-paged KV cache.
+
+The cache is one device-resident pytree with a leading *slot* axis
+(``n_slots`` lanes, each ``max_len`` deep).  Requests join mid-flight
+into free slots and finished requests evict without touching the
+device: eviction is a host-side bitmap flip, and the next admission
+overwrites the slot's lanes.  Because every step runs at the same
+static shape — (n_slots, 1) tokens, (n_slots,) positions — there is
+exactly ONE compiled decode step for the engine's whole lifetime,
+regardless of join/evict order (the per-slot position/mask semantics
+live in models/attention's ``per_slot`` decode path).
+
+Prompts are right-padded to one static bucket (``prompt_bucket``) so
+prefill also compiles once; the padded lanes hold garbage KV but stay
+masked (``k_pos <= pos``) until the decode cursor overwrites them, so
+they are never attended to.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparsity import DENSE, SparsityConfig
+from repro.models import transformer_lm as T
+from repro.train import step as ST
+
+
+def _seat_leaf(dst, src, slot, batch_axis: int):
+    """Write a single-request cache leaf into lane ``slot`` of the
+    engine cache.  Leaves without a slot axis at ``batch_axis`` (the
+    per-layer ``pos`` cursors — meaningless under per-slot decode) are
+    left untouched."""
+    if dst.ndim <= batch_axis or src.ndim != dst.ndim \
+            or src.shape[batch_axis] != 1:
+        return dst
+    starts = [jnp.zeros((), jnp.int32)] * dst.ndim
+    starts[batch_axis] = jnp.asarray(slot, jnp.int32)
+    return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), starts)
+
+
+def seat_cache(cache, pre_cache, slot):
+    """Seat a batch-1 prefill cache into lane ``slot`` of the slot-paged
+    engine cache (jit-safe; ``slot`` may be traced).
+
+    Layout contract (models/transformer_lm.init_lm_cache): scanned-layer
+    leaves are stacked as (L, B, ...) — slot axis 1; the optional
+    ``prelude`` subtree is unstacked (B, ...) — slot axis 0.
+    """
+    out = dict(cache)
+    out["layers"] = jax.tree.map(
+        partial(_seat_leaf, slot=slot, batch_axis=1),
+        cache["layers"], pre_cache["layers"])
+    if "prelude" in cache:
+        out["prelude"] = jax.tree.map(
+            partial(_seat_leaf, slot=slot, batch_axis=0),
+            cache["prelude"], pre_cache["prelude"])
+    return out
+
+
+class SlotKVCache:
+    """Device cache with a host-side free-slot bitmap."""
+
+    def __init__(self, cfg, n_slots: int, max_len: int, dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = T.init_lm_cache(cfg, n_slots, max_len, dtype)
+        self._free = list(range(n_slots))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        """Claim the lowest free slot (deterministic reuse order)."""
+        if not self._free:
+            return None
+        self._free.sort()
+        return self._free.pop(0)
+
+    def free(self, slot: int) -> None:
+        if slot in self._free:
+            raise ValueError(f"slot {slot} already free")
+        if not 0 <= slot < self.n_slots:
+            raise ValueError(f"slot {slot} out of range")
+        self._free.append(slot)
+
+
+class ContinuousBatcher:
+    """One-compile prefill/seat/decode over a SlotKVCache.
+
+    Host state: per-slot next input token (n_slots, 1) and per-slot
+    absolute write position (n_slots,).  Free slots keep decoding
+    garbage lanes (their writes are clipped in-bounds and their outputs
+    ignored); correctness for reused slots follows from the position
+    mask — a lane is only attendable once the cursor has passed it,
+    i.e. after this request wrote it.
+    """
+
+    def __init__(self, params, cfg, sp_cfg: SparsityConfig = DENSE, *,
+                 n_slots: int, max_len: int, prompt_bucket: int,
+                 cache_dtype=jnp.bfloat16, mesh=None):
+        if prompt_bucket > max_len:
+            raise ValueError("prompt_bucket must be <= max_len")
+        self.params = params
+        self.cfg = cfg
+        self.sp_cfg = sp_cfg
+        self.prompt_bucket = prompt_bucket
+        self.kv = SlotKVCache(cfg, n_slots, max_len, cache_dtype)
+        self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
+        self.positions = jnp.zeros((n_slots,), jnp.int32)
+        vocab = cfg.vocab
+
+        def prefill_fn(p, toks, last_index):
+            logits, cache = ST.lm_prefill_step(
+                p, {"tokens": toks}, cfg=cfg, sp_cfg=sp_cfg, mesh=mesh,
+                last_index=last_index)
+            first = jnp.argmax(logits[:, -1, :vocab], axis=-1)
+            return first.astype(jnp.int32), cache
+
+        def decode_fn(p, cache, toks, pos):
+            logits, cache = ST.lm_decode_step(
+                p, cache, toks, pos, cfg=cfg, sp_cfg=sp_cfg, mesh=mesh,
+                per_slot=True)
+            nxt = jnp.argmax(logits[:, -1, :vocab], axis=-1)
+            return nxt.astype(jnp.int32), cache
+
+        self._prefill = jax.jit(prefill_fn)
+        self._seat = jax.jit(seat_cache, donate_argnums=(0,))
+        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+
+    # -- admission ----------------------------------------------------------
+
+    def admit(self, prompt) -> tuple[int, int]:
+        """Prefill ``prompt`` (len <= prompt_bucket) into a free slot.
+
+        Returns (slot, first generated token).  Raises if no slot is
+        free — the engine checks ``kv.n_free`` first.
+        """
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        plen = prompt.shape[0]
+        if not 0 < plen <= self.prompt_bucket:
+            raise ValueError(
+                f"prompt length {plen} not in (0, {self.prompt_bucket}]")
+        slot = self.kv.alloc()
+        if slot is None:
+            raise RuntimeError("no free slot")
+        padded = np.zeros((1, self.prompt_bucket), np.int32)
+        padded[0, :plen] = prompt
+        first, pre_cache = self._prefill(
+            self.params, jnp.asarray(padded), jnp.asarray([plen - 1]))
+        self.kv.cache = self._seat(self.kv.cache, pre_cache,
+                                   jnp.asarray(slot, jnp.int32))
+        first_tok = int(first[0])
+        self.tokens = self.tokens.at[slot, 0].set(first_tok)
+        self.positions = self.positions.at[slot].set(plen)
+        return slot, first_tok
+
+    def evict(self, slot: int) -> None:
+        """Release a slot — host-side only; no device work, no recompile."""
+        self.kv.free(slot)
+
+    # -- decode -------------------------------------------------------------
+
+    def step(self) -> np.ndarray:
+        """One decode step for all n_slots lanes; returns (n_slots,)
+        next-token ids (garbage on free lanes — callers index by their
+        active slots)."""
+        nxt, self.kv.cache = self._decode(
+            self.params, self.kv.cache, self.tokens, self.positions)
+        self.tokens = nxt[:, None]
+        self.positions = self.positions + 1
+        return np.asarray(nxt)

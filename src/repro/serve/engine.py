@@ -1,0 +1,218 @@
+"""Request lifecycle manager: submit / step / harvest.
+
+The engine fronts a ContinuousBatcher with a FIFO admission queue and
+per-request stop conditions (max_new_tokens, optional EOS token, KV
+capacity).  One ``step()`` = admit as many queued requests as there are
+free slots (each costs one fixed-shape prefill + seat), then one
+batched decode step for every lane; finished requests evict their slot
+immediately, so a queued request can join on the very next step —
+continuous batching, not static batching.
+
+With ``packed=True`` the engine serves from an element-mode
+PackedParamStore: decode matmuls consume compact (vals, idx) tensors
+through kernels/nm_spmm at ~N/M of the dense weight HBM bytes
+(``engine.hbm_report()`` gives the actual numbers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+from repro.core.sparsity import DENSE, SparsityConfig
+from repro.serve.batcher import ContinuousBatcher
+from repro.serve.packed_params import PackedParamStore
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Static engine shape — fixes the one-and-only compiled step."""
+
+    n_slots: int = 4          # concurrent requests (KV lanes)
+    max_len: int = 96         # per-slot KV depth (prompt + generation)
+    prompt_bucket: int = 32   # prompts right-padded to this length
+    eos_token: Optional[int] = None  # engine-wide default stop token
+    packed: bool = False      # serve from element-packed N:M weights
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    eos: Optional[int]
+    state: str = "queued"             # queued | running | done
+    slot: Optional[int] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    submit_step: int = 0
+    finish_step: int = 0
+
+    @property
+    def finish_reason(self) -> str:
+        if self.eos is not None and self.tokens and self.tokens[-1] == self.eos:
+            return "eos"
+        return "length"
+
+
+class ServeEngine:
+    """Continuous-batching greedy-decode engine over N:M-sparse weights."""
+
+    def __init__(self, params, cfg, sp_cfg: SparsityConfig = DENSE,
+                 serve_cfg: ServeConfig = ServeConfig(), *, mesh=None,
+                 cache_dtype=None):
+        import jax.numpy as jnp
+
+        self.cfg = cfg
+        self.sp_cfg = sp_cfg
+        self.serve_cfg = serve_cfg
+        self.store: Optional[PackedParamStore] = None
+        if serve_cfg.packed:
+            self.store = PackedParamStore.pack(params, sp_cfg)
+            params = self.store.params
+        self.batcher = ContinuousBatcher(
+            params, cfg, sp_cfg,
+            n_slots=serve_cfg.n_slots, max_len=serve_cfg.max_len,
+            prompt_bucket=serve_cfg.prompt_bucket,
+            cache_dtype=cache_dtype or jnp.bfloat16, mesh=mesh)
+        self._queue: deque[Request] = deque()
+        self._running: Dict[int, Request] = {}   # slot -> request
+        self._done: Dict[int, Request] = {}      # rid -> request
+        self._next_rid = 0
+        self.step_count = 0
+        self.decode_steps = 0
+        self.decoded_tokens = 0   # harvested from active lanes only
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int = 16,
+               eos: Optional[int] = None) -> int:
+        """Queue a request; returns its rid.  Admission happens in step().
+
+        Validates against the static engine shape: the prompt must fit
+        the prefill bucket and prompt+generation must fit a KV lane.
+        """
+        prompt = [int(t) for t in prompt]
+        sc = self.serve_cfg
+        if not 0 < len(prompt) <= sc.prompt_bucket:
+            raise ValueError(f"prompt length {len(prompt)} not in "
+                             f"(0, {sc.prompt_bucket}]")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if len(prompt) + max_new_tokens > sc.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds per-slot KV capacity {sc.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=prompt, max_new_tokens=max_new_tokens,
+                      eos=eos if eos is not None else sc.eos_token,
+                      submit_step=self.step_count)
+        self._queue.append(req)
+        return rid
+
+    def _should_stop(self, req: Request) -> bool:
+        if len(req.tokens) >= req.max_new_tokens:
+            return True
+        if req.eos is not None and req.tokens and req.tokens[-1] == req.eos:
+            return True
+        return False
+
+    def _finish(self, req: Request) -> None:
+        req.state = "done"
+        req.finish_step = self.step_count
+        self.batcher.evict(req.slot)
+        del self._running[req.slot]
+        self._done[req.rid] = req
+
+    def step(self) -> dict:
+        """Admit from the queue, decode one token for every active slot.
+
+        Returns an event dict: {"admitted": [rid], "finished": [rid],
+        "active": n_running_after}.
+        """
+        events = {"admitted": [], "finished": [], "active": 0}
+        # 1. admission: queued requests join mid-flight into free slots
+        while self._queue and self.batcher.kv.n_free > 0:
+            req = self._queue.popleft()
+            slot, first_tok = self.batcher.admit(req.prompt)
+            req.slot, req.state = slot, "running"
+            req.tokens.append(first_tok)
+            self._running[slot] = req
+            self.decoded_tokens += 1
+            events["admitted"].append(req.rid)
+            if self._should_stop(req):   # e.g. max_new_tokens == 1
+                self._finish(req)
+                events["finished"].append(req.rid)
+        # 2. one batched decode step (all lanes; free lanes are garbage)
+        if self._running:
+            nxt = self.batcher.step()
+            self.decode_steps += 1
+            for slot, req in list(self._running.items()):
+                tok = int(nxt[slot])
+                req.tokens.append(tok)
+                self.decoded_tokens += 1
+                if self._should_stop(req):
+                    self._finish(req)
+                    events["finished"].append(req.rid)
+        events["active"] = len(self._running)
+        self.step_count += 1
+        return events
+
+    def reset(self) -> None:
+        """Clear host-side counters/results between workloads while
+        keeping the expensive state (packed store, compiled prefill/
+        seat/decode, device cache) — stale KV lanes are harmless by the
+        slot-reuse invariant.  Refuses with work in flight."""
+        if self._queue or self._running:
+            raise RuntimeError("reset() with requests queued or running")
+        self._done = {}
+        self.step_count = 0
+        self.decode_steps = 0
+        self.decoded_tokens = 0
+
+    def run(self, max_steps: int = 100_000) -> Dict[int, List[int]]:
+        """Drive step() until queue and slots drain; returns harvest()."""
+        steps = 0
+        while (self._queue or self._running) and steps < max_steps:
+            self.step()
+            steps += 1
+        if self._queue or self._running:
+            raise RuntimeError(f"engine did not drain in {max_steps} steps")
+        return self.harvest()
+
+    @property
+    def finished_requests(self) -> List[Request]:
+        """Finished Request objects (submit/finish step stamps intact);
+        does not pop — harvest() does."""
+        return list(self._done.values())
+
+    def harvest(self) -> Dict[int, List[int]]:
+        """Pop finished requests: {rid: generated token ids}."""
+        out = {rid: req.tokens for rid, req in self._done.items()}
+        self._done = {}
+        return out
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)
+
+    @property
+    def n_running(self) -> int:
+        return len(self._running)
+
+    def hbm_report(self) -> Optional[dict]:
+        """Actual packed-weight HBM bytes (None when serving dense)."""
+        return self.store.report() if self.store is not None else None
+
+    def stats(self) -> dict:
+        return {
+            "steps": self.step_count,
+            "decode_steps": self.decode_steps,
+            "decoded_tokens": self.decoded_tokens,
+            "n_slots": self.serve_cfg.n_slots,
+            "queued": self.n_queued,
+            "running": self.n_running,
+        }

@@ -1,0 +1,144 @@
+"""Element-mode packed parameter store — serve from compact (vals, idx).
+
+The paper's inference-side dataflow (Fig. 11c): after BDWP training the
+FF weights are N:M sparse, so serving never needs the dense tensors.
+Each eligible weight ``w (…, K, F)`` is SORE-packed along the FF
+contraction axis into
+
+    vals (…, K·N/M, F)   — surviving values, weight dtype
+    idx  (…, K·N/M, F)   — uint8 within-group offsets (0..M-1)
+
+and the decode matmuls consume the pair directly through
+``kernels/nm_spmm`` (Pallas on TPU, oracle elsewhere) — weights stream
+from HBM at ~N/M of the dense bytes instead of being re-masked dense.
+
+Element mode keeps the paper-faithful per-column patterns (exactly the
+mask BDWP trained with), unlike ``bdwp.pack_tree_shared`` whose shared
+patterns change values.  ``PackedParamStore`` also reports the *actual*
+HBM bytes of the packed tree vs. its dense equivalent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bdwp
+from repro.core.sparsity import SparsityConfig, nm_pack
+
+
+def _leaf_bytes(x) -> int:
+    return int(x.size) * jnp.dtype(x.dtype).itemsize
+
+
+def pack_tree_element(params, cfg: SparsityConfig):
+    """Transform a param tree for element-mode packed serving.
+
+    Every eligible ``{"w": (…, K, F)}`` leaf-dict (same FF-direction
+    eligibility as shared packing: ``bdwp.serve_packable``) becomes
+    ``{"vals", "idx"(, "b")}``; stacked (L, K, F) weights pack per layer.
+    Returns ``(packed_tree, stats)`` where stats counts actual bytes.
+    """
+    stats = {"n_packed": 0, "n_dense": 0,
+             "packed_bytes": 0,      # vals + uint8 idx as stored
+             "packed_bytes_4bit": 0,  # vals + ceil(log2 M)-bit idx (SORE)
+             "dense_bytes": 0,       # dense bytes of the packed leaves
+             "other_bytes": 0}       # leaves kept dense
+    idx_bits = max(1, math.ceil(math.log2(cfg.m)))
+
+    def pack_ok(name, w) -> bool:
+        # Parity with the masked forward is the invariant: pack a weight
+        # only if training/masked decode FF-sparsifies it too — i.e. the
+        # method prunes FF weights at all, dense_apply's pick_cfg selects
+        # this weight (should_prune: name exclusions AND divisibility of
+        # every grouped axis, K and F for bdwp), and it is FF-servable
+        # (serve_packable: 2-D tail, no lm_head/k_up/v_up).  A weight
+        # that trains dense must serve dense.
+        return (cfg.prunes_ff_weights()
+                and bdwp.should_prune(name, tuple(w.shape[-2:]), cfg)
+                and bdwp.serve_packable(name, tuple(w.shape[-2:]), cfg))
+
+    def walk(node, path):
+        if isinstance(node, dict) and "w" in node:
+            w = node["w"]
+            name = "/".join(str(k) for k in path)
+            if pack_ok(name, w):
+                vals, idx = nm_pack(w, cfg.n, cfg.m, axis=w.ndim - 2)
+                new = {"vals": vals, "idx": idx}
+                stats["n_packed"] += 1
+                stats["dense_bytes"] += _leaf_bytes(w)
+                stats["packed_bytes"] += _leaf_bytes(vals) + _leaf_bytes(idx)
+                stats["packed_bytes_4bit"] += (
+                    _leaf_bytes(vals) + int(idx.size) * idx_bits // 8)
+                if "b" in node:
+                    new["b"] = node["b"]
+                    stats["other_bytes"] += _leaf_bytes(node["b"])
+                return new
+            stats["n_dense"] += 1
+            stats["other_bytes"] += sum(_leaf_bytes(x)
+                                        for x in jax.tree.leaves(node))
+            return node
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        stats["other_bytes"] += _leaf_bytes(node)
+        return node
+
+    packed = walk(params, ())
+    return packed, stats
+
+
+@dataclasses.dataclass
+class PackedParamStore:
+    """Packed weights + byte accounting; ``.params`` plugs into forward().
+
+    ``models.layers.dense_apply`` recognizes element-packed leaf-dicts
+    (idx.ndim == vals.ndim) and routes them through the nm_spmm kernel,
+    so the whole model runs from the compact representation without any
+    model-code changes.
+    """
+
+    params: dict
+    sp_cfg: SparsityConfig
+    n_packed: int
+    n_dense: int
+    packed_bytes: int        # stored bytes of packed leaves (uint8 idx)
+    packed_bytes_4bit: int   # with ceil(log2 M)-bit indices (SORE format)
+    dense_bytes: int         # dense-equivalent bytes of the packed leaves
+    other_bytes: int         # leaves served dense (embeds, norms, head)
+
+    @classmethod
+    def pack(cls, params, sp_cfg: SparsityConfig) -> "PackedParamStore":
+        packed, st = pack_tree_element(params, sp_cfg)
+        return cls(params=packed, sp_cfg=sp_cfg,
+                   n_packed=st["n_packed"], n_dense=st["n_dense"],
+                   packed_bytes=st["packed_bytes"],
+                   packed_bytes_4bit=st["packed_bytes_4bit"],
+                   dense_bytes=st["dense_bytes"],
+                   other_bytes=st["other_bytes"])
+
+    @property
+    def hbm_saving(self) -> float:
+        """Dense/packed byte ratio over the packable weights."""
+        return self.dense_bytes / max(self.packed_bytes, 1)
+
+    @property
+    def total_bytes(self) -> int:
+        return self.packed_bytes + self.other_bytes
+
+    def report(self) -> dict:
+        return {
+            "n_packed": self.n_packed,
+            "n_dense": self.n_dense,
+            "n": self.sp_cfg.n, "m": self.sp_cfg.m,
+            "packed_weight_bytes": self.packed_bytes,
+            "packed_weight_bytes_4bit_idx": self.packed_bytes_4bit,
+            "dense_weight_bytes": self.dense_bytes,
+            "other_param_bytes": self.other_bytes,
+            "hbm_saving": self.hbm_saving,
+            "total_hbm_bytes": self.total_bytes,
+            "total_hbm_bytes_dense": self.dense_bytes + self.other_bytes,
+        }

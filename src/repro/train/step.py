@@ -110,7 +110,14 @@ def _serve_dp(mesh, long_context):
 
 
 def lm_prefill_step(params, batch, *, cfg, sp_cfg, mesh=None,
-                    long_context=False):
+                    long_context=False, last_index=None):
+    """Prefill: build the KV cache and return next-token logits.
+
+    last_index: optional (B,) int array of per-request *last real token*
+    indices.  With right-padded prompts (the serve engine pads every
+    prompt to one static bucket so prefill compiles once), logits must be
+    read at each request's own final position, not at s-1.
+    """
     b, s = batch["tokens"].shape
     prefix = batch.get("prefix_embeds")
     s_tot = s + (prefix.shape[1] if prefix is not None else 0)
@@ -118,18 +125,37 @@ def lm_prefill_step(params, batch, *, cfg, sp_cfg, mesh=None,
         cache = T.init_lm_cache(cfg, b, s_tot)
         hidden, cache, _ = T.forward(params, batch["tokens"], cfg, sp_cfg,
                                      prefix_embeds=prefix, cache=cache)
-        logits = T.logits_from_hidden(params, hidden[:, -1:], cfg)
+        if last_index is None:
+            h_last = hidden[:, -1:]
+        else:
+            idx = jnp.asarray(last_index, jnp.int32).reshape(b, 1, 1)
+            h_last = jnp.take_along_axis(
+                hidden, jnp.broadcast_to(idx, (b, 1, hidden.shape[-1])),
+                axis=1)
+        logits = T.logits_from_hidden(params, h_last, cfg)
     return logits, cache
 
 
 def lm_decode_step(params, cache, token, pos, *, cfg, sp_cfg, mesh=None,
-                   long_context=False):
+                   long_context=False, per_slot=False):
+    """One decode step.
+
+    pos: scalar — the classic synchronized batch (all rows at the same
+    depth, shared cache cursor); or (B,) vector with per_slot=True — the
+    continuous-batching mode where every row is an independent request
+    slot at its own position (cache writes/masks are slot-indexed).
+    """
     b = token.shape[0]
-    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    else:
+        positions = pos.reshape(b, 1)
     with R.activation_sharding(mesh, _serve_dp(mesh, long_context)):
         hidden, new_cache, _ = T.forward(params, token, cfg, sp_cfg,
                                          cache=cache, decode=True,
-                                         positions=positions)
+                                         positions=positions,
+                                         per_slot=per_slot)
         logits = T.logits_from_hidden(params, hidden, cfg)
     return logits, new_cache
 

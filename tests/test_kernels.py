@@ -9,6 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # bare env: skip, don't fail collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core import sparsity as S

@@ -1,0 +1,210 @@
+"""Continuous-batching serve engine tests (CPU, smoke config).
+
+The load-bearing property: batch composition is invisible to a request.
+A request decoded alongside arbitrary other traffic — joining
+mid-flight, into a reused slot, from packed or masked weights — must
+produce exactly the token stream of decoding it alone.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.sparsity import SparsityConfig
+from repro.models import transformer_lm as T
+from repro.serve import PackedParamStore, ServeConfig, ServeEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCH = get_arch("qwen3-8b")
+CFG = ARCH.smoke
+SP = SparsityConfig(n=2, m=8, method="bdwp")
+SERVE = ServeConfig(n_slots=2, max_len=32, prompt_bucket=12)
+
+
+@pytest.fixture(scope="module")
+def params():
+    p, _ = T.init(jax.random.PRNGKey(0), CFG)
+    return jax.tree.map(lambda w: w.astype(jnp.bfloat16), p)
+
+
+def _prompts(lens, seed=11):
+    key = jax.random.PRNGKey(seed)
+    return [np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                          (n,), 0, CFG.vocab))
+            for i, n in enumerate(lens)]
+
+
+def _solo(params, prompt, max_new, serve_cfg=SERVE):
+    eng = ServeEngine(params, CFG, SP, serve_cfg)
+    rid = eng.submit(prompt, max_new_tokens=max_new)
+    return eng.run()[rid]
+
+
+class TestContinuousBatching:
+    def test_mid_flight_join_matches_solo(self, params):
+        """The acceptance workload: 3 mixed-length requests through 2
+        slots, the third joining the running batch in the slot freed by
+        the first — all streams identical to solo greedy decode."""
+        prompts = _prompts((4, 8, 12))
+        solo = [_solo(params, p, m) for p, m in
+                zip(prompts, (4, 10, 10))]
+
+        eng = ServeEngine(params, CFG, SP, SERVE)
+        r0 = eng.submit(prompts[0], max_new_tokens=4)
+        r1 = eng.submit(prompts[1], max_new_tokens=10)
+        r2 = None
+        steps = 0
+        while eng.n_running or eng.n_queued or r2 is None:
+            ev = eng.step()
+            if r2 is None and r0 in ev["finished"]:
+                # r1 still mid-flight: the join is continuous batching
+                assert eng.n_running == 1
+                r2 = eng.submit(prompts[2], max_new_tokens=10)
+            steps += 1
+            assert steps < 100
+        out = eng.harvest()
+        assert out[r0] == solo[0]
+        assert out[r1] == solo[1]
+        assert out[r2] == solo[2]
+
+    def test_slot_reuse_after_eviction(self, params):
+        """4 requests through 2 slots: the 3rd/4th decode in evicted
+        lanes over stale KV garbage and must reproduce the 1st/2nd."""
+        prompts = _prompts((5, 9))
+        eng = ServeEngine(params, CFG, SP, SERVE)
+        rids = [eng.submit(p, max_new_tokens=6) for p in prompts * 2]
+        out = eng.run()
+        # slots were actually reused
+        assert eng.batcher.kv.n_free == SERVE.n_slots
+        assert out[rids[2]] == out[rids[0]]
+        assert out[rids[3]] == out[rids[1]]
+
+    def test_queue_admission_order_and_capacity(self, params):
+        prompts = _prompts((4, 4, 4))
+        eng = ServeEngine(params, CFG, SP, SERVE)
+        rids = [eng.submit(p, max_new_tokens=3) for p in prompts]
+        ev = eng.step()
+        # only n_slots requests admitted; the third waits queued
+        assert ev["admitted"] == rids[:2]
+        assert eng.n_queued == 1
+        out = eng.run()
+        assert sorted(out) == sorted(rids)
+
+    def test_eos_stop_condition(self, params):
+        prompt = _prompts((6,))[0]
+        ref = _solo(params, prompt, 12)
+        eos = ref[3]
+        eng = ServeEngine(params, CFG, SP, SERVE)
+        rid = eng.submit(prompt, max_new_tokens=12, eos=eos)
+        out = eng.run()[rid]
+        stop = ref.index(eos)
+        assert out == ref[:stop + 1]
+        assert eng.finished_requests == []  # harvested
+
+    def test_submit_validation(self, params):
+        eng = ServeEngine(params, CFG, SP, SERVE)
+        with pytest.raises(ValueError):
+            eng.submit([1] * (SERVE.prompt_bucket + 1))
+        with pytest.raises(ValueError):
+            eng.submit([])
+        with pytest.raises(ValueError):
+            eng.submit([1, 2], max_new_tokens=SERVE.max_len)  # KV overflow
+        with pytest.raises(ValueError):
+            eng.submit([1, 2], max_new_tokens=0)
+
+
+class TestPackedServing:
+    def test_packed_matches_masked_decode(self, params):
+        """Element-packed (vals, idx) decode through kernels/nm_spmm
+        produces the same streams as the re-masked dense weights."""
+        prompts = _prompts((5, 10))
+        packed_cfg = ServeConfig(n_slots=2, max_len=32, prompt_bucket=12,
+                                 packed=True)
+
+        def run(scfg):
+            eng = ServeEngine(params, CFG, SP, scfg)
+            rids = [eng.submit(p, max_new_tokens=8) for p in prompts]
+            out = eng.run()
+            return eng, [out[r] for r in rids]
+
+        _, masked = run(SERVE)
+        eng_p, packed = run(packed_cfg)
+        assert packed == masked
+        assert eng_p.store is not None and eng_p.store.n_packed > 0
+
+    def test_store_byte_accounting(self, params):
+        store = PackedParamStore.pack(params, SP)
+        rep = store.report()
+        # vals at n/m of dense + one uint8 index per survivor (bf16 w:
+        # vals = dense/4 at 2:8, idx adds half of vals) -> 8/3 saving
+        assert rep["n_packed"] > 0
+        assert rep["packed_weight_bytes"] < rep["dense_weight_bytes"]
+        want = rep["dense_weight_bytes"] * SP.n / SP.m * 1.5
+        assert rep["packed_weight_bytes"] == int(want)
+        # 4-bit-index format (SORE, m=8 -> 3 bits stored in 4) is smaller
+        assert rep["packed_weight_bytes_4bit_idx"] < rep["packed_weight_bytes"]
+        assert rep["hbm_saving"] == pytest.approx(8 / 3, rel=1e-6)
+        # exclusions hold: embeddings / lm_head stay dense
+        assert "embed_table" in store.params["embed"]
+        assert "w" in store.params["lm_head"]
+
+    def test_dense_trained_weight_stays_dense(self):
+        """Eligibility parity: a weight the training path keeps dense
+        (bdwp needs BOTH K and F divisible by m) must not be packed —
+        packing it would zero values the masked forward keeps."""
+        from repro.serve import pack_tree_element
+        tree = {"proj": {"w": jax.random.normal(jax.random.PRNGKey(0),
+                                                (32, 20))}}  # F=20 % 8 != 0
+        packed, st = pack_tree_element(tree, SP)
+        assert "w" in packed["proj"]
+        assert st["n_packed"] == 0 and st["n_dense"] == 1
+
+    def test_packed_leaf_consumed_by_kernel_path(self, params):
+        """dense_apply dispatches element-packed leaves to nm_spmm; the
+        interpret-mode Pallas kernel agrees with the oracle route."""
+        from repro.core import bdwp
+        from repro.core.sparsity import nm_pack, sparsify
+
+        wd = params["blocks"]["ffn"]["w_gate"]["w"][0]  # (K, F) layer 0
+        vals, idx = nm_pack(wd, SP.n, SP.m, axis=0)
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, wd.shape[0]),
+                              jnp.bfloat16)
+        y_oracle = bdwp.nm_linear_packed(x, vals, idx, SP, use_pallas=False)
+        y_kernel = bdwp.nm_linear_packed(x, vals, idx, SP, use_pallas=True)
+        y_masked = jnp.matmul(x, sparsify(wd, SP, axis=0).astype(x.dtype))
+        np.testing.assert_allclose(np.asarray(y_oracle, np.float32),
+                                   np.asarray(y_kernel, np.float32),
+                                   rtol=2e-2, atol=1e-2)
+        np.testing.assert_allclose(np.asarray(y_oracle, np.float32),
+                                   np.asarray(y_masked, np.float32),
+                                   rtol=2e-2, atol=1e-2)
+
+
+class TestSlotCacheMechanics:
+    def test_alloc_free_lowest_first(self, params):
+        from repro.serve import SlotKVCache
+        kv = SlotKVCache(CFG, 3, 16)
+        assert [kv.alloc(), kv.alloc(), kv.alloc()] == [0, 1, 2]
+        assert kv.alloc() is None
+        kv.free(1)
+        kv.free(0)
+        assert kv.alloc() == 0  # deterministic lowest-first reuse
+        with pytest.raises(ValueError):
+            kv.free(1)  # already free
+
+    def test_seat_writes_only_target_slot(self, params):
+        """Seating a prefill cache must not disturb other lanes."""
+        from repro.serve.batcher import ContinuousBatcher
+        b = ContinuousBatcher(params, CFG, SP, n_slots=3, max_len=16,
+                              prompt_bucket=8)
+        k0 = np.asarray(b.kv.cache["layers"]["k"], np.float32)
+        prompt = _prompts((6,))[0]
+        slot, _ = b.admit(prompt)
+        k1 = np.asarray(b.kv.cache["layers"]["k"], np.float32)
+        assert slot == 0
+        other = [s for s in range(3) if s != slot]
+        np.testing.assert_array_equal(k1[:, other], k0[:, other])
+        assert np.abs(k1[:, slot, :6]).sum() > 0  # prompt KV landed
