@@ -1,0 +1,144 @@
+"""Bench regression gate: fresh results/BENCH_*.json vs committed baselines.
+
+  PYTHONPATH=src python -m benchmarks.check_regression [--tolerance 0.2]
+  PYTHONPATH=src python -m benchmarks.check_regression --update
+
+Baselines live in benchmarks/baselines/ (committed — the bench
+trajectory starts here).  Only *deterministic* metrics are gated (byte
+counts, token counts, ratios); wall-clock numbers are recorded in the
+JSON but never compared — CI machines are too noisy.  A gated metric
+drifting more than ``--tolerance`` (default ±20%) from its baseline
+exits nonzero with a per-metric report; ``--update`` rewrites the
+baselines from the fresh results instead (run it when a drift is
+intentional and commit the diff).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+HERE = os.path.dirname(__file__)
+RESULTS = os.path.join(HERE, "..", "results")
+BASELINES = os.path.join(HERE, "baselines")
+
+# file -> dotted-path prefixes of gated metrics.  A prefix selects every
+# numeric leaf beneath it ("loads.*" wildcards one list level).
+GATES = {
+    "BENCH_serve.json": [
+        "hbm.packed_weight_bytes",
+        "hbm.dense_weight_bytes",
+        "hbm.hbm_saving",
+        "hbm.total_hbm_bytes",
+        "loads.*.tokens",
+        "loads.*.decode_steps",
+        "loads.*.slot_utilization",
+    ],
+    "BENCH_spmd.json": [
+        "sync.dense_bytes",
+        "sync.packed_bytes",
+        "sync.wire_ratio",
+        "variants.dense_sync.collectives.total",
+        "variants.compressed_sync.collectives.total",
+        "variants.dense_sync.hlo_flops",
+        "variants.compressed_sync.hlo_flops",
+    ],
+}
+
+
+def _flatten(node, prefix=""):
+    out = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            out.update(_flatten(v, f"{prefix}{k}."))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            out.update(_flatten(v, f"{prefix}{i}."))
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        out[prefix[:-1]] = float(node)
+    return out
+
+
+def _match(path: str, pattern: str) -> bool:
+    ps, qs = path.split("."), pattern.split(".")
+    if len(ps) < len(qs):
+        return False
+    return all(q == "*" or p == q for p, q in zip(ps, qs))
+
+
+def check_file(name: str, fresh_path: str, base_path: str,
+               tol: float) -> list:
+    with open(fresh_path) as f:
+        fresh = _flatten(json.load(f))
+    with open(base_path) as f:
+        base = _flatten(json.load(f))
+    failures = []
+    patterns = GATES[name]
+    gated = [p for p in base
+             if any(_match(p, pat) for pat in patterns)]
+    for path in sorted(gated):
+        old = base[path]
+        new = fresh.get(path)
+        if new is None:
+            failures.append(f"{name}:{path}: metric vanished "
+                            f"(baseline {old})")
+            continue
+        bound = tol * max(abs(old), 1e-9)
+        if abs(new - old) > bound:
+            failures.append(
+                f"{name}:{path}: {new:g} vs baseline {old:g} "
+                f"(|Δ|={abs(new - old):g} > ±{tol:.0%})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--results", default=RESULTS)
+    ap.add_argument("--baselines", default=BASELINES)
+    ap.add_argument("--tolerance", type=float, default=0.20)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite baselines from fresh results")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.baselines, exist_ok=True)
+    failures, checked = [], 0
+    for name in sorted(GATES):
+        fresh_path = os.path.join(args.results, name)
+        base_path = os.path.join(args.baselines, name)
+        if not os.path.exists(fresh_path):
+            print(f"[skip] {name}: no fresh result in {args.results}")
+            continue
+        if args.update:
+            with open(fresh_path) as f:
+                data = f.read()
+            with open(base_path, "w") as f:
+                f.write(data)
+            print(f"[baseline] {name} updated")
+            continue
+        if not os.path.exists(base_path):
+            # a gate with no reference is a silent no-op — refuse;
+            # baselines are committed, bootstrap explicitly via --update
+            failures.append(f"{name}: no baseline in {args.baselines} "
+                            f"(run with --update and commit it)")
+            print(f"[FAIL] {failures[-1]}")
+            continue
+        fails = check_file(name, fresh_path, base_path, args.tolerance)
+        checked += 1
+        if fails:
+            failures.extend(fails)
+            for line in fails:
+                print(f"[FAIL] {line}")
+        else:
+            print(f"[ok] {name} within ±{args.tolerance:.0%}")
+    if failures:
+        print(f"\n{len(failures)} regression(s). Intentional? "
+              f"re-run with --update and commit the baseline diff.")
+        return 1
+    print(f"\n{checked} bench file(s) checked, no regressions.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,7 +13,8 @@ import time
 
 from benchmarks import (fig14_resources, fig15_speedup, fig16_layerwise,
                         fig17_scaling, kernel_bench, roofline, serve_bench,
-                        table2_flops, table4_platforms, table5_accels)
+                        spmd_bench, table2_flops, table4_platforms,
+                        table5_accels)
 
 SUITES = {
     "table2": table2_flops,
@@ -26,6 +27,10 @@ SUITES = {
     "kernels": kernel_bench,
     "roofline": roofline,
     "serve": serve_bench,
+    # needs multiple devices to be interesting; run it standalone with
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8 (the CI spmd
+    # job does) — inside this driver it inherits the ambient backend
+    "spmd": spmd_bench,
 }
 
 # cheap suites CI can afford on every push

@@ -1,0 +1,156 @@
+"""SPMD train-step benchmark: dense vs N:M-compressed gradient sync.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python -m benchmarks.spmd_bench [--smoke]
+
+Builds the real sharded train step on a ("pod","data","model") mesh
+over every visible device (the module forces 8 CPU devices when it owns
+the process), runs it both with dense cross-pod gradient sync and with
+the N:M-compressed path (optim/compress), and records:
+
+  * per-step wall time (median of the timed steps, compile excluded) —
+    informational only, CI machines are too noisy to gate on it;
+  * per-chip collective link bytes from the optimized HLO (hlo_cost's
+    ring accounting) — deterministic, gated by check_regression;
+  * the analytic wire-format arithmetic: fp32 grad bytes vs packed
+    bf16-vals + u8-idx bytes over the compressible leaves.
+
+Writes results/BENCH_spmd.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if "jax" not in sys.modules:  # own process: force a multi-device host
+    from repro.launch.spmd import force_host_devices
+    force_host_devices(8)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.configs import get_arch
+from repro.core.sparsity import SparsityConfig, nm_pack
+from repro.data import synthetic as D
+from repro.launch import hlo_cost
+from repro.launch import spmd
+from repro.models import transformer_lm as T
+from repro.optim import sgd
+from repro.train import step as ST
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def grad_sync_bytes(params, sp_cfg: SparsityConfig) -> dict:
+    """Wire bytes of one cross-pod gradient sync, dense vs packed."""
+    dense = packed = ragged = 0
+    for leaf in jax.tree.leaves(params):
+        nbytes = int(np.prod(leaf.shape)) * 4  # fp32 grads
+        dense += nbytes
+        if leaf.ndim and int(np.prod(leaf.shape)) % sp_cfg.m == 0:
+            vals, idx = jax.eval_shape(
+                lambda l: nm_pack(
+                    jnp.zeros((int(np.prod(l.shape)) // sp_cfg.m,
+                               sp_cfg.m), jnp.bfloat16),
+                    sp_cfg.n, sp_cfg.m, axis=-1), leaf)
+            packed += (int(np.prod(vals.shape)) * 2
+                       + int(np.prod(idx.shape)) * 1)
+        else:
+            packed += nbytes  # rides uncompressed
+            ragged += nbytes
+    return {"dense_bytes": dense, "packed_bytes": packed,
+            "uncompressed_ragged_bytes": ragged,
+            "wire_ratio": packed / max(dense, 1)}
+
+
+def bench_variant(cfg, mesh, sp_cfg, opt_cfg, *, compress: bool,
+                  batch: int, seq: int, steps: int) -> dict:
+    bundle = ST.build_lm_train(cfg, mesh, sp_cfg, opt_cfg, donate=False,
+                               compress=compress)
+    state = ST.init_train_state(jax.random.PRNGKey(0), cfg,
+                                compress=compress)
+    state = jax.device_put(state, bundle.state_shardings)
+    sh = {k: NamedSharding(mesh, ps)
+          for k, ps in bundle.input_pspecs.items()}
+    stream = D.lm_stream(cfg.vocab, batch, seq, shardings=sh, seed=0)
+
+    _, first = next(stream)
+    lowered = bundle.step_fn.lower(state, first)
+    analysis = hlo_cost.analyze(lowered.compile().as_text())
+
+    state, _ = bundle.step_fn(state, first)  # compile + warmup
+    jax.block_until_ready(state)
+    times = []
+    for _ in range(steps):
+        _, b = next(stream)
+        t0 = time.perf_counter()
+        state, metrics = bundle.step_fn(state, b)
+        jax.block_until_ready(metrics["loss"])
+        times.append(time.perf_counter() - t0)
+    return {
+        "step_ms_median": float(np.median(times) * 1e3),
+        "step_ms_all": [round(t * 1e3, 2) for t in times],
+        "final_loss": float(metrics["loss"]),
+        "collectives": analysis["collectives"],
+        "hlo_flops": analysis["flops"],
+    }
+
+
+def main(smoke: bool = False, out_path: str | None = None) -> dict:
+    arch = get_arch("qwen3-8b")
+    cfg = arch.smoke
+    sp_cfg = SparsityConfig(n=2, m=8, method="bdwp")
+    opt_cfg = sgd.SGDConfig(lr=0.1)
+    batch, seq, steps = (8, 32, 3) if smoke else (8, 64, 8)
+
+    n_dev = jax.device_count()
+    mesh = spmd.make_spmd_mesh("pod,data,model")
+    print(f"devices={n_dev} mesh={dict(mesh.shape)}")
+
+    variants = {}
+    for name, compress in (("dense_sync", False), ("compressed_sync", True)):
+        variants[name] = bench_variant(cfg, mesh, sp_cfg, opt_cfg,
+                                       compress=compress, batch=batch,
+                                       seq=seq, steps=steps)
+        v = variants[name]
+        print(f"{name:16s} {v['step_ms_median']:8.1f} ms/step  "
+              f"coll={v['collectives']['total']:>12,} B/chip  "
+              f"loss={v['final_loss']:.4f}")
+
+    params, _ = T.init(jax.random.PRNGKey(0), cfg, abstract=True)
+    sync = grad_sync_bytes(params, sp_cfg)
+    print(f"grad sync wire bytes: dense={sync['dense_bytes']:,} "
+          f"packed={sync['packed_bytes']:,} "
+          f"(ratio {sync['wire_ratio']:.3f})")
+
+    summary = {
+        "bench": "spmd_bench",
+        "arch": cfg.name,
+        "devices": n_dev,
+        "mesh": dict(mesh.shape),
+        "sparsity": {"n": sp_cfg.n, "m": sp_cfg.m, "method": sp_cfg.method},
+        "batch": batch, "seq": seq,
+        "smoke": smoke,
+        "sync": sync,
+        "variants": variants,
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    out_path = out_path or os.path.join(RESULTS, "BENCH_spmd.json")
+    with open(out_path, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"wrote {out_path}")
+    return summary
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    main(smoke=args.smoke, out_path=args.out)

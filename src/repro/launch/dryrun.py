@@ -1,5 +1,8 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.launch.spmd import force_host_devices
+
+force_host_devices(512)  # before any backend touch; preserves XLA_FLAGS
 
 """Multi-pod dry-run: prove the distribution config is coherent.
 

@@ -23,11 +23,19 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(*, model: int = 1):
-    """Whatever this host actually has — smoke tests / examples / CI."""
+def make_host_mesh(*, model: int = 1, pods: int = 1):
+    """Whatever this host actually has — smoke tests / examples / CI.
+
+    pods > 1 adds the hierarchical "pod" axis (cross-pod gradient sync /
+    compression paths) — real on a forced-device host
+    (XLA_FLAGS=--xla_force_host_platform_device_count=N).
+    """
     n = jax.device_count()
-    if n % model:
-        model = 1
+    if n % (model * pods):
+        model = pods = 1
+    if pods > 1:
+        return jax.make_mesh((pods, n // (model * pods), model),
+                             ("pod", "data", "model"))
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 

@@ -1,0 +1,194 @@
+"""Real SPMD execution of the sharding rule tables.
+
+The rule tables (sharding/rules.py) were born in the dry-run planner —
+this module is where they execute: a ``Mesh`` over ("pod","data",
+"model") is built from *actual* devices and the train / serve steps
+compile against it with ``jax.jit`` + ``NamedSharding`` (the cross-pod
+gradient compression rides ``shard_map`` inside the train step).
+
+On CPU containers XLA can fake a multi-chip host:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8
+
+``force_host_devices`` sets that flag programmatically; it only works
+before the first backend touch (any ``jax.devices()`` / array op), so
+call it at the very top of an entry point — the dry-run, the SPMD
+benchmark and the distributed tests all do.
+
+Mesh specs (the ``--mesh`` CLI grammar):
+
+    pod,data,model            axis names; device count auto-factored,
+                              inner axes ("model") get factors first
+    pod=2,data=2,model=2      explicit sizes (product must divide the
+                              device count; at most one axis unsized)
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding import rules as R
+
+
+def force_host_devices(n: int = 8) -> int:
+    """Ask the CPU backend for ``n`` devices (replaces any earlier
+    forced count, preserves every other XLA_FLAGS entry).  Must run
+    before jax initializes a backend; the returned count is what the
+    process actually sees — callers that got in too late observe fewer
+    and can skip/degrade."""
+    flags = [f for f in os.environ.get("XLA_FLAGS", "").split()
+             if not f.startswith("--xla_force_host_platform_device_count")]
+    flags.append(f"--xla_force_host_platform_device_count={n}")
+    os.environ["XLA_FLAGS"] = " ".join(flags)
+    return jax.device_count()
+
+
+# ---------------------------------------------------------------------------
+# Mesh construction
+# ---------------------------------------------------------------------------
+
+
+def parse_mesh_spec(spec: str, n_devices: int) -> dict:
+    """``--mesh`` string -> ordered {axis: size} covering n_devices.
+
+    Unsized axes split the remaining factor; prime factors are dealt to
+    the *innermost* unsized axes first so "model" (fast collectives)
+    grows before "data" before "pod" — e.g. 8 devices over
+    "pod,data,model" -> {pod: 2, data: 2, model: 2}, 4 devices ->
+    {pod: 1, data: 2, model: 2}.
+    """
+    axes: dict = {}
+    unsized = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" in part:
+            name, size = part.split("=")
+            axes[name.strip()] = int(size)
+        else:
+            axes[part] = None
+            unsized.append(part)
+    sized = 1
+    for v in axes.values():
+        sized *= v or 1
+    if n_devices % sized:
+        raise ValueError(f"mesh sizes {spec!r} (product {sized}) do not "
+                         f"divide device count {n_devices}")
+    rest = n_devices // sized
+    for name in unsized:
+        axes[name] = 1
+    # deal prime factors of the remainder, innermost unsized axis first
+    factors = []
+    x, p = rest, 2
+    while x > 1:
+        while x % p == 0:
+            factors.append(p)
+            x //= p
+        p += 1
+    for i, f in enumerate(sorted(factors, reverse=True)):
+        if not unsized:
+            raise ValueError(f"{spec!r} under-covers {n_devices} devices "
+                             f"({rest}x unassigned, no unsized axis)")
+        axes[unsized[-1 - (i % len(unsized))]] *= f
+    return axes
+
+
+def make_spmd_mesh(spec: str = "pod,data,model", *,
+                   devices=None) -> Mesh:
+    """Build a Mesh from actual devices per a ``--mesh`` spec string."""
+    devices = list(devices if devices is not None else jax.devices())
+    axes = parse_mesh_spec(spec, len(devices))
+    import numpy as np
+    arr = np.asarray(devices).reshape(tuple(axes.values()))
+    return Mesh(arr, tuple(axes))
+
+
+def single_device_mesh(axis_names=("data", "model")) -> Mesh:
+    """A 1-chip mesh with the same axis names — the parity reference."""
+    import numpy as np
+    arr = np.asarray(jax.devices()[:1]).reshape((1,) * len(axis_names))
+    return Mesh(arr, tuple(axis_names))
+
+
+# ---------------------------------------------------------------------------
+# Serve-side sharding resolution (SERVE_BATCH rules, slot-paged cache)
+# ---------------------------------------------------------------------------
+
+
+def _sanitize_pspec(ps: P, shape, mesh: Mesh) -> P:
+    """Drop spec entries whose mesh-axis product doesn't divide the dim
+    (odd slot counts, batch-1 prefill) — GSPMD would pad; we replicate."""
+    fixed = []
+    for i, entry in enumerate(ps):
+        if entry is None:
+            fixed.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape.get(a, 1)
+        fixed.append(entry if shape[i] % size == 0 else None)
+    return P(*fixed)
+
+
+def sanitize_pspecs(pspecs, tree, mesh: Mesh):
+    """Tree-wide ``_sanitize_pspec`` (pspecs is a prefix-matching tree of
+    PartitionSpecs over ``tree`` of arrays/ShapeDtypeStructs)."""
+    return jax.tree.map(
+        lambda ps, x: _sanitize_pspec(ps, tuple(x.shape), mesh),
+        pspecs, tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def serve_shardings(cfg, mesh: Mesh, sp_cfg, *, n_slots: int, max_len: int,
+                    packed: bool = False, cache_dtype=jnp.bfloat16) -> dict:
+    """Resolve SERVE_BATCH NamedShardings for a continuous-batching
+    engine: params (TP over "model", N:M groups unsplit), the slot-paged
+    KV cache (slot axis over the DP axes), per-slot tokens/positions.
+
+    Returns {"params", "cache", "token", "pos"} of NamedSharding trees
+    plus the raw "pspecs" for introspection/tests.  The resolved specs
+    are asserted group-safe (``rules.assert_nm_unsplit``) before use.
+    """
+    from repro.models import transformer_lm as T
+    from repro.serve.packed_params import pack_tree_element
+
+    aparams, specs = T.init(jax.random.PRNGKey(0), cfg, abstract=True)
+    p_pspecs = R.nm_params_pspecs(specs, R.SERVE_BATCH_RULES, aparams,
+                                  mesh, sp_cfg)
+    check_tree = aparams
+    if packed:
+        check_tree, _, p_pspecs = pack_tree_element(aparams, sp_cfg,
+                                                    pspecs=p_pspecs)
+    R.assert_nm_unsplit(p_pspecs, check_tree, mesh, sp_cfg)
+
+    cache = jax.eval_shape(
+        lambda: T.init_lm_cache(cfg, n_slots, max_len, cache_dtype))
+    in_specs = {"cache": cache,
+                "token": jax.ShapeDtypeStruct((n_slots, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    in_pspecs = R.serve_input_pspecs(in_specs, mesh, long_context=False)
+    dp = R.batch_axes(mesh)
+    # continuous batching: per-slot position vector, not a shared cursor
+    in_pspecs["pos"] = P(dp)
+    cache_ps = sanitize_pspecs(in_pspecs["cache"], cache, mesh)
+    token_ps = _sanitize_pspec(in_pspecs["token"], (n_slots, 1), mesh)
+    pos_ps = _sanitize_pspec(in_pspecs["pos"], (n_slots,), mesh)
+
+    def named(ps_tree):
+        return jax.tree.map(lambda ps: NamedSharding(mesh, ps), ps_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    return {
+        "params": named(p_pspecs),
+        "cache": named(cache_ps),
+        "token": NamedSharding(mesh, token_ps),
+        "pos": NamedSharding(mesh, pos_ps),
+        "pspecs": {"params": p_pspecs, "cache": cache_ps,
+                   "token": token_ps, "pos": pos_ps},
+    }

@@ -47,8 +47,17 @@ def build_parser():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--compress", action="store_true",
-                    help="N:M cross-pod gradient compression")
+                    help="N:M cross-pod gradient compression (needs a "
+                         "mesh with a 'pod' axis, e.g. --mesh "
+                         "pod,data,model)")
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--mesh", default=None,
+                    help="mesh spec over the visible devices, e.g. "
+                         "'pod,data,model' (auto-factored) or "
+                         "'pod=2,data=2,model=2'; with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=8 this runs real SPMD on a CPU host. "
+                         "Default: host mesh (data x model-parallel)")
     ap.add_argument("--watchdog", action="store_true")
     ap.add_argument("--heartbeat-timeout", type=float, default=60.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -74,21 +83,36 @@ def run_training(args) -> int:
     sp_cfg = SparsityConfig(n=n, m=m, method=args.method,
                             granularity=args.granularity)
     opt_cfg = sgd.SGDConfig(lr=args.lr, total_steps=args.steps)
-    mesh = make_host_mesh(model=args.model_parallel)
+    if args.mesh:
+        from repro.launch.spmd import make_spmd_mesh
+        if args.model_parallel != 1:
+            print("[warn] --model-parallel ignored: --mesh controls the "
+                  "axis sizes (use e.g. --mesh pod,data,model="
+                  f"{args.model_parallel})")
+        mesh = make_spmd_mesh(args.mesh)
+    else:
+        mesh = make_host_mesh(model=args.model_parallel)
+    # compression is the cross-pod hop; without a pod axis the state
+    # must not carry an error-feedback buffer the bundle doesn't shard
+    compress = args.compress and "pod" in mesh.axis_names
+    if args.compress and not compress:
+        print("[warn] --compress ignored: mesh has no 'pod' axis "
+              "(use --mesh pod,data,model)")
     print(f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} | "
           f"{args.arch} ({'smoke' if args.smoke else 'full'}) | "
-          f"{args.method} {n}:{m} {args.granularity}")
+          f"{args.method} {n}:{m} {args.granularity}"
+          + (" | compressed pod sync" if compress else ""))
 
     if arch.family == "encdec":
         bundle = ST.build_encdec_train(cfg, mesh, sp_cfg, opt_cfg)
     else:
         bundle = ST.build_lm_train(cfg, mesh, sp_cfg, opt_cfg,
-                                   compress=args.compress)
+                                   compress=compress)
 
     def fresh():
         key = jax.random.PRNGKey(args.seed)
         state = ST.init_train_state(key, cfg, family=arch.family,
-                                    compress=args.compress)
+                                    compress=compress)
         return jax.device_put(state, bundle.state_shardings)
 
     if args.resume and args.ckpt_dir:

@@ -23,14 +23,22 @@ from repro.sharding.rules import BATCH, act
 
 
 def _slot_gather(src, idx):
-    """out[g, a, b, :] = src[g, idx[g, a, b], :].
+    """out[g, a, b, :] = src[g, idx[g, a, b], :]; OOB indices read 0.
 
     Plain take_along_axis.  (A custom-VJP variant with a manual bf16
     scatter-add was tried to keep the backward in 16-bit; under GSPMD
     the explicit scatter replicated the expert-sharded source and
     *tripled* collective traffic — refuted, see EXPERIMENTS.md §Perf.)
+
+    mode="fill" stands in for the zero row a concat-pad would provide:
+    gathering from a concat-padded source (sg+1 rows) is miscompiled by
+    the SPMD partitioner when the token axis is sharded unevenly (small
+    decode batches put the DP axes on sg) — the fill-mode gather from
+    the evenly-sharded source is bitwise-identical and partitions
+    correctly (tests/test_spmd.py drives this on a forced mesh).
     """
-    return jnp.take_along_axis(src[:, None], idx[..., None], axis=2)
+    return jnp.take_along_axis(src[:, None], idx[..., None], axis=2,
+                               mode="fill", fill_value=0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,9 +137,8 @@ def moe_apply(p, x, cfg: MoEConfig, sp_cfg: SparsityConfig):
     slot_token = slot_token.at[gi, gate_idx, pos_c].set(si, mode="drop")
     slot_token = slot_token[..., :cap]                      # (G, E, C)
 
-    # gather dispatched tokens (zero row for unfilled slots)
-    x_pad = jnp.concatenate([xt, jnp.zeros((g, 1, d), xt.dtype)], axis=1)
-    x_e = _slot_gather(x_pad, slot_token)                   # (G, E, C, d)
+    # gather dispatched tokens (sentinel index sg is OOB -> reads zero)
+    x_e = _slot_gather(xt, slot_token)                      # (G, E, C, d)
     x_e = act(x_e, BATCH, "model", None, None)  # EP: experts over "model"
     xe2 = x_e.transpose(1, 0, 2, 3).reshape(e, g * cap, d)  # the all-to-all
     y_e = _expert_ffn(p["w_gate"], p["w_up"], p["w_down"], xe2, sp_cfg)

@@ -108,7 +108,7 @@ class ContinuousBatcher:
 
     def __init__(self, params, cfg, sp_cfg: SparsityConfig = DENSE, *,
                  n_slots: int, max_len: int, prompt_bucket: int,
-                 cache_dtype=jnp.bfloat16, mesh=None):
+                 cache_dtype=jnp.bfloat16, mesh=None, shardings=None):
         if prompt_bucket > max_len:
             raise ValueError("prompt_bucket must be <= max_len")
         self.params = params
@@ -118,6 +118,19 @@ class ContinuousBatcher:
         self.kv = SlotKVCache(cfg, n_slots, max_len, cache_dtype)
         self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
         self.positions = jnp.zeros((n_slots,), jnp.int32)
+        self.shardings = shardings
+        if shardings is not None:
+            # SPMD serving: commit every resident to its SERVE_BATCH
+            # placement (launch/spmd.serve_shardings) — weights TP over
+            # "model", slot lanes over the DP axes.  The prefill/seat
+            # jits follow the committed placements; the decode hot path
+            # is pinned end-to-end below.
+            self.params = jax.device_put(params, shardings["params"])
+            self.kv.cache = jax.device_put(self.kv.cache,
+                                           shardings["cache"])
+            self.tokens = jax.device_put(self.tokens, shardings["token"])
+            self.positions = jax.device_put(self.positions,
+                                            shardings["pos"])
         vocab = cfg.vocab
 
         def prefill_fn(p, toks, last_index):
@@ -136,7 +149,15 @@ class ContinuousBatcher:
 
         self._prefill = jax.jit(prefill_fn)
         self._seat = jax.jit(seat_cache, donate_argnums=(0,))
-        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+        if shardings is None:
+            self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+        else:
+            self._decode = jax.jit(
+                decode_fn,
+                in_shardings=(shardings["params"], shardings["cache"],
+                              shardings["token"], shardings["pos"]),
+                out_shardings=(None, shardings["cache"]),
+                donate_argnums=(1,))
 
     # -- admission ----------------------------------------------------------
 
@@ -179,4 +200,12 @@ class ContinuousBatcher:
             self.params, self.kv.cache, self.tokens, self.positions)
         self.tokens = nxt[:, None]
         self.positions = self.positions + 1
+        if self.shardings is not None:
+            # keep next-step inputs pinned to their declared shardings —
+            # the decode output's compiler-chosen layout must not leak
+            # into the next call's committed in_shardings
+            self.tokens = jax.device_put(self.tokens,
+                                         self.shardings["token"])
+            self.positions = jax.device_put(self.positions,
+                                            self.shardings["pos"])
         return np.asarray(nxt)

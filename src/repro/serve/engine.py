@@ -66,15 +66,27 @@ class ServeEngine:
         self.cfg = cfg
         self.sp_cfg = sp_cfg
         self.serve_cfg = serve_cfg
+        self.mesh = mesh
         self.store: Optional[PackedParamStore] = None
         if serve_cfg.packed:
             self.store = PackedParamStore.pack(params, sp_cfg)
             params = self.store.params
+        shardings = None
+        if mesh is not None and mesh.devices.size > 1:
+            # SPMD serving: resolve SERVE_BATCH-rule shardings (weights
+            # TP over "model" with N:M groups unsplit, slot lanes over
+            # the DP axes) and pin the engine's residents to them.
+            from repro.launch import spmd
+            shardings = spmd.serve_shardings(
+                cfg, mesh, sp_cfg, n_slots=serve_cfg.n_slots,
+                max_len=serve_cfg.max_len, packed=serve_cfg.packed,
+                cache_dtype=cache_dtype or jnp.bfloat16)
         self.batcher = ContinuousBatcher(
             params, cfg, sp_cfg,
             n_slots=serve_cfg.n_slots, max_len=serve_cfg.max_len,
             prompt_bucket=serve_cfg.prompt_bucket,
-            cache_dtype=cache_dtype or jnp.bfloat16, mesh=mesh)
+            cache_dtype=cache_dtype or jnp.bfloat16, mesh=mesh,
+            shardings=shardings)
         self._queue: deque[Request] = deque()
         self._running: Dict[int, Request] = {}   # slot -> request
         self._done: Dict[int, Request] = {}      # rid -> request

@@ -35,13 +35,21 @@ def _leaf_bytes(x) -> int:
     return int(x.size) * jnp.dtype(x.dtype).itemsize
 
 
-def pack_tree_element(params, cfg: SparsityConfig):
+def pack_tree_element(params, cfg: SparsityConfig, pspecs=None):
     """Transform a param tree for element-mode packed serving.
 
     Every eligible ``{"w": (…, K, F)}`` leaf-dict (same FF-direction
     eligibility as shared packing: ``bdwp.serve_packable``) becomes
     ``{"vals", "idx"(, "b")}``; stacked (L, K, F) weights pack per layer.
     Returns ``(packed_tree, stats)`` where stats counts actual bytes.
+
+    With ``pspecs`` (matching tree of resolved PartitionSpecs) given,
+    returns ``(packed_tree, stats, packed_pspecs)``: vals and idx are
+    rank-preserving (both (…, K·N/M, F)) so they inherit w's spec.  The
+    N:M group invariant transfers: a K shard that is a multiple of M
+    packs to a compact shard that is a multiple of N, so specs resolved
+    through ``rules.nm_params_pspecs`` stay group-safe after packing
+    (``rules.assert_nm_unsplit`` re-checks the packed tree).
     """
     stats = {"n_packed": 0, "n_dense": 0,
              "packed_bytes": 0,      # vals + uint8 idx as stored
@@ -62,32 +70,51 @@ def pack_tree_element(params, cfg: SparsityConfig):
                 and bdwp.should_prune(name, tuple(w.shape[-2:]), cfg)
                 and bdwp.serve_packable(name, tuple(w.shape[-2:]), cfg))
 
-    def walk(node, path):
+    def walk(node, spec_node, path):
         if isinstance(node, dict) and "w" in node:
             w = node["w"]
             name = "/".join(str(k) for k in path)
             if pack_ok(name, w):
-                vals, idx = nm_pack(w, cfg.n, cfg.m, axis=w.ndim - 2)
+                if isinstance(w, jax.ShapeDtypeStruct):
+                    vals, idx = jax.eval_shape(
+                        lambda ww: nm_pack(ww, cfg.n, cfg.m,
+                                           axis=ww.ndim - 2), w)
+                else:
+                    vals, idx = nm_pack(w, cfg.n, cfg.m, axis=w.ndim - 2)
                 new = {"vals": vals, "idx": idx}
                 stats["n_packed"] += 1
                 stats["dense_bytes"] += _leaf_bytes(w)
                 stats["packed_bytes"] += _leaf_bytes(vals) + _leaf_bytes(idx)
                 stats["packed_bytes_4bit"] += (
                     _leaf_bytes(vals) + int(idx.size) * idx_bits // 8)
+                new_spec = None
+                if spec_node is not None:
+                    new_spec = {"vals": spec_node["w"],
+                                "idx": spec_node["w"]}
                 if "b" in node:
                     new["b"] = node["b"]
                     stats["other_bytes"] += _leaf_bytes(node["b"])
-                return new
+                    if new_spec is not None:
+                        new_spec["b"] = spec_node["b"]
+                return new, new_spec
             stats["n_dense"] += 1
             stats["other_bytes"] += sum(_leaf_bytes(x)
                                         for x in jax.tree.leaves(node))
-            return node
+            return node, spec_node
         if isinstance(node, dict):
-            return {k: walk(v, path + (k,)) for k, v in node.items()}
+            out_p, out_s = {}, {}
+            for k, v in node.items():
+                sp = spec_node[k] if spec_node is not None else None
+                out_p[k], s = walk(v, sp, path + (k,))
+                if spec_node is not None:
+                    out_s[k] = s
+            return out_p, (out_s if spec_node is not None else None)
         stats["other_bytes"] += _leaf_bytes(node)
-        return node
+        return node, spec_node
 
-    packed = walk(params, ())
+    packed, packed_specs = walk(params, pspecs, ())
+    if pspecs is not None:
+        return packed, stats, packed_specs
     return packed, stats
 
 

@@ -59,15 +59,22 @@ def _is_axes(x):
 
 
 def spec_to_pspec(axes: tuple, rules: dict, shape=None,
-                  mesh: Optional[Mesh] = None) -> P:
-    """Logical axes -> PartitionSpec with two production guards:
+                  mesh: Optional[Mesh] = None,
+                  group_multiples: Optional[dict] = None) -> P:
+    """Logical axes -> PartitionSpec with three production guards:
 
     * dedupe — a mesh axis may appear once per spec (stacked MoE weights
       map both "expert" and "mlp" to "model": first occurrence wins,
       later ones fall back to replicated);
     * divisibility — with ``shape`` + ``mesh`` given, any dim the mesh
       axis doesn't divide evenly is replicated instead (e.g. hymba's
-      fused ssm in_proj output of 6482).
+      fused ssm in_proj output of 6482);
+    * group integrity — ``group_multiples[i]`` (dim index -> int) demands
+      the *per-shard* size of dim ``i`` stay a multiple of that value;
+      a mesh axis that would cut a group is dropped (replicated).  This
+      is how N:M structure is expressed to the partitioner: groups of
+      size M along a grouped weight axis — or runs of N along a packed
+      compact axis — must never straddle a "model" shard boundary.
     """
     entries, used = [], set()
     for i, ax in enumerate(axes):
@@ -80,7 +87,8 @@ def spec_to_pspec(axes: tuple, rules: dict, shape=None,
                 size = 1
                 for t in tgt_axes:
                     size *= mesh.shape.get(t, 1)
-                if shape[i] % size:
+                mult = (group_multiples or {}).get(i, 1)
+                if shape[i] % size or (shape[i] // size) % mult:
                     target = None
             if target is not None:
                 used.update(tgt_axes)
@@ -108,6 +116,135 @@ def params_shardings(specs_tree, mesh: Mesh, rules: dict, params=None):
     return jax.tree.map(lambda ps: NamedSharding(mesh, ps),
                         params_pspecs(specs_tree, rules, params, mesh),
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# N:M group integrity
+# ---------------------------------------------------------------------------
+#
+# BDWP prunes in groups of M along a weight's contraction axis (axis
+# ndim-2 of every ``{"w": ...}`` leaf-dict), and the packed serving
+# format stores the N survivors of each group contiguously along the
+# compact axis.  A shard boundary inside a group would make the group's
+# top-N selection (training) or its (vals, idx) run (serving) straddle
+# two devices — the rules must never emit such a spec, and the resolved
+# shardings are asserted against it.
+
+
+def _shard_count(entry, mesh: Mesh) -> int:
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape.get(a, 1)
+    return size
+
+
+def nm_group_multiples(name: str, shape, sp_cfg) -> Optional[dict]:
+    """Per-dim per-shard multiples an N:M-prunable weight demands.
+
+    BDWP tiles M-groups along the FF/contraction axis (ndim-2) AND the
+    BP/output axis (ndim-1); one-directional methods constrain only
+    their own axis.  None for dense / non-prunable leaves.
+    """
+    if sp_cfg is None or getattr(sp_cfg, "is_dense", True):
+        return None
+    from repro.core import bdwp
+    if len(shape) < 2 or not bdwp.should_prune(name, tuple(shape[-2:]),
+                                               sp_cfg):
+        return None
+    gm = {}
+    if sp_cfg.prunes_ff_weights():
+        gm[len(shape) - 2] = sp_cfg.m
+    if sp_cfg.prunes_bp_weights() or sp_cfg.prunes_bp_grads():
+        gm[len(shape) - 1] = sp_cfg.m
+    return gm or {len(shape) - 2: sp_cfg.m}
+
+
+def nm_params_pspecs(specs_tree, rules: dict, params, mesh: Mesh,
+                     sp_cfg=None):
+    """``params_pspecs`` plus the N:M group guard.
+
+    Every prunable ``{"w": ...}`` leaf-dict (``bdwp.should_prune`` on
+    its tree path) carries ``nm_group_multiples`` into ``spec_to_pspec``
+    so a mesh axis that would split an M-group falls back to replicated.
+    With ``sp_cfg`` None or dense this degenerates to ``params_pspecs``.
+    """
+    if sp_cfg is None or getattr(sp_cfg, "is_dense", True):
+        return params_pspecs(specs_tree, rules, params, mesh)
+
+    def walk(spec_node, p_node, path):
+        if isinstance(spec_node, dict):
+            if "w" in spec_node and _is_axes(spec_node["w"]):
+                name = "/".join(str(k) for k in path)
+                out = {}
+                for key, ax in spec_node.items():
+                    shape = tuple(p_node[key].shape)
+                    gm = (nm_group_multiples(name, shape, sp_cfg)
+                          if key == "w" else None)
+                    out[key] = spec_to_pspec(ax, rules, shape=shape,
+                                             mesh=mesh, group_multiples=gm)
+                return out
+            return {k: walk(v, p_node[k], path + (k,))
+                    for k, v in spec_node.items()}
+        return spec_to_pspec(spec_node, rules,
+                             shape=tuple(p_node.shape), mesh=mesh)
+
+    return walk(specs_tree, params, ())
+
+
+def assert_nm_unsplit(pspecs_tree, params_tree, mesh: Mesh, sp_cfg) -> None:
+    """Assert no resolved sharding splits an N:M group.
+
+    Dense prunable ``w`` leaves must keep per-shard size a multiple of M
+    along every grouped axis (``nm_group_multiples``); element-packed
+    ``vals``/``idx`` leaves a multiple of N along the compact axis
+    (ndim-2).  Raises AssertionError naming the offending leaf.  The
+    pspec tree may hold PartitionSpecs or NamedShardings.
+    """
+    if sp_cfg is None or getattr(sp_cfg, "is_dense", True):
+        return
+
+    def as_spec(x) -> P:
+        return x.spec if isinstance(x, NamedSharding) else x
+
+    def check(name, key, spec, shape, multiples: dict):
+        for axis, multiple in multiples.items():
+            entry = spec[axis] if axis < len(spec) else None
+            shards = _shard_count(entry, mesh)
+            if shape[axis] % shards or (shape[axis] // shards) % multiple:
+                raise AssertionError(
+                    f"N:M group split: {name}/{key} dim {axis} (size "
+                    f"{shape[axis]}) sharded {shards}-way over {entry!r} — "
+                    f"per-shard size must be a multiple of {multiple}")
+
+    def is_spec(x):
+        return isinstance(x, (P, NamedSharding))
+
+    def walk(spec_node, p_node, path):
+        if isinstance(spec_node, dict):
+            name = "/".join(str(k) for k in path)
+            if "w" in spec_node and is_spec(spec_node["w"]):
+                shape = tuple(p_node["w"].shape)
+                gm = nm_group_multiples(name, shape, sp_cfg)
+                if gm:
+                    check(name, "w", as_spec(spec_node["w"]), shape, gm)
+                return
+            if "vals" in spec_node and is_spec(spec_node["vals"]):
+                v_rank = len(p_node["vals"].shape)
+                for key in ("vals", "idx"):
+                    # shared-mode idx (rank vals-1) has no compact axis
+                    if key in spec_node and is_spec(spec_node[key]) \
+                            and len(p_node[key].shape) == v_rank >= 2:
+                        shape = tuple(p_node[key].shape)
+                        check(name, key, as_spec(spec_node[key]),
+                              shape, {len(shape) - 2: sp_cfg.n})
+                return
+            for k, v in spec_node.items():
+                walk(v, p_node[k], path + (k,))
+
+    walk(pspecs_tree, params_tree, ())
 
 
 def batch_axes(mesh: Mesh):

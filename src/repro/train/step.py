@@ -195,6 +195,7 @@ class StepBundle:
     input_pspecs: dict
     names: list
     specs: object                # logical-axis tree
+    mesh: Optional[Mesh] = None  # mesh the bundle was resolved against
 
 
 def build_lm_train(cfg, mesh: Mesh, sp_cfg: SparsityConfig,
@@ -202,7 +203,10 @@ def build_lm_train(cfg, mesh: Mesh, sp_cfg: SparsityConfig,
                    donate=True, seq_parallel=False) -> StepBundle:
     aparams, specs = T.init(jax.random.PRNGKey(0), cfg, abstract=True)
     rules = R.TRAIN_RULES
-    p_pspecs = R.params_pspecs(specs, rules, aparams, mesh)
+    # N:M-aware resolution: a mesh axis that would split an M-group
+    # along a grouped weight axis is dropped, and the result is asserted
+    p_pspecs = R.nm_params_pspecs(specs, rules, aparams, mesh, sp_cfg)
+    R.assert_nm_unsplit(p_pspecs, aparams, mesh, sp_cfg)
     names = sgd._names_of(p_pspecs)
     state_pspecs = {"master": p_pspecs,
                     "momentum": p_pspecs,
@@ -225,13 +229,15 @@ def build_lm_train(cfg, mesh: Mesh, sp_cfg: SparsityConfig,
                      in_shardings=(state_sh, batch_sh),
                      out_shardings=(state_sh, None),
                      donate_argnums=(0,) if donate else ())
-    return StepBundle(jitted, state_sh, in_pspecs, names, specs)
+    return StepBundle(jitted, state_sh, in_pspecs, names, specs, mesh)
 
 
 def build_encdec_train(cfg, mesh: Mesh, sp_cfg, opt_cfg,
                        donate=True) -> StepBundle:
     aparams, specs = E.init(jax.random.PRNGKey(0), cfg, abstract=True)
-    p_pspecs = R.params_pspecs(specs, R.TRAIN_RULES, aparams, mesh)
+    p_pspecs = R.nm_params_pspecs(specs, R.TRAIN_RULES, aparams, mesh,
+                                  sp_cfg)
+    R.assert_nm_unsplit(p_pspecs, aparams, mesh, sp_cfg)
     names = sgd._names_of(p_pspecs)
     state_pspecs = {"master": p_pspecs, "momentum": p_pspecs, "step": P()}
     state_sh = jax.tree.map(lambda ps: NamedSharding(mesh, ps), state_pspecs,
@@ -246,7 +252,7 @@ def build_encdec_train(cfg, mesh: Mesh, sp_cfg, opt_cfg,
     jitted = jax.jit(fn, in_shardings=(state_sh, batch_sh),
                      out_shardings=(state_sh, None),
                      donate_argnums=(0,) if donate else ())
-    return StepBundle(jitted, state_sh, in_pspecs, names, specs)
+    return StepBundle(jitted, state_sh, in_pspecs, names, specs, mesh)
 
 
 def build_lm_serve(cfg, mesh: Mesh, sp_cfg: SparsityConfig, input_specs,
@@ -260,9 +266,12 @@ def build_lm_serve(cfg, mesh: Mesh, sp_cfg: SparsityConfig, input_specs,
 
     aparams, specs = T.init(jax.random.PRNGKey(0), cfg, abstract=True)
     rules = R.SERVE_LONG_RULES if long_context else R.SERVE_BATCH_RULES
-    p_pspecs = R.params_pspecs(specs, rules, aparams, mesh)
+    p_pspecs = R.nm_params_pspecs(specs, rules, aparams, mesh, sp_cfg)
+    check_tree = aparams
     if packed:
-        _, p_pspecs = B.pack_tree_shared(aparams, sp_cfg, pspecs=p_pspecs)
+        check_tree, p_pspecs = B.pack_tree_shared(aparams, sp_cfg,
+                                                  pspecs=p_pspecs)
+    R.assert_nm_unsplit(p_pspecs, check_tree, mesh, sp_cfg)
     param_sh = jax.tree.map(lambda ps: NamedSharding(mesh, ps), p_pspecs,
                             is_leaf=lambda x: isinstance(x, P))
     in_pspecs = R.serve_input_pspecs(input_specs, mesh,
@@ -283,7 +292,7 @@ def build_lm_serve(cfg, mesh: Mesh, sp_cfg: SparsityConfig, input_specs,
             out_shardings=(None, in_sh["cache"]),
             donate_argnums=(1,),
         )
-    return StepBundle(jitted, param_sh, in_pspecs, [], specs)
+    return StepBundle(jitted, param_sh, in_pspecs, [], specs, mesh)
 
 
 def build_encdec_serve(cfg, mesh: Mesh, sp_cfg, input_specs, *,
@@ -307,4 +316,4 @@ def build_encdec_serve(cfg, mesh: Mesh, sp_cfg, input_specs, *,
             out_shardings=(None, in_sh["cache"]),
             donate_argnums=(1,),
         )
-    return StepBundle(jitted, param_sh, in_pspecs, [], specs)
+    return StepBundle(jitted, param_sh, in_pspecs, [], specs, mesh)

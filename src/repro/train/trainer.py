@@ -30,6 +30,23 @@ class TrainerConfig:
     straggler_threshold: float = 2.0
 
 
+def train_steps(bundle, state, data_iter: Iterator, n_steps: int):
+    """Bare loop: n_steps through the jitted step, no ckpt/heartbeat.
+
+    The parity tests and the SPMD benchmark drive this — same step fn
+    the full ``fit`` loop uses, minus host-side machinery, returning the
+    final state and the per-step metrics (still device values; callers
+    ``float()`` what they need).
+    """
+    history = []
+    for _ in range(n_steps):
+        _, batch = next(data_iter)
+        state, metrics = bundle.step_fn(state, batch)
+        history.append(metrics)
+    jax.block_until_ready(state)
+    return state, history
+
+
 def fit(bundle, state, data_iter: Iterator, tcfg: TrainerConfig,
         log_fn: Callable = print):
     """Runs the loop; returns (final_state, history)."""
