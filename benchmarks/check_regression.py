@@ -45,6 +45,14 @@ GATES = {
         "variants.dense_sync.hlo_flops",
         "variants.compressed_sync.hlo_flops",
     ],
+    # mask-once invariant: one fused top_k per prunable param at WU time
+    # (±20% of 1.0 still rejects any regrown selection — counts are ints)
+    "BENCH_pregen.json": [
+        "mask_ops.pregen",
+        "mask_ops.pregen_packed",
+        "mask_ops.prunable_params",
+        "mask_ops.pregen_per_param",
+    ],
 }
 
 

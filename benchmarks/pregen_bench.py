@@ -1,0 +1,144 @@
+"""Pre-generation dataflow bench + gate (paper Fig. 11c executed).
+
+Two claims, measured on the bdwp LM train step (qwen3 smoke config):
+
+  1. MASK-ONCE INVARIANT (gated, deterministic): the traced pregen step
+     contains exactly ONE top_k/sort selection per prunable parameter —
+     the fused FF+BP mask derivation at WU time — versus the legacy
+     dataflow's per-consumer re-derivation (FF forward, FF remat
+     recompute, BP backward, SR-STE decay).  Counted as jaxpr
+     primitives (compiler-version stable); the same census is asserted
+     by tests/test_pregen.py in the blocking CI job, and this script
+     exits nonzero if the invariant breaks so the smoke job flags
+     mask-regen creep.
+  2. STEP TIME (recorded, not gated — CI machines are noisy): median
+     wall-clock of the pregen vs legacy jitted step.
+
+Writes results/BENCH_pregen.json; benchmarks/check_regression.py gates
+the deterministic counts against benchmarks/baselines/BENCH_pregen.json.
+
+  PYTHONPATH=src python -m benchmarks.pregen_bench [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import bdwp
+from repro.core.sparsity import SparsityConfig
+from repro.data import synthetic as D
+from repro.launch.hlo_cost import count_mask_ops
+from repro.launch.mesh import make_host_mesh
+from repro.optim import sgd
+from repro.train import step as ST
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _structs(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def prunable_sites(master, sp_cfg) -> list:
+    names = []
+    for path, w in jax.tree_util.tree_flatten_with_path(master)[0]:
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        lshape, _ = sgd._logical_shape(name, w.shape)
+        if bdwp.pregen_site(name, lshape, sp_cfg):
+            names.append(name)
+    return names
+
+
+def time_steps(bundle, state, vocab, batch, seq, steps) -> float:
+    sh = None  # single-device host mesh: default placement
+    stream = D.lm_stream(vocab, batch, seq, shardings=sh, seed=0)
+    _, first = next(stream)
+    state, _ = bundle.step_fn(state, first)  # compile + warmup
+    jax.block_until_ready(state)
+    times = []
+    for _ in range(steps):
+        _, b = next(stream)
+        t0 = time.perf_counter()
+        state, metrics = bundle.step_fn(state, b)
+        jax.block_until_ready(metrics["loss"])
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e3)
+
+
+def main(smoke: bool = False) -> dict:
+    cfg = get_arch("qwen3-8b").smoke
+    mesh = make_host_mesh()
+    sp_cfg = SparsityConfig(n=2, m=8, method="bdwp")
+    opt_cfg = sgd.SGDConfig(lr=0.05, total_steps=100)
+    batch, seq = (2, 32) if smoke else (4, 64)
+    steps = 3 if smoke else 8
+
+    state = ST.init_train_state(jax.random.PRNGKey(0), cfg, sp_cfg=sp_cfg)
+    legacy_state = {k: v for k, v in state.items() if k != "compute"}
+    sites = prunable_sites(state["master"], sp_cfg)
+    b0 = {"tokens": jnp.zeros((batch, seq), jnp.int32),
+          "labels": jnp.zeros((batch, seq), jnp.int32)}
+
+    packed_state = ST.init_train_state(jax.random.PRNGKey(0), cfg,
+                                       sp_cfg=sp_cfg, pregen_pack=True)
+    counts, times = {}, {}
+    for mode, pregen, pack, st in (("pregen", True, False, state),
+                                   ("pregen_packed", True, True, packed_state),
+                                   ("legacy", False, False, legacy_state)):
+        bundle = ST.build_lm_train(cfg, mesh, sp_cfg, opt_cfg, donate=False,
+                                   pregen=pregen, pregen_pack=pack)
+        counts[mode] = count_mask_ops(bundle.step_fn, _structs(st),
+                                      _structs(b0))
+        times[f"{mode}_step_ms_median"] = time_steps(
+            bundle, jax.device_put(st, bundle.state_shardings),
+            cfg.vocab, batch, seq, steps)
+
+    rec = {
+        "config": {"arch": "qwen3-8b-smoke", "method": sp_cfg.method,
+                   "nm": f"{sp_cfg.n}:{sp_cfg.m}", "batch": batch,
+                   "seq": seq},
+        "mask_ops": {
+            "pregen": counts["pregen"],
+            "pregen_packed": counts["pregen_packed"],
+            "legacy": counts["legacy"],
+            "prunable_params": len(sites),
+            "pregen_per_param": counts["pregen"] / max(len(sites), 1),
+            "legacy_per_param": counts["legacy"] / max(len(sites), 1),
+        },
+        "times": times,
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    out = os.path.join(RESULTS, "BENCH_pregen.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+
+    mo = rec["mask_ops"]
+    print(f"prunable params: {mo['prunable_params']}")
+    print(f"mask top_k/sort ops per step: pregen {mo['pregen']} "
+          f"({mo['pregen_per_param']:.0f}/param) vs legacy {mo['legacy']} "
+          f"({mo['legacy_per_param']:.1f}/param)")
+    print(f"step ms (median): pregen {times['pregen_step_ms_median']:.1f} "
+          f"vs legacy {times['legacy_step_ms_median']:.1f}")
+    print(f"wrote {out}")
+
+    if mo["pregen_per_param"] != 1.0:
+        print(f"[FAIL] mask-once invariant broken: "
+              f"{mo['pregen_per_param']:.2f} selections per prunable param "
+              f"(want exactly 1) — mask re-generation crept back in")
+        sys.exit(1)
+    return rec
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    main(smoke=ap.parse_args().smoke)

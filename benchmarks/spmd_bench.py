@@ -74,7 +74,7 @@ def bench_variant(cfg, mesh, sp_cfg, opt_cfg, *, compress: bool,
     bundle = ST.build_lm_train(cfg, mesh, sp_cfg, opt_cfg, donate=False,
                                compress=compress)
     state = ST.init_train_state(jax.random.PRNGKey(0), cfg,
-                                compress=compress)
+                                compress=compress, sp_cfg=sp_cfg)
     state = jax.device_put(state, bundle.state_shardings)
     sh = {k: NamedSharding(mesh, ps)
           for k, ps in bundle.input_pspecs.items()}

@@ -35,9 +35,12 @@ def train_resnet9(method: str, nm=(2, 8), steps=120, batch=64, seed=0):
     @jax.jit
     def step_fn(state, x, y):
         def loss_fn(master):
-            compute = jax.tree.map(lambda w: w.astype(jnp.bfloat16)
-                                   if w.dtype == jnp.float32 else w, master)
-            logits = C.resnet9_apply(compute, x.astype(jnp.bfloat16), sp_cfg)
+            # pass fp32 master straight through: nm_conv/nm_linear score
+            # their N:M masks on the weights they are given and cast to
+            # the activation dtype only AFTER masking, so the FF/BP masks
+            # agree with the optimizer's fp32-master SR-STE decay mask
+            # (a bf16 pre-cast here made near-tie groups disagree)
+            logits = C.resnet9_apply(master, x.astype(jnp.bfloat16), sp_cfg)
             logz = jax.nn.logsumexp(logits, axis=-1)
             gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
             return (logz - gold).mean()

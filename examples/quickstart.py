@@ -46,7 +46,7 @@ mesh = make_host_mesh()
 opt = sgd.SGDConfig(lr=0.05, total_steps=20)
 bundle = ST.build_lm_train(arch.smoke, mesh, cfg, opt)
 state = jax.device_put(
-    ST.init_train_state(jax.random.PRNGKey(0), arch.smoke),
+    ST.init_train_state(jax.random.PRNGKey(0), arch.smoke, sp_cfg=cfg),
     bundle.state_shardings)
 stream = D.lm_stream(arch.smoke.vocab, batch=4, seq=64)
 for step, batch in stream:

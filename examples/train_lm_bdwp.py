@@ -58,7 +58,7 @@ def main():
     opt = sgd.SGDConfig(lr=0.02, warmup_steps=20, total_steps=args.steps)
     bundle = ST.build_lm_train(LM_100M, mesh, sp_cfg, opt)
     state = jax.device_put(
-        ST.init_train_state(jax.random.PRNGKey(0), LM_100M),
+        ST.init_train_state(jax.random.PRNGKey(0), LM_100M, sp_cfg=sp_cfg),
         bundle.state_shardings)
     stream = D.lm_stream(LM_100M.vocab, args.batch, args.seq)
     tcfg = TR.TrainerConfig(total_steps=args.steps, ckpt_every=100,

@@ -11,11 +11,21 @@ Gradients reach the *dense master weights* by straight-through estimation;
 SR-STE's sparse-refined decay term lam*(1-mask)*W is applied in the
 optimizer (``optim/``; fused kernel in ``kernels/fused_update.py``).
 
-Both ``nm_linear`` (matmul view — linear layers, attention/MLP
-projections, im2col'd convs) and ``nm_conv`` (direct conv view) are
-provided; the conv backward reuses XLA's conv transposes through
-``jax.vjp`` closures, so dgrad runs with the BP-pruned weights and wgrad
-with dense weights — exactly Alg. 1.
+Two consumption modes:
+  * ``nm_linear`` / ``nm_conv`` — self-contained: each call re-derives
+    its N:M mask from the weights it is given (score in fp32 of the
+    GIVEN values; cast to the activation dtype only after masking, so
+    callers holding fp32 master get fp32-scored masks).  The conv
+    backward reuses XLA's conv transposes through ``jax.vjp`` closures,
+    so dgrad runs with the BP-pruned weights and wgrad with dense
+    weights — exactly Alg. 1.
+  * ``nm_linear_pregen`` / ``nm_conv_pregen`` — the pre-generation
+    dataflow (paper Fig. 11c): FF/BP consume the bf16 operands the
+    optimizer wrote at WU time (optim/sgd.pregen_tree — masks derived
+    ONCE per parameter per step from fp32 master, one fused top_k via
+    sparsity.nm_mask_pair), with the dense straight-through WU gradient
+    riding on the BP operand's cotangent.  The train-step builders use
+    this mode by default.
 """
 
 from __future__ import annotations
@@ -86,6 +96,79 @@ nm_linear.defvjp(_nm_linear_fwd, _nm_linear_bwd)
 
 
 # ---------------------------------------------------------------------------
+# Pre-generation mode (Fig. 11c executed): FF/BP consume WU-time operands
+# ---------------------------------------------------------------------------
+#
+# ``nm_linear`` re-derives the N:M masks with lax.top_k on every call —
+# once in FF, once in BP, plus once more in the optimizer's SR-STE decay:
+# three selections per prunable parameter per step, and the FF/BP ones
+# are scored on *bf16-rounded* weights while the decay is scored on fp32
+# master.  The pre-generation dataflow moves all of that to WU time: the
+# optimizer computes the FF and BP masks ONCE from fp32 master (one fused
+# top_k — core/sparsity.nm_mask_pair), prunes, casts and (where eligible)
+# SORE-packs the bf16 operands, and the next step's FF/BP load them from
+# the train state without any selection op.  ``nm_linear_pregen`` /
+# ``nm_conv_pregen`` are those consumers; the dense WU gradient
+# (straight-through, Alg. 1 line 9) rides on the BP operand's cotangent —
+# always dense-shaped, even when the FF operand is packed.
+
+
+@jax.custom_vjp
+def nm_linear_pregen(x: jax.Array, ff: jax.Array, bp: jax.Array) -> jax.Array:
+    """y = x @ ff with BP running against ``bp`` and a dense WU gradient.
+
+    ff: FF operand written at WU time (N:M-pruned bf16 for srste/bdwp,
+        dense bf16 for sdwp).
+    bp: BP operand (pruned for sdwp/bdwp, dense for srste).  Its
+        cotangent carries the dense straight-through weight gradient.
+    """
+    return jnp.matmul(x, ff.astype(x.dtype))
+
+
+def _nm_linear_pregen_fwd(x, ff, bp):
+    return jnp.matmul(x, ff.astype(x.dtype)), (x, ff, bp)
+
+
+def _nm_linear_pregen_bwd(res, g):
+    x, ff, bp = res
+    # identical arithmetic to _nm_linear_bwd: bf16 cotangent, bf16 BP
+    # matmul, fp32-accumulated dense WU gradient
+    gc = g.astype(x.dtype)
+    dx = jnp.matmul(gc, bp.T.astype(gc.dtype))
+    x2 = x.reshape(-1, x.shape[-1])
+    g2 = gc.reshape(-1, gc.shape[-1])
+    dw = jnp.matmul(x2.T, g2, preferred_element_type=jnp.float32)
+    return (dx.reshape(x.shape).astype(x.dtype), jnp.zeros_like(ff),
+            dw.astype(bp.dtype))
+
+
+nm_linear_pregen.defvjp(_nm_linear_pregen_fwd, _nm_linear_pregen_bwd)
+
+
+def is_pregen(leaf) -> bool:
+    """True for a WU-time pre-generated operand dict (optim/sgd emits
+    these in place of a prunable weight array inside the compute tree)."""
+    return isinstance(leaf, dict) and "bp" in leaf and \
+        ("ff" in leaf or "vals" in leaf)
+
+
+def pregen_ff_operand(pg: dict, cfg: SparsityConfig) -> jax.Array:
+    """Resolve the dense-layout FF operand of a pre-generated leaf.
+
+    Packed leaves ((vals, idx) along the contraction axis, ndim-2) are
+    scattered back with ``nm_unpack_n`` — exact (pack keeps values
+    verbatim), sort-free, and outside the custom VJP so the uint8
+    indices never need a cotangent.  On TPU the Pallas serving kernel
+    (kernels/nm_spmm) would consume the pair in VMEM instead.
+    """
+    from repro.core.sparsity import nm_unpack_n
+
+    if "vals" in pg:
+        return nm_unpack_n(pg["vals"], pg["idx"], cfg.n, cfg.m, axis=-2)
+    return pg["ff"]
+
+
+# ---------------------------------------------------------------------------
 # Conv view (NHWC x HWIO -> NHWC) — the paper's CNN benchmarks
 # ---------------------------------------------------------------------------
 
@@ -134,6 +217,30 @@ def _nm_conv_bwd(cfg, stride, padding, res, g):
 
 
 nm_conv.defvjp(_nm_conv_fwd, _nm_conv_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def nm_conv_pregen(x, ff, bp, stride: int = 1, padding: str = "SAME"):
+    """Conv view of ``nm_linear_pregen``: FF convolves the WU-time FF
+    operand, dgrad convolves ``bp``, wgrad is dense straight-through on
+    the BP operand's cotangent."""
+    return _conv(x, ff, stride, padding)
+
+
+def _nm_conv_pregen_fwd(x, ff, bp, stride, padding):
+    return _conv(x, ff, stride, padding), (x, ff, bp)
+
+
+def _nm_conv_pregen_bwd(stride, padding, res, g):
+    x, ff, bp = res
+    _, dgrad = jax.vjp(lambda xx: _conv(xx, bp, stride, padding), x)
+    (dx,) = dgrad(g.astype(x.dtype))
+    _, wgrad = jax.vjp(lambda ww: _conv(x, ww, stride, padding), bp)
+    (dw,) = wgrad(g.astype(x.dtype))
+    return dx, jnp.zeros_like(ff), dw.astype(bp.dtype)
+
+
+nm_conv_pregen.defvjp(_nm_conv_pregen_fwd, _nm_conv_pregen_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -310,6 +417,39 @@ def pick_cfg(name: str, shape, cfg: SparsityConfig) -> SparsityConfig:
     from repro.core.sparsity import DENSE
 
     return cfg if should_prune(name, shape, cfg) else DENSE
+
+
+# Weights that satisfy ``should_prune`` by name/shape but are consumed
+# *directly* (never through nm_linear/nm_conv): the logits head is a raw
+# transposed matmul in logits_from_hidden.  They must not be replaced by
+# pre-generated operand dicts, and SR-STE must not decay them — decay
+# targets weights the forward actually prunes.
+_DIRECT_CONSUMED = ("lm_head",)
+
+
+def decays(name: str, lshape, cfg: SparsityConfig) -> bool:
+    """Should SR-STE's sparse-refined decay apply to this parameter?
+
+    ``should_prune`` minus the directly-consumed weights: decaying a
+    weight toward zero is only meaningful when FF/BP really mask it."""
+    if any(re.search(frag, name) for frag in _DIRECT_CONSUMED):
+        return False
+    return should_prune(name, lshape, cfg)
+
+
+def pregen_site(name: str, lshape, cfg: SparsityConfig) -> bool:
+    """Is this master leaf replaced by a pre-generated operand dict?
+
+    True for ``{"w": ...}`` leaf-dict weights (tree names end in "/w" —
+    the models/layers convention routed through dense_apply / nm_conv)
+    that the method weight-prunes.  Bare-array weights (MoE expert
+    stacks) keep the legacy in-op mask derivation for now — see ROADMAP.
+    """
+    if not name.endswith("/w"):
+        return False
+    if cfg.is_dense or not (cfg.prunes_ff_weights() or cfg.prunes_bp_weights()):
+        return False
+    return decays(name, lshape, cfg)
 
 
 # ---------------------------------------------------------------------------

@@ -91,6 +91,24 @@ def _move_axis_last(x: jax.Array, axis: int):
     return jnp.transpose(x, perm), inv
 
 
+def _topn_group_mask(score: jax.Array, n: int) -> jax.Array:
+    """Survivor mask over (..., M) score groups: N largest, earliest-index
+    tie-break (what a greater-than-only hardware sorter does).  The single
+    shared selection core — ``nm_mask`` and ``nm_mask_pair`` both call it,
+    so every mask in the system breaks ties identically."""
+    # kth-largest value per group = the survival threshold
+    top = jax.lax.top_k(score, n)[0]
+    thresh = top[..., n - 1 : n]
+    # exact tie-break, no epsilon games: keep everything strictly above the
+    # threshold, then fill the remaining quota with the *earliest* entries
+    # that exactly equal it.
+    greater = score > thresh
+    tie = score == thresh
+    quota = n - greater.sum(axis=-1, keepdims=True)
+    tie_rank = jnp.cumsum(tie.astype(jnp.int32), axis=-1)
+    return greater | (tie & (tie_rank <= quota))
+
+
 def nm_mask(x: jax.Array, n: int, m: int, axis: int = -1) -> jax.Array:
     """Boolean mask keeping the N largest-|x| of each consecutive M along axis.
 
@@ -105,19 +123,42 @@ def nm_mask(x: jax.Array, n: int, m: int, axis: int = -1) -> jax.Array:
         raise ValueError(f"axis length {k} not divisible by group size {m}")
     g = xt.reshape(*xt.shape[:-1], k // m, m)
     score = jnp.abs(g).astype(jnp.float32)
-    # kth-largest value per group = the survival threshold
-    top = jax.lax.top_k(score, n)[0]
-    thresh = top[..., n - 1 : n]
-    # exact tie-break, no epsilon games: keep everything strictly above the
-    # threshold, then fill the remaining quota with the *earliest* entries
-    # that exactly equal it (what a greater-than-only hardware sorter does).
-    greater = score > thresh
-    tie = score == thresh
-    quota = n - greater.sum(axis=-1, keepdims=True)
-    tie_rank = jnp.cumsum(tie.astype(jnp.int32), axis=-1)
-    mask = greater | (tie & (tie_rank <= quota))
+    mask = _topn_group_mask(score, n)
     mask = mask.reshape(*xt.shape[:-1], k)
     return jnp.transpose(mask, inv)
+
+
+def nm_mask_pair(x: jax.Array, n: int, m: int, ff_axis: int, bp_axis: int):
+    """(FF mask, BP mask) of one tensor with a SINGLE fused top_k.
+
+    The FF groups (along ``ff_axis``) and BP groups (along ``bp_axis``)
+    are independent M-groups, so their |x| scores can be flattened into
+    one (G_ff + G_bp, M) batch and selected in one ``lax.top_k`` call —
+    the pre-generation dataflow's "masks computed once at WU time"
+    becomes literally one selection op per parameter in the lowered HLO
+    (down from one per consumer).  Bitwise-identical to two ``nm_mask``
+    calls.
+    """
+    if n == m:
+        ones = jnp.ones_like(x, dtype=bool)
+        return ones, ones
+    views = []
+    for axis in (ff_axis, bp_axis):
+        xt, inv = _move_axis_last(x, axis)
+        k = xt.shape[-1]
+        if k % m != 0:
+            raise ValueError(f"axis length {k} not divisible by {m}")
+        score = jnp.abs(xt).astype(jnp.float32).reshape(-1, m)
+        views.append((xt.shape, inv, score))
+    mask_flat = _topn_group_mask(
+        jnp.concatenate([v[2] for v in views], axis=0), n)
+    out, offset = [], 0
+    for shape, inv, score in views:
+        rows = score.shape[0]
+        mask = mask_flat[offset : offset + rows].reshape(shape)
+        out.append(jnp.transpose(mask, inv))
+        offset += rows
+    return tuple(out)
 
 
 def nm_mask_shared(
@@ -208,6 +249,37 @@ def nm_pack(x: jax.Array, n: int, m: int, axis: int = -1):
     vals = jnp.transpose(vals, inv)
     idx = jnp.transpose(idx, inv)
     return vals, idx
+
+
+def nm_pack_from_mask(x: jax.Array, mask: jax.Array, n: int, m: int,
+                      axis: int = -1):
+    """Pack x into N:M compact (values, indices) given its survivor mask.
+
+    Sort-free alternative to ``nm_pack`` for when the mask already exists
+    (the pre-generation WU path): survivors are compacted in ascending
+    group offset by a cumsum rank + scatter, so packing adds zero
+    top_k/sort ops to the lowered step.  Bitwise-identical output to
+    ``nm_pack(x, n, m, axis)`` whenever ``mask == nm_mask(x, n, m, axis)``.
+    """
+    xt, inv = _move_axis_last(x, axis)
+    mt, _ = _move_axis_last(mask, axis)
+    k = xt.shape[-1]
+    if k % m != 0:
+        raise ValueError(f"axis length {k} not divisible by {m}")
+    g = xt.reshape(*xt.shape[:-1], k // m, m)
+    gm = mt.reshape(*mt.shape[:-1], k // m, m)
+    rank = jnp.cumsum(gm.astype(jnp.int32), axis=-1) - 1
+    slot = jnp.where(gm, rank, n)  # pruned entries land in an overflow slot
+    pos = jax.lax.broadcasted_iota(jnp.int32, g.shape, g.ndim - 1)
+    vals = jnp.put_along_axis(
+        jnp.zeros((*g.shape[:-1], n + 1), g.dtype), slot, g,
+        axis=-1, inplace=False)[..., :n]
+    idx = jnp.put_along_axis(
+        jnp.zeros((*g.shape[:-1], n + 1), jnp.int32), slot, pos,
+        axis=-1, inplace=False)[..., :n]
+    vals = vals.reshape(*xt.shape[:-1], (k // m) * n)
+    idx = idx.reshape(*xt.shape[:-1], (k // m) * n).astype(jnp.uint8)
+    return jnp.transpose(vals, inv), jnp.transpose(idx, inv)
 
 
 def nm_unpack_n(values: jax.Array, indices: jax.Array, n: int, m: int, axis: int = -1):

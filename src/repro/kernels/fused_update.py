@@ -14,6 +14,13 @@ One grid step performs, on a (TR, TK) fp32 master-weight tile:
   (vals, idx) = pack_{N:M}(w')             # SORE, fused — bf16 + uint8
 
 lr/mu/wd/lam stream in as (1,1) fp32 scalars so schedules don't retrace.
+
+Wired into training via ``optim/sgd.update(use_pallas=True)``: the
+caller moves the FF contraction axis last, the kernel's in-VMEM decay
+mask is bitwise-identical to the stored previous-WU mask (both score the
+same fp32 master with the same earlier-index tie-break), and its packed
+output becomes the pre-generated FF operand of the next step
+(tests/test_pregen.py pins jnp-vs-kernel trajectories bitwise).
 """
 
 from __future__ import annotations

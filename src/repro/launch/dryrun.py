@@ -127,6 +127,8 @@ def lower_cell(arch, shape, mesh, sp_cfg: SparsityConfig, *,
         if shape.kind == "train" and arch.family != "encdec" and \
                 compress and "pod" in mesh.axis_names:
             state["err"] = f32s(params)
+        # the pre-generated compute tree (abstract, zero allocation)
+        state["compute"] = ST.abstract_compute_tree(f32s(params), sp_cfg)
         return bundle.step_fn.lower(state, specs)
 
     long_ctx = shape.shape_id == "long_500k"

@@ -457,6 +457,51 @@ def analyze(hlo_text: str) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Mask-op census (pre-generation dataflow gate)
+# ---------------------------------------------------------------------------
+#
+# The pre-generation invariant: a lowered train step derives each
+# prunable parameter's N:M masks exactly ONCE (at WU time), so the traced
+# step contains exactly one top_k/sort selection per prunable parameter —
+# and none inside the scanned model body.  Counting jaxpr primitives is
+# compiler-version-stable (optimized HLO spelling of top_k varies across
+# XLA releases); benchmarks/pregen_bench.py and tests/test_pregen.py both
+# gate on this census.
+
+MASK_PRIMS = ("top_k", "sort", "approx_top_k")
+
+
+def count_jaxpr_prims(jaxpr, names=MASK_PRIMS) -> int:
+    """Recursively count primitive occurrences in a (Closed)Jaxpr,
+    descending through scan/while/cond/pjit/remat/custom-vjp sub-jaxprs."""
+    inner = getattr(jaxpr, "jaxpr", jaxpr)  # ClosedJaxpr -> Jaxpr
+    total = 0
+    for eqn in inner.eqns:
+        if eqn.primitive.name in names:
+            total += 1
+        for val in eqn.params.values():
+            for sub in _subjaxprs(val):
+                total += count_jaxpr_prims(sub, names)
+    return total
+
+
+def _subjaxprs(val):
+    if hasattr(val, "jaxpr") or type(val).__name__ == "Jaxpr":
+        yield val
+    elif isinstance(val, (list, tuple)):
+        for v in val:
+            yield from _subjaxprs(v)
+
+
+def count_mask_ops(fn, *args) -> int:
+    """top_k/sort census of ``fn`` traced on ``args`` (arrays or
+    ShapeDtypeStructs)."""
+    import jax
+
+    return count_jaxpr_prims(jax.make_jaxpr(fn)(*args))
+
+
+# ---------------------------------------------------------------------------
 # Diagnostics: where do the bytes/flops/collective terms come from?
 # ---------------------------------------------------------------------------
 

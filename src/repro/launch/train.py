@@ -112,13 +112,18 @@ def run_training(args) -> int:
     def fresh():
         key = jax.random.PRNGKey(args.seed)
         state = ST.init_train_state(key, cfg, family=arch.family,
-                                    compress=compress)
+                                    compress=compress, sp_cfg=sp_cfg)
         return jax.device_put(state, bundle.state_shardings)
 
     if args.resume and args.ckpt_dir:
+        from functools import partial
+
         mgr = CheckpointManager(args.ckpt_dir)
-        state, _ = recover_or_init(mgr, fresh,
-                                   shardings=bundle.state_shardings)
+        # restore_with_pregen upgrades pre-pregen checkpoints (no
+        # "compute" leaf) by regenerating the operands from master
+        state, _ = recover_or_init(
+            mgr, fresh, shardings=bundle.state_shardings,
+            restore_fn=partial(ST.restore_with_pregen, mgr, sp_cfg=sp_cfg))
     else:
         state = fresh()
 

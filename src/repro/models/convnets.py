@@ -41,10 +41,26 @@ def _bn_apply(p, x):
 
 
 def _conv_bn_relu(p, x, sp_cfg, name, stride=1):
-    y = bdwp.nm_conv(x, p["conv"]["w"],
-                     bdwp.pick_cfg(name, p["conv"]["w"].shape, sp_cfg),
-                     stride, "SAME")
+    y = _nm_conv_auto(p["conv"], x, sp_cfg, name, stride)
     return jax.nn.relu(_bn_apply(p["bn"], y))
+
+
+def _nm_conv_auto(leaf, x, sp_cfg, name, stride=1, padding="SAME"):
+    """Conv through BDWP, dispatching on the leaf format.
+
+    A pre-generated leaf (leaf["w"] is the WU-time operand dict from
+    optim/sgd.pregen_tree) routes to nm_conv_pregen — masks were derived
+    once from fp32 master at WU time.  A plain array routes to nm_conv;
+    pass the fp32 master here (NOT a bf16 compute cast): nm_conv scores
+    its masks on the weights it is given and casts to the activation
+    dtype only after masking, so fp32-master masks come for free.
+    """
+    w = leaf["w"]
+    if isinstance(w, dict):
+        return bdwp.nm_conv_pregen(x, bdwp.pregen_ff_operand(w, sp_cfg),
+                                   w["bp"], stride, padding)
+    return bdwp.nm_conv(x, w, bdwp.pick_cfg(name, w.shape, sp_cfg),
+                        stride, padding)
 
 
 # ---------------------------------------------------------------------------
@@ -151,25 +167,19 @@ def resnet_apply(p, x, depth: int, sp_cfg: SparsityConfig = DENSE, width=64):
             stride = 2 if (bi == 0 and si > 0) else 1
             sc = x
             if "proj" in blk:
-                sc = bdwp.nm_conv(x, blk["proj"]["conv"]["w"],
-                                  bdwp.pick_cfg(f"s{si}b{bi}/proj",
-                                                blk["proj"]["conv"]["w"].shape,
-                                                sp_cfg), stride, "SAME")
+                sc = _nm_conv_auto(blk["proj"]["conv"], x, sp_cfg,
+                                   f"s{si}b{bi}/proj", stride)
                 sc = _bn_apply(blk["proj"]["bn"], sc)
             if kind == "basic":
                 y = _conv_bn_relu(blk["c1"], x, sp_cfg, f"s{si}b{bi}/c1", stride)
-                y = bdwp.nm_conv(y, blk["c2"]["conv"]["w"],
-                                 bdwp.pick_cfg(f"s{si}b{bi}/c2",
-                                               blk["c2"]["conv"]["w"].shape,
-                                               sp_cfg), 1, "SAME")
+                y = _nm_conv_auto(blk["c2"]["conv"], y, sp_cfg,
+                                  f"s{si}b{bi}/c2", 1)
                 y = _bn_apply(blk["c2"]["bn"], y)
             else:
                 y = _conv_bn_relu(blk["c1"], x, sp_cfg, f"s{si}b{bi}/c1", 1)
                 y = _conv_bn_relu(blk["c2"], y, sp_cfg, f"s{si}b{bi}/c2", stride)
-                y = bdwp.nm_conv(y, blk["c3"]["conv"]["w"],
-                                 bdwp.pick_cfg(f"s{si}b{bi}/c3",
-                                               blk["c3"]["conv"]["w"].shape,
-                                               sp_cfg), 1, "SAME")
+                y = _nm_conv_auto(blk["c3"]["conv"], y, sp_cfg,
+                                  f"s{si}b{bi}/c3", 1)
                 y = _bn_apply(blk["c3"]["bn"], y)
             x = jax.nn.relu(sc + y)
     x = x.mean((1, 2))

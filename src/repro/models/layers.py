@@ -48,12 +48,24 @@ def dense_init(key, d_in: int, d_out: int, *, axes, bias: bool = False,
 def dense_apply(p, x, name: str, cfg: SparsityConfig, compute_dtype=jnp.bfloat16):
     """x @ w via BDWP with per-param sparsity eligibility.
 
-    Packed-serving params route by leaf format:
-      * element-packed ({"vals","idx"} with idx.ndim == vals.ndim, from
-        serve.packed_params) -> kernels/nm_spmm consuming the compact
-        (vals, uint8 idx) pair directly (N/M of dense HBM bytes);
+    Params route by leaf format:
+      * pre-generated training leaves (p["w"] is an operand dict written
+        at WU time by optim/sgd — Fig. 11c) -> bdwp.nm_linear_pregen
+        consuming the stored FF/BP operands, zero mask re-derivation;
+      * element-packed serving leaves ({"vals","idx"} with idx.ndim ==
+        vals.ndim, from serve.packed_params) -> kernels/nm_spmm consuming
+        the compact (vals, uint8 idx) pair directly (N/M of dense HBM
+        bytes);
       * shared-packed ({"vals","idx"} with per-row idx, from
         bdwp.pack_tree_shared) -> the reduced-K gathered matmul."""
+    if "w" in p and isinstance(p["w"], dict):
+        xc = x.astype(compute_dtype)
+        pg = p["w"]
+        y = bdwp.nm_linear_pregen(xc, bdwp.pregen_ff_operand(pg, cfg),
+                                  pg["bp"])
+        if "b" in p:
+            y = y + p["b"].astype(y.dtype)
+        return y
     if "vals" in p:
         xc = x.astype(compute_dtype)
         if p["idx"].ndim == p["vals"].ndim:

@@ -25,16 +25,27 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.sparsity import SparsityConfig, nm_mask
 
 
-def compress_leaf(g, err, n: int, m: int):
-    """N:M-sparsify g+err along the last axis; returns (sparse, new_err)."""
+def compress_leaf(g, err, n: int, m: int, wire_dtype=jnp.bfloat16):
+    """N:M-sparsify g+err along the last axis; returns (sparse, new_err).
+
+    The returned sparse tensor holds what the wire ACTUALLY carries —
+    the kept values rounded to ``wire_dtype`` (the packed all-gather in
+    ``cross_pod_mean`` transmits bf16) — and the residual absorbs both
+    the pruned values AND that rounding error.  Computing the residual
+    against the unrounded kept values (the old behavior) silently
+    dropped the bf16 quantization term every step, biasing the
+    compressed sync; with it folded in, sum(sent) + err telescopes to
+    sum(g) exactly in fp32 (pinned by tests/test_spmd.py).
+    """
     size = g.size
     if size % m != 0 or g.ndim == 0:
         return g, err  # tiny/ragged leaves ride uncompressed
     flat = (g + err).reshape(-1, m)
     mask = nm_mask(flat, n, m, axis=-1)
     kept = jnp.where(mask, flat, 0.0)
-    new_err = (flat - kept).reshape(g.shape)
-    return kept.reshape(g.shape), new_err
+    sent = kept.astype(wire_dtype).astype(jnp.float32)
+    new_err = (flat - sent).reshape(g.shape)
+    return sent.reshape(g.shape), new_err
 
 
 def cross_pod_mean(grads, err_state, mesh: Mesh, grad_pspecs,

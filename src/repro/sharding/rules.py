@@ -194,6 +194,30 @@ def nm_params_pspecs(specs_tree, rules: dict, params, mesh: Mesh,
     return walk(specs_tree, params, ())
 
 
+def pregen_pspecs(compute_tree, master_pspecs):
+    """PartitionSpecs for a pre-generated compute tree (optim/sgd).
+
+    The compute tree mirrors master except that prunable weights became
+    operand dicts ({"ff"|("vals","idx"), "bp", "mask"}).  Every operand
+    inherits the master weight's spec: ff/bp/mask are dense-shaped, and
+    the packed vals/idx only shrink the contraction dim (ndim-2) by n/m —
+    a mesh axis the group guard admitted for w (per-shard multiple of M
+    along K) divides Kc with per-shard runs whole multiples of N, so the
+    same spec keeps packed runs group-whole under SPMD
+    (``assert_nm_unsplit`` re-checks).
+    """
+    from repro.core import bdwp
+
+    def walk(c, s):
+        if bdwp.is_pregen(c):
+            return {k: s for k in c}
+        if isinstance(c, dict):
+            return {k: walk(v, s[k]) for k, v in c.items()}
+        return s
+
+    return walk(compute_tree, master_pspecs)
+
+
 def assert_nm_unsplit(pspecs_tree, params_tree, mesh: Mesh, sp_cfg) -> None:
     """Assert no resolved sharding splits an N:M group.
 
@@ -225,6 +249,26 @@ def assert_nm_unsplit(pspecs_tree, params_tree, mesh: Mesh, sp_cfg) -> None:
     def walk(spec_node, p_node, path):
         if isinstance(spec_node, dict):
             name = "/".join(str(k) for k in path)
+            if "bp" in spec_node and ("ff" in spec_node
+                                      or "vals" in spec_node):
+                # pre-generated operand dict (optim/sgd): the pruned
+                # operands carry M-groups on their own axis; packed
+                # vals/idx carry N-runs on the compact axis (ndim-2)
+                if sp_cfg.prunes_ff_weights():
+                    if "ff" in spec_node and is_spec(spec_node["ff"]):
+                        shape = tuple(p_node["ff"].shape)
+                        check(name, "ff", as_spec(spec_node["ff"]), shape,
+                              {len(shape) - 2: sp_cfg.m})
+                    for key in ("vals", "idx"):
+                        if key in spec_node and is_spec(spec_node[key]):
+                            shape = tuple(p_node[key].shape)
+                            check(name, key, as_spec(spec_node[key]), shape,
+                                  {len(shape) - 2: sp_cfg.n})
+                if sp_cfg.prunes_bp_weights() and is_spec(spec_node["bp"]):
+                    shape = tuple(p_node["bp"].shape)
+                    check(name, "bp", as_spec(spec_node["bp"]), shape,
+                          {len(shape) - 1: sp_cfg.m})
+                return
             if "w" in spec_node and is_spec(spec_node["w"]):
                 shape = tuple(p_node["w"].shape)
                 gm = nm_group_multiples(name, shape, sp_cfg)

@@ -24,7 +24,21 @@ import time
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+
+# numpy round-trips extended dtypes (bfloat16, fp8) as raw void bytes
+# ('|V2'): the manifest records the true dtype and restore views it back
+_EXTENDED_DTYPES = {"bfloat16": jnp.bfloat16}
+
+
+def _rehydrate(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+    if str(arr.dtype) == dtype_str:
+        return arr
+    want = np.dtype(_EXTENDED_DTYPES.get(dtype_str, dtype_str))
+    if arr.dtype.kind == "V" and arr.dtype.itemsize == want.itemsize:
+        return arr.view(want)
+    return arr.astype(want)
 
 
 class CheckpointManager:
@@ -112,7 +126,8 @@ class CheckpointManager:
             raise ValueError(
                 f"checkpoint has {manifest['n_leaves']} leaves, "
                 f"state has {len(flat)} — structure mismatch")
-        loaded = [np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+        loaded = [_rehydrate(np.load(os.path.join(path, f"leaf_{i:05d}.npy")),
+                             manifest["leaves"][i]["dtype"])
                   for i in range(len(flat))]
         for a, ref in zip(loaded, flat):
             if tuple(a.shape) != tuple(ref.shape):

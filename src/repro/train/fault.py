@@ -72,11 +72,19 @@ class Heartbeat:
         return age is None or age > timeout
 
 
-def recover_or_init(ckpt_mgr, init_fn, like_state=None, shardings=None):
-    """Restart path: newest checkpoint (elastic resharding) or fresh init."""
+def recover_or_init(ckpt_mgr, init_fn, like_state=None, shardings=None,
+                    restore_fn=None):
+    """Restart path: newest checkpoint (elastic resharding) or fresh init.
+
+    restore_fn: optional override with the CheckpointManager.restore
+    signature ``(like, step=, shardings=)`` — the launcher passes
+    train/step.restore_with_pregen so pre-pregen checkpoints (no
+    ``compute`` leaf) upgrade in place instead of failing the restore.
+    """
     step = ckpt_mgr.latest_step()
     if step is None:
         return init_fn(), 0
     like = like_state if like_state is not None else init_fn()
-    state = ckpt_mgr.restore(like, step=step, shardings=shardings)
+    restore = restore_fn if restore_fn is not None else ckpt_mgr.restore
+    state = restore(like, step=step, shardings=shardings)
     return state, step

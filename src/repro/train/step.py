@@ -4,7 +4,9 @@ This is the piece the launcher, the dry-run, the trainer and the
 examples all share.  A step builder resolves:
   * parameter shardings from the logical-axis spec tree (sharding/rules),
   * input shardings per workload,
-  * the AMP numerics flow (fp32 master -> bf16 compute at step start),
+  * the pre-generation dataflow (paper Fig. 11c): FF/BP consume the bf16
+    N:M operands the optimizer wrote at the previous WU (state leaf
+    ``compute``) instead of re-casting/re-masking fp32 master per step,
   * the BDWP sparse-training semantics (via core/bdwp inside the model),
   * optional cross-pod N:M gradient compression (optim/compress).
 """
@@ -30,14 +32,42 @@ AUX_COEF = 0.01
 
 
 # ---------------------------------------------------------------------------
+# Pre-generation plumbing: the compute tree is the differentiation root
+# ---------------------------------------------------------------------------
+#
+# The compute tree written at WU time mixes float operands (bf16 weights,
+# pruned FF/BP copies, packed vals) with non-float companions (uint8 pack
+# indices, bool decay masks).  jax.grad roots must be inexact, so the
+# step splits the tree by dtype: the float leaves form the grad root, the
+# rest is re-merged inside the loss closure.  The cotangent tree (merged
+# back into compute structure) maps to master-shaped grads via
+# sgd.pregen_grads — the dense WU gradient rides on each BP operand.
+
+
+def split_compute(tree):
+    flat, tdef = jax.tree_util.tree_flatten(tree)
+    which = [jnp.issubdtype(x.dtype, jnp.inexact) for x in flat]
+    diff = [x for x, d in zip(flat, which) if d]
+    aux = [x for x, d in zip(flat, which) if not d]
+    return diff, (tdef, which, aux)
+
+
+def merge_compute(diff, meta):
+    tdef, which, aux = meta
+    it_d, it_a = iter(diff), iter(aux)
+    flat = [next(it_d) if d else next(it_a) for d in which]
+    return jax.tree_util.tree_unflatten(tdef, flat)
+
+
+# ---------------------------------------------------------------------------
 # LM-family
 # ---------------------------------------------------------------------------
 
 
 def lm_train_step(state, batch, *, cfg, sp_cfg, opt_cfg, mesh, names,
-                  compress=False, grad_pspecs=None, seq_parallel=False):
-    def loss_fn(master):
-        compute = jax.tree.map(lambda w: w.astype(jnp.bfloat16), master)
+                  compress=False, grad_pspecs=None, seq_parallel=False,
+                  pregen=True, pregen_pack=False, use_pallas=False):
+    def run_model(compute):
         hidden, _, aux = T.forward(compute, batch["tokens"], cfg, sp_cfg,
                                    prefix_embeds=batch.get("prefix_embeds"))
         labels = batch["labels"]
@@ -47,15 +77,30 @@ def lm_train_step(state, batch, *, cfg, sp_cfg, opt_cfg, mesh, names,
         return loss + AUX_COEF * aux, (loss, aux)
 
     with R.activation_sharding(mesh, R.batch_axes(mesh), sp=seq_parallel):
-        (total, (loss, aux)), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(state["master"])
+        if pregen:
+            # FF/BP load the operands written at the previous WU — no
+            # per-step master cast, no in-model mask derivation
+            diff, meta = split_compute(state["compute"])
+            (total, (loss, aux)), gdiff = jax.value_and_grad(
+                lambda d: run_model(merge_compute(d, meta)),
+                has_aux=True)(diff)
+            grads = sgd.pregen_grads(merge_compute(gdiff, meta))
+        else:  # legacy dataflow: cast master, re-derive masks in FF/BP
+            (total, (loss, aux)), grads = jax.value_and_grad(
+                lambda m: run_model(jax.tree.map(
+                    lambda w: w.astype(jnp.bfloat16), m)),
+                has_aux=True)(state["master"])
     if compress and "pod" in mesh.axis_names:
         grads, new_err = cross_pod_mean(grads, state["err"], mesh,
                                         grad_pspecs, sp_cfg)
         state = dict(state, err=new_err)
-    new_state, _ = sgd.update(state_core(state), grads, opt_cfg, sp_cfg,
-                              param_names=names)
+    new_state, compute = sgd.update(
+        state_core(state), grads, opt_cfg, sp_cfg, param_names=names,
+        prev_compute=state.get("compute") if pregen else None,
+        pregen=pregen, pack=pregen_pack, use_pallas=use_pallas)
     new_state = dict(state, **new_state)
+    if pregen:
+        new_state["compute"] = compute
     metrics = {"loss": loss, "aux": aux, "total": total,
                "lr": sgd.lr_schedule(opt_cfg, state["step"])}
     return new_state, metrics
@@ -65,8 +110,14 @@ def state_core(state):
     return {k: state[k] for k in ("master", "momentum", "step")}
 
 
-def init_train_state(key, cfg, family="lm", compress=False):
-    """Real (allocating) state init for the trainer/examples."""
+def init_train_state(key, cfg, family="lm", compress=False, sp_cfg=None,
+                     pregen=True, pregen_pack=False):
+    """Real (allocating) state init for the trainer/examples.
+
+    pregen=True bootstraps the pre-generated compute tree from master
+    with ``sp_cfg``'s masks — pass the SAME sp_cfg the step builder got,
+    or the state structure won't match the bundle's shardings.
+    """
     if family == "encdec":
         params, _ = E.init(key, cfg)
     else:
@@ -75,12 +126,15 @@ def init_train_state(key, cfg, family="lm", compress=False):
     if compress:
         state["err"] = jax.tree.map(
             lambda p: jnp.zeros_like(p, jnp.float32), state["master"])
+    if pregen:
+        state["compute"] = sgd.pregen_tree(state["master"], sp_cfg,
+                                           pack=pregen_pack)
     return state
 
 
-def encdec_train_step(state, batch, *, cfg, sp_cfg, opt_cfg, mesh, names):
-    def loss_fn(master):
-        compute = jax.tree.map(lambda w: w.astype(jnp.bfloat16), master)
+def encdec_train_step(state, batch, *, cfg, sp_cfg, opt_cfg, mesh, names,
+                      pregen=True, pregen_pack=False, use_pallas=False):
+    def run_model(compute):
         enc = E.encode(compute, batch["frames"], cfg, sp_cfg)
         hidden, _ = E.decode(compute, batch["tokens"], enc, cfg, sp_cfg)
         logits = E.logits_from_hidden(compute, hidden, cfg)
@@ -91,11 +145,24 @@ def encdec_train_step(state, batch, *, cfg, sp_cfg, opt_cfg, mesh, names):
         return loss, loss
 
     with R.activation_sharding(mesh, R.batch_axes(mesh)):
-        (_, loss), grads = jax.value_and_grad(loss_fn,
-                                              has_aux=True)(state["master"])
-    new_state, _ = sgd.update(state_core(state), grads, opt_cfg, sp_cfg,
-                              param_names=names)
+        if pregen:
+            diff, meta = split_compute(state["compute"])
+            (_, loss), gdiff = jax.value_and_grad(
+                lambda d: run_model(merge_compute(d, meta)),
+                has_aux=True)(diff)
+            grads = sgd.pregen_grads(merge_compute(gdiff, meta))
+        else:
+            (_, loss), grads = jax.value_and_grad(
+                lambda m: run_model(jax.tree.map(
+                    lambda w: w.astype(jnp.bfloat16), m)),
+                has_aux=True)(state["master"])
+    new_state, compute = sgd.update(
+        state_core(state), grads, opt_cfg, sp_cfg, param_names=names,
+        prev_compute=state.get("compute") if pregen else None,
+        pregen=pregen, pack=pregen_pack, use_pallas=use_pallas)
     new_state = dict(state, **new_state)
+    if pregen:
+        new_state["compute"] = compute
     return new_state, {"loss": loss, "lr": sgd.lr_schedule(opt_cfg, state["step"])}
 
 
@@ -198,9 +265,31 @@ class StepBundle:
     mesh: Optional[Mesh] = None  # mesh the bundle was resolved against
 
 
+def abstract_compute_tree(aparams, sp_cfg, pack=False):
+    """ShapeDtypeStruct compute tree (zero allocation) for builders/dry-run."""
+    return jax.eval_shape(
+        partial(sgd.pregen_tree, sp_cfg=sp_cfg, pack=pack), aparams)
+
+
+def _train_state_pspecs(p_pspecs, aparams, mesh, sp_cfg, *, compress,
+                        pregen, pregen_pack):
+    """State pspecs incl. the pre-generated compute tree; asserts that no
+    resolved sharding splits an N:M group or a packed run."""
+    state_pspecs = {"master": p_pspecs, "momentum": p_pspecs, "step": P()}
+    if compress and "pod" in mesh.axis_names:
+        state_pspecs["err"] = p_pspecs
+    if pregen:
+        acompute = abstract_compute_tree(aparams, sp_cfg, pack=pregen_pack)
+        c_pspecs = R.pregen_pspecs(acompute, p_pspecs)
+        R.assert_nm_unsplit(c_pspecs, acompute, mesh, sp_cfg)
+        state_pspecs["compute"] = c_pspecs
+    return state_pspecs
+
+
 def build_lm_train(cfg, mesh: Mesh, sp_cfg: SparsityConfig,
                    opt_cfg: sgd.SGDConfig, *, compress=False,
-                   donate=True, seq_parallel=False) -> StepBundle:
+                   donate=True, seq_parallel=False, pregen=True,
+                   pregen_pack=False, use_pallas=False) -> StepBundle:
     aparams, specs = T.init(jax.random.PRNGKey(0), cfg, abstract=True)
     rules = R.TRAIN_RULES
     # N:M-aware resolution: a mesh axis that would split an M-group
@@ -208,11 +297,9 @@ def build_lm_train(cfg, mesh: Mesh, sp_cfg: SparsityConfig,
     p_pspecs = R.nm_params_pspecs(specs, rules, aparams, mesh, sp_cfg)
     R.assert_nm_unsplit(p_pspecs, aparams, mesh, sp_cfg)
     names = sgd._names_of(p_pspecs)
-    state_pspecs = {"master": p_pspecs,
-                    "momentum": p_pspecs,
-                    "step": P()}
-    if compress and "pod" in mesh.axis_names:
-        state_pspecs = dict(state_pspecs, err=p_pspecs)
+    state_pspecs = _train_state_pspecs(p_pspecs, aparams, mesh, sp_cfg,
+                                       compress=compress, pregen=pregen,
+                                       pregen_pack=pregen_pack)
     state_sh = jax.tree.map(lambda ps: NamedSharding(mesh, ps), state_pspecs,
                             is_leaf=lambda x: isinstance(x, P))
     dp = R.batch_axes(mesh)
@@ -224,7 +311,9 @@ def build_lm_train(cfg, mesh: Mesh, sp_cfg: SparsityConfig,
 
     fn = partial(lm_train_step, cfg=cfg, sp_cfg=sp_cfg, opt_cfg=opt_cfg,
                  mesh=mesh, names=names, compress=compress,
-                 grad_pspecs=p_pspecs, seq_parallel=seq_parallel)
+                 grad_pspecs=p_pspecs, seq_parallel=seq_parallel,
+                 pregen=pregen, pregen_pack=pregen_pack,
+                 use_pallas=use_pallas)
     jitted = jax.jit(fn,
                      in_shardings=(state_sh, batch_sh),
                      out_shardings=(state_sh, None),
@@ -233,13 +322,16 @@ def build_lm_train(cfg, mesh: Mesh, sp_cfg: SparsityConfig,
 
 
 def build_encdec_train(cfg, mesh: Mesh, sp_cfg, opt_cfg,
-                       donate=True) -> StepBundle:
+                       donate=True, pregen=True, pregen_pack=False,
+                       use_pallas=False) -> StepBundle:
     aparams, specs = E.init(jax.random.PRNGKey(0), cfg, abstract=True)
     p_pspecs = R.nm_params_pspecs(specs, R.TRAIN_RULES, aparams, mesh,
                                   sp_cfg)
     R.assert_nm_unsplit(p_pspecs, aparams, mesh, sp_cfg)
     names = sgd._names_of(p_pspecs)
-    state_pspecs = {"master": p_pspecs, "momentum": p_pspecs, "step": P()}
+    state_pspecs = _train_state_pspecs(p_pspecs, aparams, mesh, sp_cfg,
+                                       compress=False, pregen=pregen,
+                                       pregen_pack=pregen_pack)
     state_sh = jax.tree.map(lambda ps: NamedSharding(mesh, ps), state_pspecs,
                             is_leaf=lambda x: isinstance(x, P))
     dp = R.batch_axes(mesh)
@@ -248,11 +340,44 @@ def build_encdec_train(cfg, mesh: Mesh, sp_cfg, opt_cfg,
     batch_sh = jax.tree.map(lambda ps: NamedSharding(mesh, ps), in_pspecs,
                             is_leaf=lambda x: isinstance(x, P))
     fn = partial(encdec_train_step, cfg=cfg, sp_cfg=sp_cfg, opt_cfg=opt_cfg,
-                 mesh=mesh, names=names)
+                 mesh=mesh, names=names, pregen=pregen,
+                 pregen_pack=pregen_pack, use_pallas=use_pallas)
     jitted = jax.jit(fn, in_shardings=(state_sh, batch_sh),
                      out_shardings=(state_sh, None),
                      donate_argnums=(0,) if donate else ())
     return StepBundle(jitted, state_sh, in_pspecs, names, specs, mesh)
+
+
+def restore_with_pregen(mgr, like_state, step=None, shardings=None, *,
+                        sp_cfg=None, pregen_pack=False):
+    """Checkpoint restore that upgrades pre-pregen checkpoints.
+
+    A checkpoint written before the pre-generation dataflow carries no
+    ``compute`` leaf — its leaf count mismatches the current state tree.
+    On that mismatch, restore the legacy subtree (master/momentum/step
+    [/err]) and regenerate the compute tree from the restored master —
+    the pre-generated operands are a pure function of master, so the
+    upgrade is exact.
+    """
+    try:
+        return mgr.restore(like_state, step=step, shardings=shardings)
+    except ValueError as full_err:
+        legacy_like = {k: v for k, v in like_state.items() if k != "compute"}
+        legacy_sh = None if shardings is None else \
+            {k: v for k, v in shardings.items() if k != "compute"}
+        try:
+            restored = mgr.restore(legacy_like, step=step,
+                                   shardings=legacy_sh)
+        except ValueError:
+            # not a pre-pregen checkpoint either (arch / compress /
+            # pack-mode mismatch): surface the original full-structure
+            # error, not the misleading legacy-subtree one
+            raise full_err
+        compute = sgd.pregen_tree(restored["master"], sp_cfg,
+                                  pack=pregen_pack)
+        if shardings is not None and "compute" in shardings:
+            compute = jax.device_put(compute, shardings["compute"])
+        return dict(restored, compute=compute)
 
 
 def build_lm_serve(cfg, mesh: Mesh, sp_cfg: SparsityConfig, input_specs,

@@ -49,32 +49,44 @@ def train_steps(bundle, state, data_iter: Iterator, n_steps: int):
 
 def fit(bundle, state, data_iter: Iterator, tcfg: TrainerConfig,
         log_fn: Callable = print):
-    """Runs the loop; returns (final_state, history)."""
+    """Runs the loop; returns (final_state, history).
+
+    All bookkeeping is keyed off the optimizer step (``state["step"]``),
+    NOT the data iterator's counter: after an auto-resume the iterator
+    may restart at 0 while the restored state does not, and keying
+    checkpoints by the iterator step made filenames collide/regress and
+    misfired the save guard.  A stale iterator is fast-forwarded instead
+    (skipped batches are cheap — the synthetic stream is seeded per
+    step), so resumed runs see the exact continuation of the stream.
+    """
     ckpt = CheckpointManager(tcfg.ckpt_dir) if tcfg.ckpt_dir else None
     hb = Heartbeat(tcfg.heartbeat_path) if tcfg.heartbeat_path else None
     mon = StragglerMonitor(tcfg.straggler_threshold)
     history = []
-    start_step = int(state["step"])
-    for step, batch in data_iter:
-        if step >= tcfg.total_steps:
+    cur = int(state["step"])  # authoritative; advances with each update
+    for it_step, batch in data_iter:
+        if it_step < cur:  # stale iterator after a resume: fast-forward
+            continue
+        if cur >= tcfg.total_steps:
             break
         t0 = time.perf_counter()
         state, metrics = bundle.step_fn(state, batch)
         jax.block_until_ready(metrics["loss"])
         dt = time.perf_counter() - t0
-        straggler = mon.record(step, dt)
-        rec = {"step": step, "loss": float(metrics["loss"]),
+        straggler = mon.record(cur, dt)
+        rec = {"step": cur, "loss": float(metrics["loss"]),
                "sec": dt, "straggler": straggler}
         history.append(rec)
         if hb is not None:
-            hb.beat(step, loss=rec["loss"])
+            hb.beat(cur, loss=rec["loss"])
         if straggler:
-            log_fn(f"[straggler] step {step}: {dt:.3f}s "
+            log_fn(f"[straggler] step {cur}: {dt:.3f}s "
                    f"(mean {mon.mean:.3f}s)")
-        if step % tcfg.log_every == 0:
-            log_fn(f"step {step:5d} loss {rec['loss']:.4f} {dt*1e3:.1f}ms")
-        if ckpt is not None and step > start_step and step % tcfg.ckpt_every == 0:
-            ckpt.save(step, state)
+        if cur % tcfg.log_every == 0:
+            log_fn(f"step {cur:5d} loss {rec['loss']:.4f} {dt*1e3:.1f}ms")
+        cur += 1  # == int(state["step"]) without a device sync
+        if ckpt is not None and cur % tcfg.ckpt_every == 0:
+            ckpt.save(cur, state)
     if ckpt is not None:
-        ckpt.save(int(state["step"]), state, blocking=True)
+        ckpt.save(cur, state, blocking=True)
     return state, history

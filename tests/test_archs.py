@@ -40,7 +40,8 @@ def test_smoke_train_step(arch_id, mesh):
     else:
         bundle = ST.build_lm_train(cfg, mesh, SP, OPT, donate=False)
     state = jax.device_put(
-        ST.init_train_state(jax.random.PRNGKey(0), cfg, family=arch.family),
+        ST.init_train_state(jax.random.PRNGKey(0), cfg, family=arch.family,
+                            sp_cfg=SP),
         bundle.state_shardings)
     if arch.family == "encdec":
         stream = D.encdec_stream(cfg.vocab, 2, 32, cfg.d_model, enc_frames=16)

@@ -1,0 +1,388 @@
+"""Pre-generation dataflow tests (paper Fig. 11c executed for real).
+
+What must hold:
+  * mask-once invariant: the traced bdwp train step derives each
+    prunable param's N:M masks exactly once (at WU time) — one
+    top_k/sort per prunable leaf in the whole step, none in the model;
+  * A/B parity: the pregen step tracks the legacy step across all five
+    methods, and is BITWISE equal to it whenever the fp32-master masks
+    agree with the legacy bf16-scored masks (same masks => same losses);
+  * packed (vals, idx) pregen state is bitwise-equal to the unpacked
+    form and round-trips through nm_unpack_n;
+  * the fused Pallas WU kernel path (interpret mode) is bitwise-equal
+    to the jnp path;
+  * pre-pregen checkpoints (no "compute" leaf) restore and upgrade;
+  * conv FF masks and SR-STE decay both score on fp32 master — a
+    bf16-rounding near-tie can no longer make them disagree.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import bdwp
+from repro.core import sparsity as S
+from repro.core.sparsity import SparsityConfig, nm_mask, nm_pack
+from repro.data import synthetic as D
+from repro.launch.hlo_cost import count_mask_ops
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer_lm as T
+from repro.optim import sgd
+from repro.train import step as ST
+from repro.train.checkpoint import CheckpointManager
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCH = get_arch("qwen3-8b")
+CFG = ARCH.smoke
+OPT = sgd.SGDConfig(lr=0.05, total_steps=16)
+BDWP = SparsityConfig(n=2, m=8, method="bdwp")
+
+
+def _structs(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _run(sp_cfg, *, pregen, steps=3, pack=False, use_pallas=False, seed=0):
+    mesh = make_host_mesh()
+    bundle = ST.build_lm_train(CFG, mesh, sp_cfg, OPT, donate=False,
+                               pregen=pregen, pregen_pack=pack,
+                               use_pallas=use_pallas)
+    state = ST.init_train_state(jax.random.PRNGKey(seed), CFG, sp_cfg=sp_cfg,
+                                pregen=pregen, pregen_pack=pack)
+    state = jax.device_put(state, bundle.state_shardings)
+    stream = D.lm_stream(CFG.vocab, 2, 32, seed=seed)
+    losses = []
+    for i, (_, batch) in enumerate(stream):
+        if i >= steps:
+            break
+        state, metrics = bundle.step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+    return state, losses
+
+
+class TestMaskOnce:
+    def test_one_topk_per_prunable_param(self):
+        """THE invariant: the lowered bdwp train step contains exactly
+        one top_k/sort mask derivation per prunable parameter (the fused
+        FF+BP selection at WU time), down from 3+ per param when FF, BP
+        and SR-STE decay each re-derived it (4x with remat recompute)."""
+        mesh = make_host_mesh()
+        bundle = ST.build_lm_train(CFG, mesh, BDWP, OPT, donate=False)
+        state = ST.init_train_state(jax.random.PRNGKey(0), CFG, sp_cfg=BDWP)
+        batch = {"tokens": jnp.zeros((2, 32), jnp.int32),
+                 "labels": jnp.zeros((2, 32), jnp.int32)}
+        n_sites = sum(
+            bdwp.pregen_site(n, sgd._logical_shape(n, w.shape)[0], BDWP)
+            for n, w in zip(sgd._names_of(state["master"]),
+                            jax.tree.leaves(state["master"])))
+        assert n_sites > 0
+        count = count_mask_ops(bundle.step_fn, _structs(state),
+                               _structs(batch))
+        assert count == n_sites, \
+            f"{count} top_k/sort ops for {n_sites} prunable params"
+
+    def test_legacy_step_rederives(self):
+        """Sanity of the census itself: the legacy dataflow really does
+        pay multiple selections per param (FF + remat'd FF + BP + decay)."""
+        mesh = make_host_mesh()
+        bundle = ST.build_lm_train(CFG, mesh, BDWP, OPT, donate=False,
+                                   pregen=False)
+        state = ST.init_train_state(jax.random.PRNGKey(0), CFG, sp_cfg=BDWP,
+                                    pregen=False)
+        batch = {"tokens": jnp.zeros((2, 32), jnp.int32),
+                 "labels": jnp.zeros((2, 32), jnp.int32)}
+        count = count_mask_ops(bundle.step_fn, _structs(state),
+                               _structs(batch))
+        assert count >= 3 * 7  # 7 prunable leaves in the smoke config
+
+    def test_fused_pair_equals_two_masks(self):
+        w = jax.random.normal(jax.random.PRNGKey(3), (4, 32, 16))
+        ff, bp = S.nm_mask_pair(w, 2, 8, 1, 2)
+        np.testing.assert_array_equal(np.asarray(ff),
+                                      np.asarray(nm_mask(w, 2, 8, axis=1)))
+        np.testing.assert_array_equal(np.asarray(bp),
+                                      np.asarray(nm_mask(w, 2, 8, axis=2)))
+
+    def test_pack_from_mask_equals_nm_pack(self):
+        for seed in range(5):
+            x = jax.random.normal(jax.random.PRNGKey(seed), (8, 64))
+            mask = nm_mask(x, 2, 8, axis=0)
+            v, i = S.nm_pack_from_mask(x, mask, 2, 8, axis=0)
+            rv, ri = nm_pack(x, 2, 8, axis=0)
+            np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+            np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+
+
+class TestPregenParity:
+    @pytest.mark.parametrize("method",
+                             ["dense", "srste", "sdgp", "sdwp", "bdwp"])
+    def test_tracks_legacy_trajectory(self, method):
+        """Pregen vs legacy differ ONLY through the mask-source fix
+        (fp32-master vs bf16 scoring flips ~0.1% of near-tie bits), so
+        short trajectories must track closely for every method."""
+        sp = SparsityConfig(n=2, m=8, method=method)
+        _, l_pre = _run(sp, pregen=True)
+        _, l_leg = _run(sp, pregen=False)
+        np.testing.assert_allclose(l_pre, l_leg, atol=5e-2)
+
+    def test_packed_state_bitwise_equals_unpacked(self):
+        s_a, l_a = _run(BDWP, pregen=True, pack=False)
+        s_b, l_b = _run(BDWP, pregen=True, pack=True)
+        assert l_a == l_b
+        for a, b in zip(jax.tree.leaves(s_a["master"]),
+                        jax.tree.leaves(s_b["master"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.parametrize("method,pack", [("srste", False),
+                                             ("bdwp", False),
+                                             ("bdwp", True)])
+    def test_pallas_fused_update_bitwise_equals_jnp(self, method, pack):
+        """The fused WUVE+SORE kernel (interpret mode on CPU) wired into
+        the train step must match the jnp formulation bitwise: same
+        masks, same losses, same master — including the kernel-packed
+        state (pack=True stores the kernel's (vals, idx) directly)."""
+        sp = SparsityConfig(n=2, m=8, method=method)
+        s_j, l_j = _run(sp, pregen=True, steps=2, pack=pack)
+        s_p, l_p = _run(sp, pregen=True, steps=2, pack=pack,
+                        use_pallas=True)
+        assert l_j == l_p
+        flat_j = jax.tree_util.tree_flatten_with_path(s_j)[0]
+        flat_p = jax.tree.leaves(s_p)
+        assert len(flat_j) == len(flat_p)
+        for (path, a), b in zip(flat_j, flat_p):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg="/".join(str(getattr(k, "key", k)) for k in path))
+
+    def test_exact_parity_when_masks_stable(self):
+        """Same masks => bitwise-equal losses.  With magnitudes spaced
+        far beyond bf16 resolution the fp32 and bf16 scorings select the
+        same survivors, and the pregen step must reproduce the legacy
+        trajectory EXACTLY (fp32-master path)."""
+        k, f = 16, 16  # both axes prunable (>= 2*m per group axis)
+        # geometrically spaced magnitudes: every |w| gap is ~2%, five
+        # bf16 resolution steps — small updates can't create new ties
+        vals = 1.02 ** jnp.arange(k * f, dtype=jnp.float32) * 0.05
+        vals = vals * jnp.where(jnp.arange(k * f) % 3 == 0, -1.0, 1.0)
+        w0 = jax.random.permutation(jax.random.PRNGKey(0), vals).reshape(k, f)
+        assert bdwp.pregen_site("proj/w", (k, f),
+                                SparsityConfig(n=2, m=8, method="bdwp"))
+        sp = SparsityConfig(n=2, m=8, method="bdwp", lam=1e-3)
+        opt = sgd.SGDConfig(lr=1e-3, warmup_steps=0, total_steps=100,
+                            weight_decay=1e-4, min_lr_frac=1.0)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, k), jnp.bfloat16)
+        y = jax.random.normal(jax.random.PRNGKey(2), (4, f), jnp.bfloat16)
+        names = ["proj/w"]
+
+        def legacy_step(state):
+            def loss_fn(master):
+                compute = jax.tree.map(
+                    lambda v: v.astype(jnp.bfloat16), master)
+                out = bdwp.nm_linear(x, compute["proj"]["w"], sp)
+                return jnp.mean((out - y) ** 2)
+
+            loss, grads = jax.value_and_grad(loss_fn)(state["master"])
+            new_state, _ = sgd.update(state, grads, opt, sp,
+                                      param_names=names)
+            return new_state, loss
+
+        def pregen_step(state):
+            diff, meta = ST.split_compute(state["compute"])
+
+            def loss_fn(d):
+                compute = ST.merge_compute(d, meta)
+                pg = compute["proj"]["w"]
+                out = bdwp.nm_linear_pregen(
+                    x, bdwp.pregen_ff_operand(pg, sp), pg["bp"])
+                return jnp.mean((out - y) ** 2)
+
+            loss, gdiff = jax.value_and_grad(loss_fn)(diff)
+            grads = sgd.pregen_grads(ST.merge_compute(gdiff, meta))
+            core = {k: state[k] for k in ("master", "momentum", "step")}
+            new_state, compute = sgd.update(
+                core, grads, opt, sp, param_names=names,
+                prev_compute=state["compute"], pregen=True, pack=True)
+            return dict(new_state, compute=compute), loss
+
+        master = {"proj": {"w": w0}}
+        s_leg = sgd.init_state(master)
+        s_pre = dict(sgd.init_state(master),
+                     compute=sgd.pregen_tree(master, sp, pack=True))
+        for step in range(4):
+            # precondition: legacy's bf16-scored masks == fp32 masks
+            w = s_leg["master"]["proj"]["w"]
+            for ax in (0, 1):
+                np.testing.assert_array_equal(
+                    np.asarray(nm_mask(w, 2, 8, axis=ax)),
+                    np.asarray(nm_mask(w.astype(jnp.bfloat16), 2, 8,
+                                       axis=ax)))
+            s_leg, l_leg = legacy_step(s_leg)
+            s_pre, l_pre = pregen_step(s_pre)
+            np.testing.assert_array_equal(np.asarray(l_leg),
+                                          np.asarray(l_pre))
+            np.testing.assert_array_equal(
+                np.asarray(s_leg["master"]["proj"]["w"]),
+                np.asarray(s_pre["master"]["proj"]["w"]))
+
+    def test_packed_leaf_roundtrips(self):
+        state = ST.init_train_state(jax.random.PRNGKey(0), CFG, sp_cfg=BDWP,
+                                    pregen_pack=True)
+        pg = state["compute"]["blocks"]["ffn"]["w_gate"]["w"]
+        assert "vals" in pg and pg["idx"].dtype == jnp.uint8
+        master = state["master"]["blocks"]["ffn"]["w_gate"]["w"]
+        ff_dense = bdwp.pregen_ff_operand(pg, BDWP)
+        expect = jnp.where(nm_mask(master, 2, 8, axis=master.ndim - 2),
+                           master, 0.0).astype(jnp.bfloat16)
+        np.testing.assert_array_equal(np.asarray(ff_dense),
+                                      np.asarray(expect))
+        # packed axis really is N/M of the contraction axis
+        assert pg["vals"].shape[-2] == master.shape[-2] * 2 // 8
+
+    @pytest.mark.parametrize("method", ["srste", "sdwp", "bdwp"])
+    def test_update_decay_uses_stored_mask(self, method):
+        """sgd.update(pregen=True) must decay exactly the weights the
+        stored (previous-WU) mask pruned — no re-derivation drift."""
+        sp = SparsityConfig(n=1, m=4, method=method, lam=0.1)
+        w = jax.random.normal(jax.random.PRNGKey(0), (8, 8))
+        master = {"proj": {"w": w}}
+        state = sgd.init_state(master)
+        compute = sgd.pregen_tree(master, sp)
+        zero_g = jax.tree.map(jnp.zeros_like, master)
+        opt = sgd.SGDConfig(lr=0.1, momentum=0.9, weight_decay=0.0,
+                            warmup_steps=0, total_steps=10 ** 9,
+                            min_lr_frac=1.0)
+        new_state, _ = sgd.update(state, zero_g, opt, sp,
+                                  param_names=["proj/w"],
+                                  prev_compute=compute, pregen=True)
+        moved = np.asarray(new_state["master"]["proj"]["w"] != w)
+        stored = np.asarray(compute["proj"]["w"]["mask"])
+        np.testing.assert_array_equal(moved, ~stored)
+
+
+class TestCheckpointCompat:
+    def test_pre_pregen_checkpoint_upgrades(self, tmp_path):
+        """A checkpoint written before the pregen dataflow (no "compute"
+        leaf) restores via restore_with_pregen: the legacy subtree loads
+        and the operands regenerate from the restored master, exactly."""
+        mesh = make_host_mesh()
+        bundle = ST.build_lm_train(CFG, mesh, BDWP, OPT, donate=False)
+        legacy = ST.init_train_state(jax.random.PRNGKey(5), CFG,
+                                     sp_cfg=BDWP, pregen=False)
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(0, legacy, blocking=True)
+
+        like = ST.init_train_state(jax.random.PRNGKey(0), CFG, sp_cfg=BDWP)
+        restored = ST.restore_with_pregen(
+            mgr, like, shardings=bundle.state_shardings, sp_cfg=BDWP)
+        assert "compute" in restored
+        for a, b in zip(jax.tree.leaves(restored["master"]),
+                        jax.tree.leaves(legacy["master"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        expect = sgd.pregen_tree(legacy["master"], BDWP)
+        for a, b in zip(jax.tree.leaves(restored["compute"]),
+                        jax.tree.leaves(expect)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # and the upgraded state steps
+        stream = D.lm_stream(CFG.vocab, 2, 32)
+        _, batch = next(iter(stream))
+        new_state, metrics = bundle.step_fn(restored, batch)
+        assert np.isfinite(float(metrics["loss"]))
+
+    def test_full_state_roundtrip_with_compute(self, tmp_path):
+        """bf16/uint8/bool compute leaves survive the npy round-trip."""
+        state = ST.init_train_state(jax.random.PRNGKey(1), CFG, sp_cfg=BDWP,
+                                    pregen_pack=True)
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(2, state, blocking=True)
+        out = mgr.restore(jax.tree.map(jnp.zeros_like, state))
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(state)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestMaskSourceConsistency:
+    """Satellite bugfix: FF masks and SR-STE decay masks must both score
+    on fp32 master.  A near-tie group — two weights closer than bf16
+    resolution — is the regression trigger: bf16 scoring rounds them
+    equal and keeps the EARLIER index, fp32 keeps the truly larger one."""
+
+    def _near_tie_group(self):
+        eps = 2e-4  # far below bf16's ~0.4% relative resolution at 1.0
+        g = np.full(8, 1e-4, np.float32)
+        g[0], g[1] = 1.0, 1.0 + eps  # fp32 keeps idx 1; bf16 ties -> idx 0
+        return jnp.asarray(g)
+
+    def test_near_tie_premise(self):
+        g = self._near_tie_group()
+        m32 = nm_mask(g, 1, 8, axis=0)
+        m16 = nm_mask(g.astype(jnp.bfloat16), 1, 8, axis=0)
+        assert bool(m32[1]) and not bool(m32[0])
+        assert bool(m16[0]) and not bool(m16[1])  # the legacy disagreement
+
+    def test_conv_ff_mask_scores_on_given_weights(self):
+        """nm_conv masks the weights it is GIVEN and casts after masking:
+        passing fp32 master (as examples/paper_loss_curves.py now does)
+        yields the fp32-mask selection even with bf16 activations."""
+        sp = SparsityConfig(n=1, m=8, method="bdwp")
+        w = jnp.zeros((1, 1, 8, 8), jnp.float32)
+        w = w.at[0, 0, :, 0].set(self._near_tie_group())
+        x = jnp.ones((1, 4, 4, 8), jnp.bfloat16)
+        y = bdwp.nm_conv(x, w, sp)
+        # output channel 0 == conv with only the fp32-kept tap (idx 1)
+        w_ref = jnp.zeros_like(w).at[0, 0, 1, 0].set(w[0, 0, 1, 0])
+        y_ref = jax.lax.conv_general_dilated(
+            x, w_ref.astype(x.dtype), (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        np.testing.assert_array_equal(np.asarray(y[..., 0]),
+                                      np.asarray(y_ref[..., 0]))
+
+    def test_pregen_ff_and_decay_share_fp32_mask(self):
+        """In the pregen state the FF operand's survivor set IS the
+        stored decay mask, both scored on fp32 master — the near-tie
+        group can no longer make FF and decay disagree."""
+        sp = SparsityConfig(n=1, m=8, method="srste", lam=0.1)
+        w = jnp.tile(self._near_tie_group()[:, None], (2, 8))  # (16, 8)
+        master = {"proj": {"w": w}}
+        compute = sgd.pregen_tree(master, sp)
+        pg = compute["proj"]["w"]
+        ff_alive = np.asarray(pg["ff"] != 0)
+        np.testing.assert_array_equal(ff_alive, np.asarray(pg["mask"]))
+        np.testing.assert_array_equal(
+            np.asarray(pg["mask"]), np.asarray(nm_mask(w, 1, 8, axis=0)))
+
+    def test_decay_excludes_directly_consumed_weights(self):
+        """lm_head never routes through nm_linear, so SR-STE must not
+        decay it (it used to — decaying never-pruned weights)."""
+        assert not bdwp.decays("lm_head/w", (64, 512), BDWP)
+        assert bdwp.decays("blocks/attn/q_proj/w", (64, 64), BDWP)
+        assert not bdwp.pregen_site("lm_head/w", (64, 512), BDWP)
+
+
+class TestConvPregen:
+    def test_resnet9_trains_on_pregen_tree(self):
+        """nm_conv_pregen end-to-end: build a pregen tree for ResNet9,
+        forward/backward through it, and check the WU gradient is dense
+        (straight-through) while FF used the pruned operand."""
+        from repro.models import convnets as C
+
+        sp = SparsityConfig(n=2, m=8, method="bdwp")
+        params = C.resnet9_init(jax.random.PRNGKey(0), num_classes=10,
+                                width=32)
+        compute = sgd.pregen_tree(params, sp)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3),
+                              jnp.bfloat16)
+        diff, meta = ST.split_compute(compute)
+
+        def loss_fn(d):
+            logits = C.resnet9_apply(ST.merge_compute(d, meta), x, sp)
+            return jnp.mean(logits ** 2)
+
+        loss, gdiff = jax.value_and_grad(loss_fn)(diff)
+        assert np.isfinite(float(loss))
+        grads = sgd.pregen_grads(ST.merge_compute(gdiff, meta))
+        gw = grads["conv1"]["conv"]["w"]
+        assert gw.shape == params["conv1"]["conv"]["w"].shape
+        assert float((np.asarray(gw, np.float32) != 0).mean()) > 0.9

@@ -127,7 +127,7 @@ class TestTrainerLoop:
         bundle = ST.build_lm_train(arch.smoke, mesh, sp,
                                    sgd.SGDConfig(total_steps=6))
         state = jax.device_put(
-            ST.init_train_state(jax.random.PRNGKey(0), arch.smoke),
+            ST.init_train_state(jax.random.PRNGKey(0), arch.smoke, sp_cfg=sp),
             bundle.state_shardings)
         tcfg = TR.TrainerConfig(total_steps=6, ckpt_every=3, log_every=100,
                                 ckpt_dir=str(tmp_path))
@@ -138,3 +138,63 @@ class TestTrainerLoop:
         assert all(np.isfinite(h["loss"]) for h in hist)
         mgr = CheckpointManager(str(tmp_path))
         assert mgr.latest_step() == 6
+
+    def test_fit_resume_keys_off_state_step(self, tmp_path):
+        """Auto-resume bookkeeping: after a restart the data iterator
+        begins at 0 while the restored state step does not.  Checkpoint
+        keys must come from state["step"] (the old iterator-keyed saves
+        collided/regressed and misfired the save guard), the stale
+        iterator must fast-forward, and every saved checkpoint's
+        directory key must equal its internal step."""
+        from repro.configs import get_arch
+        from repro.core.sparsity import SparsityConfig
+        from repro.data import synthetic as D
+        from repro.launch.mesh import make_host_mesh
+        from repro.optim import sgd
+        from repro.train import step as ST
+        from repro.train import trainer as TR
+
+        arch = get_arch("qwen3-8b")
+        mesh = make_host_mesh()
+        sp = SparsityConfig(n=2, m=8, method="bdwp")
+        bundle = ST.build_lm_train(arch.smoke, mesh, sp,
+                                   sgd.SGDConfig(total_steps=8))
+        state = jax.device_put(
+            ST.init_train_state(jax.random.PRNGKey(0), arch.smoke, sp_cfg=sp),
+            bundle.state_shardings)
+        mgr = CheckpointManager(str(tmp_path), keep=0)
+
+        tcfg = TR.TrainerConfig(total_steps=4, ckpt_every=2, log_every=100,
+                                ckpt_dir=str(tmp_path))
+        state, hist1 = TR.fit(bundle, state, D.lm_stream(arch.smoke.vocab, 2, 32),
+                              tcfg, log_fn=lambda *_: None)
+        assert [h["step"] for h in hist1] == [0, 1, 2, 3]
+        assert mgr.all_steps() == [2, 4]
+
+        # crash + restart: restore newest, hand fit a FRESH iterator (0-based)
+        restored = mgr.restore(jax.tree.map(jnp.zeros_like, state),
+                               shardings=bundle.state_shardings)
+        assert int(restored["step"]) == 4
+        tcfg2 = TR.TrainerConfig(total_steps=8, ckpt_every=2, log_every=100,
+                                 ckpt_dir=str(tmp_path))
+        state2, hist2 = TR.fit(bundle, restored,
+                               D.lm_stream(arch.smoke.vocab, 2, 32),
+                               tcfg2, log_fn=lambda *_: None)
+        # resumed history continues at the optimizer step, no regression
+        assert [h["step"] for h in hist2] == [4, 5, 6, 7]
+        assert mgr.all_steps() == [4, 6, 8]  # keep=3 retention pruned 2
+        # every checkpoint's directory key equals its internal step
+        like = jax.tree.map(jnp.zeros_like, state)
+        for s in mgr.all_steps():
+            ck = mgr.restore(like, step=s, shardings=bundle.state_shardings)
+            assert int(ck["step"]) == s
+        # fast-forward consumed the stream at the right offset: a run fed
+        # a correctly-offset stream lands on the identical final state
+        restored_b = mgr.restore(jax.tree.map(jnp.zeros_like, state),
+                                 step=4, shardings=bundle.state_shardings)
+        state3, _ = TR.fit(bundle, restored_b,
+                           D.lm_stream(arch.smoke.vocab, 2, 32, start=4),
+                           tcfg2, log_fn=lambda *_: None)
+        for a, b in zip(jax.tree.leaves(state2["master"]),
+                        jax.tree.leaves(state3["master"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
