@@ -46,12 +46,16 @@ GATES = {
         "variants.compressed_sync.hlo_flops",
     ],
     # mask-once invariant: one fused top_k per prunable param at WU time
-    # (±20% of 1.0 still rejects any regrown selection — counts are ints)
+    # (±20% of 1.0 still rejects any regrown selection — counts are ints);
+    # moe_pregen gates the same invariant for bare-array expert stacks
     "BENCH_pregen.json": [
         "mask_ops.pregen",
         "mask_ops.pregen_packed",
         "mask_ops.prunable_params",
         "mask_ops.pregen_per_param",
+        "moe_pregen.mask_ops.pregen",
+        "moe_pregen.mask_ops.prunable_params",
+        "moe_pregen.mask_ops.pregen_per_param",
     ],
 }
 

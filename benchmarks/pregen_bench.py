@@ -74,6 +74,52 @@ def time_steps(bundle, state, vocab, batch, seq, steps) -> float:
     return float(np.median(times) * 1e3)
 
 
+def moe_section(smoke: bool) -> dict:
+    """MoE edition of the mask-once gate: bare-array expert stacks
+    (granite smoke) must pay exactly one fused selection per prunable
+    param at WU time.  The census is N:M-shape-filtered (nm=(n, m)) so
+    the router's top_k over the expert dim is not miscounted — 2:4
+    sparsity here keeps m=4 distinguishable from the 8-expert router.
+    """
+    cfg = get_arch("granite-moe-1b-a400m").smoke
+    mesh = make_host_mesh()
+    sp_cfg = SparsityConfig(n=2, m=4, method="bdwp")
+    opt_cfg = sgd.SGDConfig(lr=0.05, total_steps=100)
+    batch, seq = (2, 32) if smoke else (4, 64)
+    steps = 3 if smoke else 8
+
+    state = ST.init_train_state(jax.random.PRNGKey(0), cfg, sp_cfg=sp_cfg)
+    legacy_state = {k: v for k, v in state.items() if k != "compute"}
+    sites = prunable_sites(state["master"], sp_cfg)
+    b0 = {"tokens": jnp.zeros((batch, seq), jnp.int32),
+          "labels": jnp.zeros((batch, seq), jnp.int32)}
+
+    counts, times = {}, {}
+    for mode, pregen, st in (("pregen", True, state),
+                             ("legacy", False, legacy_state)):
+        bundle = ST.build_lm_train(cfg, mesh, sp_cfg, opt_cfg, donate=False,
+                                   pregen=pregen)
+        counts[mode] = count_mask_ops(bundle.step_fn, _structs(st),
+                                      _structs(b0), nm=(sp_cfg.n, sp_cfg.m))
+        times[f"moe_{mode}_step_ms_median"] = time_steps(
+            bundle, jax.device_put(st, bundle.state_shardings),
+            cfg.vocab, batch, seq, steps)
+
+    return {
+        "config": {"arch": "granite-moe-1b-smoke", "method": sp_cfg.method,
+                   "nm": f"{sp_cfg.n}:{sp_cfg.m}", "batch": batch,
+                   "seq": seq},
+        "mask_ops": {
+            "pregen": counts["pregen"],
+            "legacy": counts["legacy"],
+            "prunable_params": len(sites),
+            "pregen_per_param": counts["pregen"] / max(len(sites), 1),
+            "legacy_per_param": counts["legacy"] / max(len(sites), 1),
+        },
+        "times": times,
+    }
+
+
 def main(smoke: bool = False) -> dict:
     cfg = get_arch("qwen3-8b").smoke
     mesh = make_host_mesh()
@@ -102,6 +148,7 @@ def main(smoke: bool = False) -> dict:
             bundle, jax.device_put(st, bundle.state_shardings),
             cfg.vocab, batch, seq, steps)
 
+    moe = moe_section(smoke)
     rec = {
         "config": {"arch": "qwen3-8b-smoke", "method": sp_cfg.method,
                    "nm": f"{sp_cfg.n}:{sp_cfg.m}", "batch": batch,
@@ -115,6 +162,7 @@ def main(smoke: bool = False) -> dict:
             "legacy_per_param": counts["legacy"] / max(len(sites), 1),
         },
         "times": times,
+        "moe_pregen": moe,
     }
     os.makedirs(RESULTS, exist_ok=True)
     out = os.path.join(RESULTS, "BENCH_pregen.json")
@@ -130,10 +178,25 @@ def main(smoke: bool = False) -> dict:
           f"vs legacy {times['legacy_step_ms_median']:.1f}")
     print(f"wrote {out}")
 
+    mm = moe["mask_ops"]
+    print(f"moe (granite smoke): pregen {mm['pregen']} "
+          f"({mm['pregen_per_param']:.0f}/param) vs legacy {mm['legacy']} "
+          f"({mm['legacy_per_param']:.1f}/param) over "
+          f"{mm['prunable_params']} prunable params")
+
+    failed = False
     if mo["pregen_per_param"] != 1.0:
         print(f"[FAIL] mask-once invariant broken: "
               f"{mo['pregen_per_param']:.2f} selections per prunable param "
               f"(want exactly 1) — mask re-generation crept back in")
+        failed = True
+    if mm["pregen_per_param"] != 1.0:
+        print(f"[FAIL] MoE mask-once invariant broken: "
+              f"{mm['pregen_per_param']:.2f} selections per prunable param "
+              f"(want exactly 1) — expert-stack mask re-generation crept "
+              f"back in")
+        failed = True
+    if failed:
         sys.exit(1)
     return rec
 

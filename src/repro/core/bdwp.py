@@ -426,6 +426,22 @@ def pick_cfg(name: str, shape, cfg: SparsityConfig) -> SparsityConfig:
 # targets weights the forward actually prunes.
 _DIRECT_CONSUMED = ("lm_head",)
 
+# Bare-array prunable leaves: weights stored directly as arrays rather
+# than ``{"w": ...}`` leaf-dicts — the MoE expert stacks (E, K, F) and
+# shared-expert mats of models/moe.  A basename may only be listed here
+# if its forward consumer dispatches on ``is_pregen`` (moe._expert_ffn
+# and the shared-expert path do, mirroring layers.dense_apply): the
+# pregen traversal replaces exactly these leaves with operand dicts, so
+# an unlisted bare weight can never be swapped out from under a consumer
+# that still expects an array.  Note the FFN leaves of the same names
+# are dict sites ("…/w_gate/w") and take the "/w" route instead.
+_BARE_NM_BASENAMES = ("w_gate", "w_up", "w_down")
+
+
+def bare_nm_leaf(name: str) -> bool:
+    """Is this the tree name of a bare-array N:M-consumed weight leaf?"""
+    return name.rsplit("/", 1)[-1] in _BARE_NM_BASENAMES
+
 
 def decays(name: str, lshape, cfg: SparsityConfig) -> bool:
     """Should SR-STE's sparse-refined decay apply to this parameter?
@@ -437,15 +453,20 @@ def decays(name: str, lshape, cfg: SparsityConfig) -> bool:
     return should_prune(name, lshape, cfg)
 
 
-def pregen_site(name: str, lshape, cfg: SparsityConfig) -> bool:
+def pregen_site(name: str, lshape, cfg: SparsityConfig, *,
+                bare: bool = True) -> bool:
     """Is this master leaf replaced by a pre-generated operand dict?
 
     True for ``{"w": ...}`` leaf-dict weights (tree names end in "/w" —
     the models/layers convention routed through dense_apply / nm_conv)
-    that the method weight-prunes.  Bare-array weights (MoE expert
-    stacks) keep the legacy in-op mask derivation for now — see ROADMAP.
+    and for bare-array expert-stack leaves (``bare_nm_leaf`` — MoE
+    w_gate/w_up/w_down, consumed through moe's is_pregen dispatch) that
+    the method weight-prunes.  ``bare=False`` reproduces the earlier
+    dict-sites-only structure in which bare leaves stayed legacy;
+    train/step.restore_with_pregen uses it to recognize checkpoints
+    written before MoE pre-generation.
     """
-    if not name.endswith("/w"):
+    if not (name.endswith("/w") or (bare and bare_nm_leaf(name))):
         return False
     if cfg.is_dense or not (cfg.prunes_ff_weights() or cfg.prunes_bp_weights()):
         return False

@@ -137,7 +137,11 @@ def nm_mask_pair(x: jax.Array, n: int, m: int, ff_axis: int, bp_axis: int):
     the pre-generation dataflow's "masks computed once at WU time"
     becomes literally one selection op per parameter in the lowered HLO
     (down from one per consumer).  Bitwise-identical to two ``nm_mask``
-    calls.
+    calls.  Shape-polymorphic over leading axes: a stacked MoE expert
+    leaf (L?, E, K, F) with ff_axis=ndim-2, bp_axis=ndim-1 yields
+    per-expert masks — equal to vmapping ``nm_mask`` over the stack —
+    while still lowering to ONE selection for the whole parameter
+    (tests/test_sparsity.py pins both properties).
     """
     if n == m:
         ones = jnp.ones_like(x, dtype=bool)
@@ -260,6 +264,9 @@ def nm_pack_from_mask(x: jax.Array, mask: jax.Array, n: int, m: int,
     group offset by a cumsum rank + scatter, so packing adds zero
     top_k/sort ops to the lowered step.  Bitwise-identical output to
     ``nm_pack(x, n, m, axis)`` whenever ``mask == nm_mask(x, n, m, axis)``.
+    Leading axes (layer stacks, MoE expert stacks) batch through: only
+    the packed ``axis`` shrinks to k*n/m, and ``nm_unpack_n`` inverts it
+    exactly (pack keeps values verbatim).
     """
     xt, inv = _move_axis_last(x, axis)
     mt, _ = _move_axis_last(mask, axis)

@@ -471,17 +471,18 @@ def analyze(hlo_text: str) -> dict:
 MASK_PRIMS = ("top_k", "sort", "approx_top_k")
 
 
-def count_jaxpr_prims(jaxpr, names=MASK_PRIMS) -> int:
+def count_jaxpr_prims(jaxpr, names=MASK_PRIMS, pred=None) -> int:
     """Recursively count primitive occurrences in a (Closed)Jaxpr,
-    descending through scan/while/cond/pjit/remat/custom-vjp sub-jaxprs."""
+    descending through scan/while/cond/pjit/remat/custom-vjp sub-jaxprs.
+    ``pred(eqn)`` optionally filters the name-matched equations."""
     inner = getattr(jaxpr, "jaxpr", jaxpr)  # ClosedJaxpr -> Jaxpr
     total = 0
     for eqn in inner.eqns:
-        if eqn.primitive.name in names:
+        if eqn.primitive.name in names and (pred is None or pred(eqn)):
             total += 1
         for val in eqn.params.values():
             for sub in _subjaxprs(val):
-                total += count_jaxpr_prims(sub, names)
+                total += count_jaxpr_prims(sub, names, pred)
     return total
 
 
@@ -493,12 +494,42 @@ def _subjaxprs(val):
             yield from _subjaxprs(v)
 
 
-def count_mask_ops(fn, *args) -> int:
+def nm_selection_pred(n: int, m: int):
+    """Equation predicate matching only *N:M mask* selections.
+
+    Every mask derivation in the system scores ``(..., M)`` groups with
+    a ``top_k`` of k=N (sparsity._topn_group_mask; legacy packing also
+    sorts M-wide groups), so a selection whose trailing operand dim is
+    not M — e.g. the MoE router's top_k over the expert dim — is routing
+    compute, not a mask derivation, and must not trip the mask-once
+    census.  A stacked (E, …, M) expert leaf batches all experts into
+    ONE such equation: the census counts stacked leaves as one
+    derivation per parameter.  Caveat: when a model's expert count
+    equals M and its routing top-k equals N the shapes are
+    indistinguishable — census tests/benches pick (n, m) apart from the
+    router dims.
+    """
+    def pred(eqn) -> bool:
+        if not eqn.invars or not getattr(eqn.invars[0], "aval", None):
+            return False
+        shape = eqn.invars[0].aval.shape
+        if not shape or shape[-1] != m:
+            return False
+        if eqn.primitive.name == "top_k":
+            return eqn.params.get("k") == n
+        return True
+    return pred
+
+
+def count_mask_ops(fn, *args, nm=None) -> int:
     """top_k/sort census of ``fn`` traced on ``args`` (arrays or
-    ShapeDtypeStructs)."""
+    ShapeDtypeStructs).  ``nm=(n, m)`` restricts the count to
+    N:M-mask-shaped selections (``nm_selection_pred``) — required for
+    MoE models, whose router top_k would otherwise be counted."""
     import jax
 
-    return count_jaxpr_prims(jax.make_jaxpr(fn)(*args))
+    pred = nm_selection_pred(*nm) if nm is not None else None
+    return count_jaxpr_prims(jax.make_jaxpr(fn)(*args), pred=pred)
 
 
 # ---------------------------------------------------------------------------

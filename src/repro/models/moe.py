@@ -79,16 +79,37 @@ def moe_init(key, d_model: int, cfg: MoEConfig):
     return p, s
 
 
+def _nm_mm(leaf, x, name: str, sp_cfg: SparsityConfig, *,
+           stacked: bool = False):
+    """One bare-leaf matmul through the right consumption mode.
+
+    Pre-generated operand dicts (the training dataflow — optim/sgd
+    wrote the bf16 FF/BP copies at WU time, masks scored once on fp32
+    master) route through ``nm_linear_pregen``: the MoE forward/backward
+    derive zero masks and the dense straight-through WU gradient rides
+    the BP operand's cotangent, exactly like layers.dense_apply.  Bare
+    arrays keep the legacy self-masking ``nm_linear`` (serving from raw
+    bf16 weights, dense methods, the pregen=False A/B path).  With
+    ``stacked=True`` the leaf carries a leading expert axis and the
+    matmul is vmapped per expert — N:M groups stay within one expert.
+    """
+    if bdwp.is_pregen(leaf):
+        ff = bdwp.pregen_ff_operand(leaf, sp_cfg)
+        if stacked:
+            return jax.vmap(bdwp.nm_linear_pregen)(x, ff, leaf["bp"])
+        return bdwp.nm_linear_pregen(x, ff, leaf["bp"])
+    if stacked:
+        cfg = bdwp.pick_cfg(name, leaf.shape[1:], sp_cfg)
+        return jax.vmap(lambda xe, w: bdwp.nm_linear(xe, w, cfg))(x, leaf)
+    return bdwp.nm_linear(x, leaf, bdwp.pick_cfg(name, leaf.shape, sp_cfg))
+
+
 def _expert_ffn(w_gate, w_up, w_down, x, sp_cfg: SparsityConfig):
     """x: (E, C, d) -> (E, C, d); vmapped BDWP matmuls per expert."""
-    def one(wg, wu, wd, xe):
-        cfg_g = bdwp.pick_cfg("moe/expert/w_gate", wg.shape, sp_cfg)
-        cfg_u = bdwp.pick_cfg("moe/expert/w_up", wu.shape, sp_cfg)
-        cfg_d = bdwp.pick_cfg("moe/expert/w_down", wd.shape, sp_cfg)
-        h = L.swiglu(bdwp.nm_linear(xe, wg, cfg_g), bdwp.nm_linear(xe, wu, cfg_u))
-        return bdwp.nm_linear(h.astype(xe.dtype), wd, cfg_d)
-
-    return jax.vmap(one)(w_gate, w_up, w_down, x)
+    h = L.swiglu(_nm_mm(w_gate, x, "moe/expert/w_gate", sp_cfg, stacked=True),
+                 _nm_mm(w_up, x, "moe/expert/w_up", sp_cfg, stacked=True))
+    return _nm_mm(w_down, h.astype(x.dtype), "moe/expert/w_down", sp_cfg,
+                  stacked=True)
 
 
 def moe_apply(p, x, cfg: MoEConfig, sp_cfg: SparsityConfig):
@@ -161,12 +182,10 @@ def moe_apply(p, x, cfg: MoEConfig, sp_cfg: SparsityConfig):
     if "shared" in p:
         sh = p["shared"]
         xt2 = xt.reshape(t, d)
-        cfg_g = bdwp.pick_cfg("moe/shared/w_gate", sh["w_gate"].shape, sp_cfg)
-        cfg_u = bdwp.pick_cfg("moe/shared/w_up", sh["w_up"].shape, sp_cfg)
-        cfg_d = bdwp.pick_cfg("moe/shared/w_down", sh["w_down"].shape, sp_cfg)
-        h = L.swiglu(bdwp.nm_linear(xt2, sh["w_gate"], cfg_g),
-                     bdwp.nm_linear(xt2, sh["w_up"], cfg_u))
-        yt = yt + bdwp.nm_linear(h.astype(xt2.dtype), sh["w_down"], cfg_d)
+        h = L.swiglu(_nm_mm(sh["w_gate"], xt2, "moe/shared/w_gate", sp_cfg),
+                     _nm_mm(sh["w_up"], xt2, "moe/shared/w_up", sp_cfg))
+        yt = yt + _nm_mm(sh["w_down"], h.astype(xt2.dtype),
+                         "moe/shared/w_down", sp_cfg)
 
     # Switch-style load-balance aux loss (counts from kept assignments)
     me = probs.mean((0, 1))                                 # (E,)

@@ -121,13 +121,19 @@ def _pregen_leaf(w, sp_cfg: SparsityConfig, pack: bool) -> dict:
     return leaf
 
 
-def pregen_tree(master, sp_cfg: Optional[SparsityConfig], *, pack: bool = False):
+def pregen_tree(master, sp_cfg: Optional[SparsityConfig], *,
+                pack: bool = False, bare_sites: bool = True):
     """Build the full pre-generated compute tree from fp32 master.
 
-    Prunable ``{"w": ...}`` weights (bdwp.pregen_site) become operand
-    dicts; every other leaf becomes its plain bf16 compute copy.  Used to
-    bootstrap ``init_train_state``, to upgrade pre-pregen checkpoints,
-    and abstractly (under eval_shape) by the step builders and dry-run.
+    Prunable weights (bdwp.pregen_site) become operand dicts — both the
+    ``{"w": ...}`` leaf-dict sites and the bare-array MoE expert stacks
+    (masks per expert along the last-two contraction/output axes, one
+    fused ``nm_mask_pair`` over the whole stacked leaf); every other
+    leaf becomes its plain bf16 compute copy.  Used to bootstrap
+    ``init_train_state``, to upgrade pre-pregen checkpoints, and
+    abstractly (under eval_shape) by the step builders and dry-run.
+    ``bare_sites=False`` reproduces the pre-MoE structure (dict sites
+    only) so restore_with_pregen can recognize older checkpoints.
     """
     from repro.core.sparsity import DENSE
 
@@ -138,7 +144,7 @@ def pregen_tree(master, sp_cfg: Optional[SparsityConfig], *, pack: bool = False)
             return {k: walk(v, path + (k,)) for k, v in node.items()}
         name = "/".join(path)
         lshape, _ = _logical_shape(name, node.shape)
-        if bdwp.pregen_site(name, lshape, sp):
+        if bdwp.pregen_site(name, lshape, sp, bare=bare_sites):
             return _pregen_leaf(node.astype(jnp.float32), sp, pack)
         if jnp.issubdtype(node.dtype, jnp.floating):
             return node.astype(jnp.bfloat16)

@@ -166,13 +166,19 @@ def nm_params_pspecs(specs_tree, rules: dict, params, mesh: Mesh,
                      sp_cfg=None):
     """``params_pspecs`` plus the N:M group guard.
 
-    Every prunable ``{"w": ...}`` leaf-dict (``bdwp.should_prune`` on
-    its tree path) carries ``nm_group_multiples`` into ``spec_to_pspec``
-    so a mesh axis that would split an M-group falls back to replicated.
-    With ``sp_cfg`` None or dense this degenerates to ``params_pspecs``.
+    Every prunable leaf — a ``{"w": ...}`` leaf-dict (``bdwp.
+    should_prune`` on its tree path) or a bare-array expert stack
+    (``bdwp.bare_nm_leaf``: MoE w_gate/w_up/w_down, groups along the
+    last two axes *within* each expert) — carries ``nm_group_multiples``
+    into ``spec_to_pspec`` so a mesh axis that would split an M-group
+    falls back to replicated; expert-parallel sharding of the leading
+    expert axis is untouched (a whole expert per shard never cuts a
+    group).  With ``sp_cfg`` None or dense this degenerates to
+    ``params_pspecs``.
     """
     if sp_cfg is None or getattr(sp_cfg, "is_dense", True):
         return params_pspecs(specs_tree, rules, params, mesh)
+    from repro.core import bdwp
 
     def walk(spec_node, p_node, path):
         if isinstance(spec_node, dict):
@@ -188,8 +194,12 @@ def nm_params_pspecs(specs_tree, rules: dict, params, mesh: Mesh,
                 return out
             return {k: walk(v, p_node[k], path + (k,))
                     for k, v in spec_node.items()}
-        return spec_to_pspec(spec_node, rules,
-                             shape=tuple(p_node.shape), mesh=mesh)
+        name = "/".join(str(k) for k in path)
+        shape = tuple(p_node.shape)
+        gm = nm_group_multiples(name, shape, sp_cfg) \
+            if bdwp.bare_nm_leaf(name) else None
+        return spec_to_pspec(spec_node, rules, shape=shape, mesh=mesh,
+                             group_multiples=gm)
 
     return walk(specs_tree, params, ())
 
@@ -197,14 +207,16 @@ def nm_params_pspecs(specs_tree, rules: dict, params, mesh: Mesh,
 def pregen_pspecs(compute_tree, master_pspecs):
     """PartitionSpecs for a pre-generated compute tree (optim/sgd).
 
-    The compute tree mirrors master except that prunable weights became
-    operand dicts ({"ff"|("vals","idx"), "bp", "mask"}).  Every operand
-    inherits the master weight's spec: ff/bp/mask are dense-shaped, and
-    the packed vals/idx only shrink the contraction dim (ndim-2) by n/m —
-    a mesh axis the group guard admitted for w (per-shard multiple of M
-    along K) divides Kc with per-shard runs whole multiples of N, so the
-    same spec keeps packed runs group-whole under SPMD
-    (``assert_nm_unsplit`` re-checks).
+    The compute tree mirrors master except that prunable weights —
+    ``{"w": ...}`` dict sites and bare-array MoE expert stacks alike —
+    became operand dicts ({"ff"|("vals","idx"), "bp", "mask"}).  Every
+    operand inherits the master weight's spec: ff/bp/mask are
+    dense-shaped (expert-parallel sharding of a stacked leaf carries
+    straight over), and the packed vals/idx only shrink the contraction
+    dim (ndim-2) by n/m — a mesh axis the group guard admitted for w
+    (per-shard multiple of M along K) divides Kc with per-shard runs
+    whole multiples of N, so the same spec keeps packed runs group-whole
+    under SPMD (``assert_nm_unsplit`` re-checks).
     """
     from repro.core import bdwp
 
@@ -247,6 +259,21 @@ def assert_nm_unsplit(pspecs_tree, params_tree, mesh: Mesh, sp_cfg) -> None:
         return isinstance(x, (P, NamedSharding))
 
     def walk(spec_node, p_node, path):
+        if is_spec(spec_node):
+            # bare-array leaf (MoE expert stack / shared-expert mat):
+            # M-groups on the last two axes within each expert, and the
+            # leading expert/layer axes must shard evenly — an expert's
+            # matrix never straddles devices
+            from repro.core import bdwp
+            name = "/".join(str(k) for k in path)
+            gm = nm_group_multiples(name, tuple(p_node.shape), sp_cfg) \
+                if bdwp.bare_nm_leaf(name) else None
+            if gm:
+                shape = tuple(p_node.shape)
+                for i in range(len(shape) - 2):
+                    gm.setdefault(i, 1)
+                check(name, "leaf", as_spec(spec_node), shape, gm)
+            return
         if isinstance(spec_node, dict):
             name = "/".join(str(k) for k in path)
             if "bp" in spec_node and ("ff" in spec_node

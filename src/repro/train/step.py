@@ -350,14 +350,18 @@ def build_encdec_train(cfg, mesh: Mesh, sp_cfg, opt_cfg,
 
 def restore_with_pregen(mgr, like_state, step=None, shardings=None, *,
                         sp_cfg=None, pregen_pack=False):
-    """Checkpoint restore that upgrades pre-pregen checkpoints.
+    """Checkpoint restore that upgrades older-dataflow checkpoints.
 
-    A checkpoint written before the pre-generation dataflow carries no
-    ``compute`` leaf — its leaf count mismatches the current state tree.
-    On that mismatch, restore the legacy subtree (master/momentum/step
-    [/err]) and regenerate the compute tree from the restored master —
-    the pre-generated operands are a pure function of master, so the
-    upgrade is exact.
+    Two generations of checkpoint mismatch the current state tree:
+      * pre-pregen — no ``compute`` leaf at all;
+      * dict-sites-only pregen — a ``compute`` tree whose ``{"w": ...}``
+        sites are operand dicts but whose bare-array MoE expert leaves
+        are still plain bf16 copies (``pregen_tree(bare_sites=False)``
+        reproduces that structure).
+    Either way the legacy subtree (master/momentum/step[/err]) restores
+    and the compute tree regenerates from the restored master — the
+    pre-generated operands are a pure function of master, so both
+    upgrades are exact.
     """
     try:
         return mgr.restore(like_state, step=step, shardings=shardings)
@@ -365,19 +369,55 @@ def restore_with_pregen(mgr, like_state, step=None, shardings=None, *,
         legacy_like = {k: v for k, v in like_state.items() if k != "compute"}
         legacy_sh = None if shardings is None else \
             {k: v for k, v in shardings.items() if k != "compute"}
-        try:
-            restored = mgr.restore(legacy_like, step=step,
-                                   shardings=legacy_sh)
-        except ValueError:
-            # not a pre-pregen checkpoint either (arch / compress /
+        attempts = [(legacy_like, legacy_sh)]
+        if "compute" in like_state:
+            old_compute = jax.eval_shape(
+                partial(sgd.pregen_tree, sp_cfg=sp_cfg, pack=pregen_pack,
+                        bare_sites=False), legacy_like["master"])
+            if (jax.tree_util.tree_structure(old_compute)
+                    != jax.tree_util.tree_structure(like_state["compute"])):
+                old_sh = None if shardings is None else dict(
+                    legacy_sh, compute=_old_compute_shardings(
+                        old_compute, shardings["compute"],
+                        shardings["master"]))
+                attempts.append((dict(legacy_like, compute=old_compute),
+                                 old_sh))
+        restored = None
+        for like, sh in attempts:
+            try:
+                restored = mgr.restore(like, step=step, shardings=sh)
+                break
+            except ValueError:
+                continue
+        if restored is None:
+            # no upgrade structure matches either (arch / compress /
             # pack-mode mismatch): surface the original full-structure
-            # error, not the misleading legacy-subtree one
+            # error, not a misleading legacy-subtree one
             raise full_err
-        compute = sgd.pregen_tree(restored["master"], sp_cfg,
-                                  pack=pregen_pack)
-        if shardings is not None and "compute" in shardings:
-            compute = jax.device_put(compute, shardings["compute"])
-        return dict(restored, compute=compute)
+        out = {k: v for k, v in restored.items() if k != "compute"}
+        out["compute"] = sgd.pregen_tree(out["master"], sp_cfg,
+                                         pack=pregen_pack)
+        if shardings is not None:
+            out = {k: jax.device_put(out[k], shardings[k]) for k in out}
+        return out
+
+
+def _old_compute_shardings(old_compute, new_compute_sh, master_sh):
+    """Shardings for a dict-sites-only (pre-MoE) compute structure, so
+    the upgrade restore never stages leaves on one device: dict sites
+    match the current compute shardings leaf-for-leaf; bare expert
+    leaves (plain bf16 copies there, operand dicts now) shard like
+    their master weight (same shape)."""
+    def walk(old_node, new_sh, m_sh):
+        if isinstance(old_node, dict):
+            return {k: walk(old_node[k],
+                            new_sh[k] if isinstance(new_sh, dict) else new_sh,
+                            m_sh[k] if isinstance(m_sh, dict) else m_sh)
+                    for k in old_node}
+        # array leaf: a matching leaf sharding, else the master weight's
+        return new_sh if not isinstance(new_sh, dict) else m_sh
+
+    return walk(old_compute, new_compute_sh, master_sh)
 
 
 def build_lm_serve(cfg, mesh: Mesh, sp_cfg: SparsityConfig, input_specs,

@@ -1,0 +1,21 @@
+"""Shared test plumbing.
+
+``require_or_skip`` replaces the bare ``pytest.importorskip`` for
+optional dev deps (hypothesis): locally a missing dep still skips the
+module so bare envs stay usable, but with ``REQUIRE_HYPOTHESIS=1`` —
+exported by the pinned-deps CI jobs, whose requirements-dev.txt installs
+hypothesis — the same absence FAILS collection instead of silently
+skipping.  A dropped dev pin can no longer turn the property suites
+into a green no-op.
+"""
+
+import importlib
+import os
+
+import pytest
+
+
+def require_or_skip(module: str):
+    if os.environ.get("REQUIRE_HYPOTHESIS"):
+        return importlib.import_module(module)  # ImportError -> loud fail
+    return pytest.importorskip(module)

@@ -10,7 +10,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")  # bare env: skip, don't fail collection
+from conftest import require_or_skip
+
+require_or_skip("hypothesis")  # bare env: skip; CI (REQUIRE_HYPOTHESIS): fail
 from hypothesis import given, settings, strategies as st
 
 from repro.core import sparsity as S

@@ -40,20 +40,81 @@ CFG = ARCH.smoke
 OPT = sgd.SGDConfig(lr=0.05, total_steps=16)
 BDWP = SparsityConfig(n=2, m=8, method="bdwp")
 
+# MoE A/B rig: shared experts, a capacity tight enough to really drop
+# tokens, and n_experts != m so the router's top_k over the expert dim
+# stays shape-distinguishable from N:M mask selections in the census.
+from repro.models import moe as M  # noqa: E402
+from repro.models.transformer_lm import LMConfig  # noqa: E402
+
+SP4 = SparsityConfig(n=2, m=4, method="bdwp")
+MOE_CFG = LMConfig(
+    name="moe-pregen-smoke", vocab=256, d_model=32, n_layers=2,
+    n_heads=2, n_kv=1, head_dim=16, d_ff=0,
+    moe=M.MoEConfig(n_experts=8, top_k=2, d_expert=16, n_shared=1,
+                    capacity_factor=0.6, group_size=16),
+    tie_embed=True)
+MOE_OPT = sgd.SGDConfig(lr=5e-4, warmup_steps=0, total_steps=100,
+                        min_lr_frac=1.0)
+
+
+def _mask_stable_like(w, key, m):
+    """Weights whose N:M masks agree between fp32 and bf16 scoring and
+    survive small updates: |values| spaced >=5% apart within every
+    M-group along BOTH of the last two axes (group offsets (i%m, j%m)
+    map to distinct exponents), bounded magnitude, random signs, and a
+    +-0.4% jitter to decorrelate experts/layers."""
+    shape = w.shape
+    i = jax.lax.broadcasted_iota(jnp.int32, shape, w.ndim - 2)
+    j = jax.lax.broadcasted_iota(jnp.int32, shape, w.ndim - 1)
+    k = (i % m) + m * (j % m)
+    k1, k2 = jax.random.split(key)
+    sign = jnp.where(jax.random.bernoulli(k1, shape=shape), 1.0, -1.0)
+    jit = 1.0 + 0.004 * jax.random.uniform(k2, shape, minval=-1.0, maxval=1.0)
+    return (1.06 ** k.astype(jnp.float32)) * sign * jit * shape[-2] ** -0.5
+
+
+def _stabilize_masks(master, sp):
+    """Replace every pregen-site master leaf with mask-stable values."""
+    names = sgd._names_of(master)
+    flat, tdef = jax.tree_util.tree_flatten(master)
+    out = [
+        _mask_stable_like(w, jax.random.PRNGKey(1000 + i), sp.m)
+        if bdwp.pregen_site(n, sgd._logical_shape(n, w.shape)[0], sp) else w
+        for i, (n, w) in enumerate(zip(names, flat))]
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def _assert_masks_still_stable(master, sp):
+    for n, w in zip(sgd._names_of(master), jax.tree.leaves(master)):
+        if not bdwp.pregen_site(n, sgd._logical_shape(n, w.shape)[0], sp):
+            continue
+        for ax in (w.ndim - 2, w.ndim - 1):
+            np.testing.assert_array_equal(
+                np.asarray(nm_mask(w, sp.n, sp.m, axis=ax)),
+                np.asarray(nm_mask(w.astype(jnp.bfloat16), sp.n, sp.m,
+                                   axis=ax)),
+                err_msg=f"bf16/fp32 masks drifted apart on {n} axis {ax}")
+
 
 def _structs(tree):
     return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
 
 
-def _run(sp_cfg, *, pregen, steps=3, pack=False, use_pallas=False, seed=0):
+def _run(sp_cfg, *, pregen, steps=3, pack=False, use_pallas=False, seed=0,
+         cfg=CFG, opt=OPT, stabilize=False):
     mesh = make_host_mesh()
-    bundle = ST.build_lm_train(CFG, mesh, sp_cfg, OPT, donate=False,
+    bundle = ST.build_lm_train(cfg, mesh, sp_cfg, opt, donate=False,
                                pregen=pregen, pregen_pack=pack,
                                use_pallas=use_pallas)
-    state = ST.init_train_state(jax.random.PRNGKey(seed), CFG, sp_cfg=sp_cfg,
+    state = ST.init_train_state(jax.random.PRNGKey(seed), cfg, sp_cfg=sp_cfg,
                                 pregen=pregen, pregen_pack=pack)
+    if stabilize:
+        state["master"] = _stabilize_masks(state["master"], sp_cfg)
+        if pregen:
+            state["compute"] = sgd.pregen_tree(state["master"], sp_cfg,
+                                               pack=pack)
     state = jax.device_put(state, bundle.state_shardings)
-    stream = D.lm_stream(CFG.vocab, 2, 32, seed=seed)
+    stream = D.lm_stream(cfg.vocab, 2, 32, seed=seed)
     losses = []
     for i, (_, batch) in enumerate(stream):
         if i >= steps:
@@ -359,6 +420,280 @@ class TestMaskSourceConsistency:
         assert not bdwp.decays("lm_head/w", (64, 512), BDWP)
         assert bdwp.decays("blocks/attn/q_proj/w", (64, 64), BDWP)
         assert not bdwp.pregen_site("lm_head/w", (64, 512), BDWP)
+
+
+class TestMoEPregen:
+    """Pre-generation for bare-array MoE expert stacks (ISSUE 4): the
+    one-top_k-per-param invariant now holds for every architecture —
+    expert stacks (E, K, F) get per-expert masks from one fused
+    selection at WU time, the shared-expert path rides the same
+    dispatch, and the router (excluded) never becomes a site."""
+
+    def test_bare_leaf_protocol(self):
+        # expert stacks and shared-expert mats are sites...
+        assert bdwp.pregen_site("blocks/moe/w_gate", (8, 32, 16), SP4)
+        assert bdwp.pregen_site("blocks/moe/w_down", (8, 16, 32), SP4)
+        assert bdwp.pregen_site("blocks/moe/shared/w_up", (32, 16), SP4)
+        # ...the router and other bare arrays are not
+        assert not bdwp.pregen_site("blocks/moe/router/w", (32, 8), SP4)
+        assert not bdwp.pregen_site("blocks/ssm/conv_w", (4, 64), SP4)
+        assert not bdwp.pregen_site("lm_head/w", (64, 512), SP4)
+        # SR-STE never decays the router either (it is never pruned)
+        assert not bdwp.decays("blocks/moe/router/w", (32, 8), SP4)
+        assert bdwp.decays("blocks/moe/w_gate", (8, 32, 16), SP4)
+        # dict-site FFN leaves of the same basenames still take "/w"
+        assert bdwp.pregen_site("blocks/ffn/w_gate/w", (32, 64), SP4)
+
+    def test_moe_one_topk_per_prunable_param(self):
+        """THE invariant, MoE edition: the lowered train step derives
+        each prunable param's masks exactly once — stacked expert leaves
+        count as ONE derivation for the whole (E, K, F) stack.  The
+        census is N:M-shape-filtered so the router's top_k over the
+        expert dim (E=8 != m=4 here) is not miscounted as a mask op."""
+        mesh = make_host_mesh()
+        bundle = ST.build_lm_train(MOE_CFG, mesh, SP4, OPT, donate=False)
+        state = ST.init_train_state(jax.random.PRNGKey(0), MOE_CFG,
+                                    sp_cfg=SP4)
+        batch = {"tokens": jnp.zeros((2, 32), jnp.int32),
+                 "labels": jnp.zeros((2, 32), jnp.int32)}
+        names = sgd._names_of(state["master"])
+        sites = [n for n, w in zip(names, jax.tree.leaves(state["master"]))
+                 if bdwp.pregen_site(n, sgd._logical_shape(n, w.shape)[0],
+                                     SP4)]
+        assert any("moe/w_" in n for n in sites)
+        assert any("moe/shared/" in n for n in sites)
+        count = count_mask_ops(bundle.step_fn, _structs(state),
+                               _structs(batch), nm=(SP4.n, SP4.m))
+        assert count == len(sites), \
+            f"{count} N:M selections for {len(sites)} prunable params"
+
+    def test_moe_legacy_step_rederives(self):
+        """Census sanity: the legacy MoE dataflow pays one selection per
+        consumer (FF + remat recompute + BP + decay) per param."""
+        mesh = make_host_mesh()
+        bundle = ST.build_lm_train(MOE_CFG, mesh, SP4, OPT, donate=False,
+                                   pregen=False)
+        state = ST.init_train_state(jax.random.PRNGKey(0), MOE_CFG,
+                                    sp_cfg=SP4, pregen=False)
+        batch = {"tokens": jnp.zeros((2, 32), jnp.int32),
+                 "labels": jnp.zeros((2, 32), jnp.int32)}
+        count = count_mask_ops(bundle.step_fn, _structs(state),
+                               _structs(batch), nm=(SP4.n, SP4.m))
+        assert count >= 3 * 10  # 10 prunable leaves in MOE_CFG
+
+    def test_moe_train_bitwise_legacy_vs_pregen(self):
+        """Satellite A/B parity: with mask-stable weights (fp32 and bf16
+        scoring select the same survivors) the pregen MoE trajectory —
+        routing, capacity drops, shared experts, aux loss and all — must
+        reproduce the legacy one BITWISE: losses and every master leaf."""
+        s_pre, l_pre = _run(SP4, pregen=True, cfg=MOE_CFG, opt=MOE_OPT,
+                            stabilize=True)
+        s_leg, l_leg = _run(SP4, pregen=False, cfg=MOE_CFG, opt=MOE_OPT,
+                            stabilize=True)
+        assert l_pre == l_leg
+        for (path, a), b in zip(
+                jax.tree_util.tree_flatten_with_path(s_pre["master"])[0],
+                jax.tree.leaves(s_leg["master"])):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg="/".join(str(getattr(k, "key", k)) for k in path))
+        # the precondition held to the end (else the test proves nothing)
+        _assert_masks_still_stable(s_pre["master"], SP4)
+
+    def test_moe_train_bitwise_packed_vs_unpacked(self):
+        """Packed (vals, idx) MoE pregen state is bitwise-equal to the
+        unpacked form: pack->unpack is exact, so the whole trajectory
+        matches with no mask-stability precondition needed."""
+        s_a, l_a = _run(SP4, pregen=True, pack=False, cfg=MOE_CFG)
+        s_b, l_b = _run(SP4, pregen=True, pack=True, cfg=MOE_CFG)
+        assert l_a == l_b
+        for a, b in zip(jax.tree.leaves(s_a["master"]),
+                        jax.tree.leaves(s_b["master"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # the stacked expert FF operand really is stored packed
+        pg = s_b["compute"]["blocks"]["moe"]["w_gate"]
+        assert "vals" in pg and pg["idx"].dtype == jnp.uint8
+        assert pg["vals"].shape[-2] == \
+            s_b["master"]["blocks"]["moe"]["w_gate"].shape[-2] * SP4.n // SP4.m
+
+    def test_moe_grads_bitwise_with_shared_experts_and_drops(self):
+        """Per-leaf gradient parity through moe_apply itself, with the
+        router biased so one expert overflows its capacity (real token
+        drops) and a shared expert in the mix: legacy and pregen grads
+        must agree bitwise on every leaf (dense straight-through WU
+        gradient riding the BP operand's cotangent)."""
+        cfg = M.MoEConfig(n_experts=4, top_k=2, d_expert=16, n_shared=1,
+                          capacity_factor=0.6, group_size=8)
+        d = 32
+        params, _ = M.moe_init(jax.random.PRNGKey(0), d, cfg)
+        master = _stabilize_masks(params, SP4)
+        # bias the router: expert 0 demands far more than its capacity
+        master["router"]["w"] = master["router"]["w"].at[:, 0].set(3.0)
+        x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, d),
+                              jnp.bfloat16)
+        # drops really happen: per-group demand for expert 0 exceeds cap
+        xt = x.reshape(4, 8, d)
+        logits = jnp.matmul(xt, master["router"]["w"].astype(xt.dtype),
+                            preferred_element_type=jnp.float32)
+        gi = jax.lax.top_k(jax.nn.softmax(logits, -1), cfg.top_k)[1]
+        cap = int(max(cfg.top_k, round(8 * cfg.capacity_factor * cfg.top_k
+                                       / cfg.n_experts)))
+        demand = (gi[..., None] == jnp.arange(cfg.n_experts)).sum((1, 2))
+        assert bool((demand > cap).any())
+
+        def legacy_loss(mtree):
+            c = jax.tree.map(lambda v: v.astype(jnp.bfloat16), mtree)
+            y, aux = M.moe_apply(c, x, cfg, SP4)
+            return jnp.mean(y.astype(jnp.float32) ** 2) + 0.01 * aux
+
+        l_leg, g_leg = jax.value_and_grad(legacy_loss)(master)
+
+        compute = sgd.pregen_tree(master, SP4)
+        diff, meta = ST.split_compute(compute)
+
+        def pregen_loss(dv):
+            c = ST.merge_compute(dv, meta)
+            y, aux = M.moe_apply(c, x, cfg, SP4)
+            return jnp.mean(y.astype(jnp.float32) ** 2) + 0.01 * aux
+
+        l_pre, gdiff = jax.value_and_grad(pregen_loss)(diff)
+        g_pre = sgd.pregen_grads(ST.merge_compute(gdiff, meta))
+        np.testing.assert_array_equal(np.asarray(l_leg), np.asarray(l_pre))
+        for (path, a), b in zip(
+                jax.tree_util.tree_flatten_with_path(g_leg)[0],
+                jax.tree.leaves(g_pre)):
+            np.testing.assert_array_equal(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                err_msg="/".join(str(getattr(k, "key", k)) for k in path))
+
+    def test_moe_update_decay_uses_stored_mask(self):
+        """Satellite bugfix pin: SR-STE decay for an expert-stack leaf
+        moves exactly the weights the stored fp32-scored mask pruned."""
+        sp = SparsityConfig(n=1, m=4, method="srste", lam=0.1)
+        w = jax.random.normal(jax.random.PRNGKey(0), (3, 8, 8))
+        master = {"moe": {"w_gate": w}}
+        state = sgd.init_state(master)
+        compute = sgd.pregen_tree(master, sp)
+        assert bdwp.is_pregen(compute["moe"]["w_gate"])
+        zero_g = jax.tree.map(jnp.zeros_like, master)
+        opt = sgd.SGDConfig(lr=0.1, momentum=0.9, weight_decay=0.0,
+                            warmup_steps=0, total_steps=10 ** 9,
+                            min_lr_frac=1.0)
+        new_state, _ = sgd.update(state, zero_g, opt, sp,
+                                  param_names=["moe/w_gate"],
+                                  prev_compute=compute, pregen=True)
+        moved = np.asarray(new_state["master"]["moe"]["w_gate"] != w)
+        stored = np.asarray(compute["moe"]["w_gate"]["mask"])
+        np.testing.assert_array_equal(moved, ~stored)
+
+    def test_moe_decay_scores_fp32_master_not_bf16(self):
+        """Near-tie regression for expert stacks: the stored decay mask
+        and the FF operand's survivor set are the SAME fp32-master
+        selection — a sub-bf16-resolution tie can't split them, and the
+        selection is the fp32 one (truly-larger weight wins), not the
+        bf16 tie-break."""
+        sp = SparsityConfig(n=1, m=8, method="srste", lam=0.1)
+        eps = 2e-4  # far below bf16's ~0.4% relative resolution at 1.0
+        w = jnp.full((2, 16, 8), 1e-4, jnp.float32)
+        w = w.at[:, 0, :].set(1.0).at[:, 1, :].set(1.0 + eps)
+        master = {"moe": {"w_gate": w}}
+        pg = sgd.pregen_tree(master, sp)["moe"]["w_gate"]
+        assert bdwp.is_pregen(pg)
+        ff_alive = np.asarray(pg["ff"] != 0)
+        np.testing.assert_array_equal(ff_alive, np.asarray(pg["mask"]))
+        np.testing.assert_array_equal(
+            np.asarray(pg["mask"]), np.asarray(nm_mask(w, 1, 8, axis=1)))
+        assert bool(np.asarray(pg["mask"])[:, 1, :].all())  # fp32 keeps 1+eps
+        m16 = nm_mask(w.astype(jnp.bfloat16), 1, 8, axis=1)
+        assert not bool(np.asarray(m16)[:, 1, :].any())  # bf16 would not
+        assert bool(np.asarray(m16)[:, 0, :].all())  # bf16 ties to idx 0
+
+    def test_pallas_fused_update_on_expert_stack_bitwise(self):
+        """use_pallas=True routes stacked (E, K, F) leaves through the
+        fused WUVE+SORE kernel too; jitted, it matches the jnp update
+        bitwise — master, momentum and the packed compute leaf."""
+        from functools import partial
+
+        sp = SparsityConfig(n=2, m=8, method="bdwp")
+        w = jax.random.normal(jax.random.PRNGKey(0), (3, 16, 16))
+        master = {"moe": {"w_gate": w}}
+        grads = {"moe": {"w_gate": 0.1 * jax.random.normal(
+            jax.random.PRNGKey(1), w.shape)}}
+        prev = sgd.pregen_tree(master, sp, pack=True)
+        opt = sgd.SGDConfig(lr=0.1, total_steps=10)
+
+        def upd(state, g, use_pallas):
+            return sgd.update(state, g, opt, sp,
+                              param_names=["moe/w_gate"], prev_compute=prev,
+                              pregen=True, pack=True, use_pallas=use_pallas)
+
+        out_j = jax.jit(partial(upd, use_pallas=False))(
+            sgd.init_state(master), grads)
+        out_p = jax.jit(partial(upd, use_pallas=True))(
+            sgd.init_state(master), grads)
+        flat_j = jax.tree_util.tree_flatten_with_path(out_j)[0]
+        flat_p = jax.tree.leaves(out_p)
+        assert len(flat_j) == len(flat_p)
+        for (path, a), b in zip(flat_j, flat_p):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg="/".join(str(getattr(k, "key", k)) for k in path))
+
+
+class TestMoECheckpointUpgrade:
+    def test_dict_sites_only_checkpoint_upgrades(self, tmp_path):
+        """A checkpoint from the dict-sites-only pregen era (MoE expert
+        leaves still plain bf16 in its compute tree) restores via
+        restore_with_pregen: the legacy subtree loads and the full
+        compute tree — expert operand dicts included — regenerates from
+        the restored master, exactly."""
+        mesh = make_host_mesh()
+        bundle = ST.build_lm_train(MOE_CFG, mesh, SP4, OPT, donate=False)
+        st0 = ST.init_train_state(jax.random.PRNGKey(5), MOE_CFG,
+                                  sp_cfg=SP4)
+        old = dict({k: st0[k] for k in ("master", "momentum", "step")},
+                   compute=sgd.pregen_tree(st0["master"], SP4,
+                                           bare_sites=False))
+        # the old structure really is different (else this tests nothing)
+        assert (jax.tree_util.tree_structure(old["compute"])
+                != jax.tree_util.tree_structure(st0["compute"]))
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(0, old, blocking=True)
+
+        like = ST.init_train_state(jax.random.PRNGKey(0), MOE_CFG,
+                                   sp_cfg=SP4)
+        restored = ST.restore_with_pregen(
+            mgr, like, shardings=bundle.state_shardings, sp_cfg=SP4)
+        for a, b in zip(jax.tree.leaves(restored["master"]),
+                        jax.tree.leaves(st0["master"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        expect = sgd.pregen_tree(st0["master"], SP4)
+        for a, b in zip(jax.tree.leaves(restored["compute"]),
+                        jax.tree.leaves(expect)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        batch = {"tokens": jnp.zeros((2, 32), jnp.int32),
+                 "labels": jnp.zeros((2, 32), jnp.int32)}
+        _, metrics = bundle.step_fn(restored, batch)
+        assert np.isfinite(float(metrics["loss"]))
+
+    def test_pre_pregen_moe_checkpoint_upgrades(self, tmp_path):
+        """The original upgrade path (no compute leaf at all) still
+        works for MoE models."""
+        mesh = make_host_mesh()
+        bundle = ST.build_lm_train(MOE_CFG, mesh, SP4, OPT, donate=False)
+        legacy = ST.init_train_state(jax.random.PRNGKey(3), MOE_CFG,
+                                     sp_cfg=SP4, pregen=False)
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(0, legacy, blocking=True)
+        like = ST.init_train_state(jax.random.PRNGKey(0), MOE_CFG,
+                                   sp_cfg=SP4)
+        restored = ST.restore_with_pregen(
+            mgr, like, shardings=bundle.state_shardings, sp_cfg=SP4)
+        assert "compute" in restored
+        expect = sgd.pregen_tree(legacy["master"], SP4)
+        for a, b in zip(jax.tree.leaves(restored["compute"]),
+                        jax.tree.leaves(expect)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 class TestConvPregen:

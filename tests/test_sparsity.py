@@ -5,7 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")  # bare env: skip, don't fail collection
+from conftest import require_or_skip
+
+require_or_skip("hypothesis")  # bare env: skip; CI (REQUIRE_HYPOTHESIS): fail
 from hypothesis import given, settings, strategies as st
 
 from repro.core import sparsity as S
@@ -150,6 +152,86 @@ class TestConfig:
     def test_flops_fraction(self):
         assert S.nm_flops_fraction(S.SparsityConfig(n=2, m=8)) == 0.25
         assert S.nm_flops_fraction(S.DENSE) == 1.0
+
+
+class TestStackedExpertLeaves:
+    """Properties of the N:M core on stacked (E, k, f) MoE expert
+    leaves — the bare-array pre-generation sites: per-expert masks from
+    one fused selection over the whole stack, exact packing round-trips,
+    and FF/decay mask agreement from a shared fp32 source."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(nm=NM, e=st.integers(1, 4), kg=st.integers(1, 3),
+           fg=st.integers(1, 3), seed=st.integers(0, 2**16))
+    def test_pair_equals_vmapped_single_matrix_masks(self, nm, e, kg, fg,
+                                                     seed):
+        """nm_mask_pair over a stacked leaf == vmapping nm_mask over the
+        expert axis, along both grouped axes, bitwise."""
+        n, m = nm
+        w = _rand((e, kg * m, fg * m), seed)
+        ff, bp = S.nm_mask_pair(w, n, m, 1, 2)
+        ff_ref = jax.vmap(lambda x: S.nm_mask(x, n, m, axis=0))(w)
+        bp_ref = jax.vmap(lambda x: S.nm_mask(x, n, m, axis=1))(w)
+        np.testing.assert_array_equal(np.asarray(ff), np.asarray(ff_ref))
+        np.testing.assert_array_equal(np.asarray(bp), np.asarray(bp_ref))
+
+    @settings(max_examples=25, deadline=None)
+    @given(nm=NM, e=st.integers(1, 4), kg=st.integers(1, 3),
+           fg=st.integers(1, 3), seed=st.integers(0, 2**16))
+    def test_exactly_n_nonzero_per_group_per_expert(self, nm, e, kg, fg,
+                                                    seed):
+        n, m = nm
+        w = _rand((e, kg * m, fg * m), seed)
+        ff, bp = S.nm_mask_pair(w, n, m, 1, 2)
+        for mask, axis in ((ff, 1), (bp, 2)):
+            nnz = np.asarray(S.group_nonzeros(
+                jnp.where(mask, 1.0, 0.0), m, axis))
+            assert (nnz == n).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(nm=NM, e=st.integers(1, 4), kg=st.integers(1, 3),
+           fg=st.integers(1, 2), seed=st.integers(0, 2**16),
+           dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+    def test_stacked_pack_roundtrip(self, nm, e, kg, fg, seed, dtype):
+        """nm_pack_from_mask on the stacked contraction axis: packed axis
+        shrinks k -> k*n/m, uint8 offsets, and unpacking reproduces the
+        masked leaf exactly (pack keeps values verbatim)."""
+        n, m = nm
+        w = _rand((e, kg * m, fg * m), seed, dtype)
+        mask = S.nm_mask(w, n, m, axis=1)
+        v, i = S.nm_pack_from_mask(w, mask, n, m, axis=1)
+        assert v.shape == (e, kg * n, fg * m) and i.dtype == jnp.uint8
+        dense = S.nm_unpack_n(v, i, n, m, axis=1)
+        np.testing.assert_array_equal(
+            np.asarray(dense), np.asarray(jnp.where(mask, w, 0)))
+
+    @settings(max_examples=25, deadline=None)
+    @given(e=st.integers(1, 3), groups=st.integers(1, 3),
+           seed=st.integers(0, 2**16),
+           eps=st.floats(1e-4, 1e-3), base=st.floats(0.5, 2.0))
+    def test_near_tie_ff_and_decay_agree_from_fp32_source(
+            self, e, groups, seed, eps, base):
+        """A near-tie (two weights closer than bf16 resolution) makes
+        bf16-scored and fp32-scored masks disagree — but every selection
+        derived from the SAME fp32 leaf (the pre-generation invariant:
+        FF operand and SR-STE decay mask) agrees bitwise regardless."""
+        m = 8
+        w = _rand((e, groups * m, m), seed) * 0.01
+        # plant a sub-bf16-resolution tie in one group of every expert:
+        # base snaps to the bf16 lattice so base*(1+rel) is guaranteed to
+        # round back to it (rel in [1.6e-6, 1.6e-5]: far above fp32
+        # resolution, far below bf16's ~0.4%)
+        base = float(jnp.bfloat16(base))
+        rel = eps / 64.0
+        w = w.at[:, 0, 0].set(base).at[:, 1, 0].set(base * (1.0 + rel))
+        ff, _ = S.nm_mask_pair(w, 1, m, 1, 2)
+        dec = S.nm_mask(w, 1, m, axis=1)
+        np.testing.assert_array_equal(np.asarray(ff), np.asarray(dec))
+        # premise: the shared-source property is load-bearing — the
+        # bf16-scored selection really does flip on the planted tie
+        m16 = S.nm_mask(w.astype(jnp.bfloat16), 1, m, axis=1)
+        assert bool(np.asarray(ff)[..., 1, 0].all())
+        assert not bool(np.asarray(m16)[..., 1, 0].any())
 
 
 class TestSRSTE:

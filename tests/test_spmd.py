@@ -225,6 +225,113 @@ class TestNMGroupInvariant:
                                 params, mesh, SP)
 
 
+class TestMoEPregenSPMD:
+    """Bare-array MoE pregen under expert-parallel SPMD: the group
+    guard keeps N:M groups and whole experts per shard, the census holds
+    on the forced 8-device mesh, and legacy-vs-pregen stays bitwise."""
+
+    SP4 = SparsityConfig(n=2, m=4, method="bdwp")
+
+    def _moe_cfg(self):
+        # the one MoE rig, shared with the solo-mesh suite: same model,
+        # same E != m census property, one place to tune
+        from test_pregen import MOE_CFG
+        return MOE_CFG
+
+    def test_expert_stack_group_split_refused(self):
+        """A mesh axis that would cut an M-group along an expert stack's
+        contraction axis must be dropped by the rules and rejected by
+        the assert; an uneven expert split is rejected too (an expert's
+        matrix never straddles devices)."""
+        mesh = spmd.make_spmd_mesh("data=2,model=4")
+        w = jax.ShapeDtypeStruct((8, 16, 16), jnp.float32)
+        specs = {"moe": {"w_gate": ("expert", "embed", "mlp")}}
+        params = {"moe": {"w_gate": w}}
+        out = R.nm_params_pspecs(specs, R.TRAIN_RULES, params, mesh, SP)
+        # expert-parallel over "model" is fine (whole experts per shard)
+        assert out["moe"]["w_gate"][0] == "model"
+        # ..."embed"->"data" on K: 8 rows/shard, still a multiple of m=8
+        assert out["moe"]["w_gate"][1] == "data"
+        with pytest.raises(AssertionError, match="group split"):
+            R.assert_nm_unsplit({"moe": {"w_gate": P(None, "model", None)}},
+                                params, mesh, SP)
+        w6 = {"moe": {"w_gate": jax.ShapeDtypeStruct((6, 16, 16),
+                                                     jnp.float32)}}
+        with pytest.raises(AssertionError, match="group split"):
+            R.assert_nm_unsplit({"moe": {"w_gate": P("model", None, None)}},
+                                w6, mesh, SP)
+        # the rules themselves refuse the K-split: a 4-way "model" shard
+        # of K=16 (m=8) falls back to replicated
+        specs_k = {"moe": {"w_gate": ("expert", "mlp", None)}}
+        out_k = R.nm_params_pspecs(specs_k, R.SERVE_BATCH_RULES, params,
+                                   mesh, SP)
+        assert out_k["moe"]["w_gate"][1] is None
+
+    def test_moe_resolved_shardings_unsplit(self, mesh8):
+        cfg = self._moe_cfg()
+        bundle = ST.build_lm_train(cfg, mesh8, self.SP4, OPT, donate=False)
+        from repro.models import transformer_lm as T
+        aparams, _ = T.init(jax.random.PRNGKey(0), cfg, abstract=True)
+        R.assert_nm_unsplit(bundle.state_shardings["master"], aparams,
+                            mesh8, self.SP4)
+
+    def test_moe_census_and_bitwise_ab_on_mesh8(self, mesh8):
+        """Acceptance: on the forced 8-device expert-parallel mesh the
+        jitted MoE train step still derives exactly one mask per
+        prunable param, and (mask-stable weights) the pregen trajectory
+        reproduces the legacy one bitwise on the same mesh."""
+        from repro.core import bdwp
+        from repro.launch.hlo_cost import count_mask_ops
+        from test_pregen import _stabilize_masks
+
+        cfg = self._moe_cfg()
+        sp = self.SP4
+        opt = sgd.SGDConfig(lr=5e-4, warmup_steps=0, total_steps=100,
+                            min_lr_frac=1.0)
+
+        def structs(t):
+            return jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+
+        def run(pregen, steps=2):
+            bundle = ST.build_lm_train(cfg, mesh8, sp, opt, donate=False,
+                                       pregen=pregen)
+            state = ST.init_train_state(jax.random.PRNGKey(0), cfg,
+                                        sp_cfg=sp, pregen=pregen)
+            state["master"] = _stabilize_masks(state["master"], sp)
+            if pregen:
+                state["compute"] = sgd.pregen_tree(state["master"], sp)
+            state = jax.device_put(state, bundle.state_shardings)
+            sh = {k: NamedSharding(mesh8, ps)
+                  for k, ps in bundle.input_pspecs.items()}
+            stream = D.lm_stream(cfg.vocab, 4, 32, shardings=sh, seed=0)
+            losses = []
+            for i, (_, b) in enumerate(stream):
+                if i >= steps:
+                    break
+                state, metrics = bundle.step_fn(state, b)
+                losses.append(float(metrics["loss"]))
+            return bundle, state, losses
+
+        bundle, s_pre, l_pre = run(True)
+        state0 = ST.init_train_state(jax.random.PRNGKey(0), cfg, sp_cfg=sp)
+        names = sgd._names_of(state0["master"])
+        n_sites = sum(
+            bdwp.pregen_site(n, sgd._logical_shape(n, w.shape)[0], sp)
+            for n, w in zip(names, jax.tree.leaves(state0["master"])))
+        batch = {"tokens": jnp.zeros((4, 32), jnp.int32),
+                 "labels": jnp.zeros((4, 32), jnp.int32)}
+        count = count_mask_ops(bundle.step_fn, structs(
+            jax.device_put(state0, bundle.state_shardings)),
+            structs(batch), nm=(sp.n, sp.m))
+        assert count == n_sites > 0
+
+        _, s_leg, l_leg = run(False)
+        assert l_pre == l_leg
+        for a, b in zip(_host(s_pre["master"]), _host(s_leg["master"])):
+            np.testing.assert_array_equal(a, b)
+
+
 class TestCheckpointReshard:
     def _state_and_bundle(self, mesh):
         bundle = ST.build_lm_train(CFG, mesh, SP, OPT, donate=False)
