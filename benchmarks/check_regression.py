@@ -56,6 +56,17 @@ GATES = {
         "moe_pregen.mask_ops.pregen",
         "moe_pregen.mask_ops.prunable_params",
         "moe_pregen.mask_ops.pregen_per_param",
+        # unified packed-FF train consumption (SparseOperand/nm_apply):
+        # the forward must stay scatter-free on both backends (0 ± 20%
+        # of 0 rejects ANY regrown scatter-unpack), invoke nm_spmm per
+        # packed site on pallas, and keep the packed FF HBM saving
+        "packed_train.packed_sites",
+        "packed_train.forward_scatter_ops.jnp",
+        "packed_train.forward_scatter_ops.pallas",
+        "packed_train.forward_nm_spmm_calls.pallas",
+        "packed_train.ff_hbm_bytes.packed",
+        "packed_train.ff_hbm_bytes.dense",
+        "packed_train.ff_hbm_bytes.saving",
     ],
 }
 

@@ -120,6 +120,86 @@ def moe_section(smoke: bool) -> dict:
     }
 
 
+def packed_train_section(smoke: bool) -> dict:
+    """Unified packed-FF consumption gate (the ROADMAP item closed by
+    the SparseOperand API): with ``pregen_pack=True`` the train-step
+    FORWARD consumes each packed ``(vals, idx)`` FF operand directly —
+    through kernels/nm_spmm on the pallas backend, select-decompressed
+    on jnp — so the traced forward contains ZERO scatter-unpacks on
+    either backend, and the pallas forward invokes the kernel once per
+    packed site.  Also accounts the FF-operand HBM bytes the packed
+    compute tree actually stores vs its dense-layout equivalent.
+    Deterministic counts are gated by check_regression; backend step
+    times are recorded for the wall-clock trajectory.
+    """
+    from repro.core import operand as O
+    from repro.launch.hlo_cost import count_jaxpr_prims
+    from repro.models import transformer_lm as T
+
+    cfg = get_arch("qwen3-8b").smoke
+    sp_cfg = SparsityConfig(n=2, m=8, method="bdwp")
+    opt_cfg = sgd.SGDConfig(lr=0.05, total_steps=100)
+    batch, seq = (2, 32) if smoke else (4, 64)
+    steps = 3 if smoke else 8
+    mesh = make_host_mesh()
+
+    state = ST.init_train_state(jax.random.PRNGKey(0), cfg, sp_cfg=sp_cfg,
+                                pregen_pack=True)
+    b0 = {"tokens": jnp.zeros((batch, seq), jnp.int32),
+          "labels": jnp.zeros((batch, seq), jnp.int32)}
+
+    # -- FF-operand HBM accounting: packed (vals + uint8 idx) vs dense --
+    packed_sites = [leaf for leaf in jax.tree.leaves(
+        state["compute"], is_leaf=lambda x: isinstance(x, O.PregenOp))
+        if isinstance(leaf, O.PregenOp) and leaf.is_packed]
+    bytes_of = lambda a: int(a.size) * jnp.dtype(a.dtype).itemsize  # noqa
+    packed_bytes = sum(bytes_of(s.vals) + bytes_of(s.idx)
+                       for s in packed_sites)
+    dense_bytes = sum(bytes_of(s.bp) for s in packed_sites)  # dense layout
+
+    # -- forward census per backend: scatter-free, kernel-consuming -----
+    def forward_loss(backend):
+        def fn(compute, b):
+            with O.backend_scope(backend):
+                hidden, _, aux = T.forward(compute, b["tokens"], cfg, sp_cfg)
+                return T.lm_loss(compute, hidden, b["labels"], cfg) \
+                    + 0.01 * aux
+        return fn
+
+    census, times = {}, {}
+    for backend in ("jnp", "pallas"):
+        jaxpr = jax.make_jaxpr(forward_loss(backend))(
+            _structs(state["compute"]), _structs(b0))
+        census[backend] = {
+            "scatter_ops": count_jaxpr_prims(
+                jaxpr.jaxpr, names=("scatter", "scatter-add")),
+            "nm_spmm_calls": count_jaxpr_prims(
+                jaxpr.jaxpr, names=("pallas_call",)),
+        }
+        bundle = ST.build_lm_train(cfg, mesh, sp_cfg, opt_cfg, donate=False,
+                                   pregen_pack=True, nm_backend=backend)
+        times[f"packed_{backend}_step_ms_median"] = time_steps(
+            bundle, jax.device_put(state, bundle.state_shardings),
+            cfg.vocab, batch, seq, steps)
+
+    return {
+        "config": {"arch": "qwen3-8b-smoke", "method": sp_cfg.method,
+                   "nm": f"{sp_cfg.n}:{sp_cfg.m}", "batch": batch,
+                   "seq": seq},
+        "packed_sites": len(packed_sites),
+        "forward_scatter_ops": {be: census[be]["scatter_ops"]
+                                for be in census},
+        "forward_nm_spmm_calls": {be: census[be]["nm_spmm_calls"]
+                                  for be in census},
+        "ff_hbm_bytes": {
+            "packed": packed_bytes,
+            "dense": dense_bytes,
+            "saving": dense_bytes / max(packed_bytes, 1),
+        },
+        "times": times,
+    }
+
+
 def main(smoke: bool = False) -> dict:
     cfg = get_arch("qwen3-8b").smoke
     mesh = make_host_mesh()
@@ -149,6 +229,7 @@ def main(smoke: bool = False) -> dict:
             cfg.vocab, batch, seq, steps)
 
     moe = moe_section(smoke)
+    packed_train = packed_train_section(smoke)
     rec = {
         "config": {"arch": "qwen3-8b-smoke", "method": sp_cfg.method,
                    "nm": f"{sp_cfg.n}:{sp_cfg.m}", "batch": batch,
@@ -163,6 +244,7 @@ def main(smoke: bool = False) -> dict:
         },
         "times": times,
         "moe_pregen": moe,
+        "packed_train": packed_train,
     }
     os.makedirs(RESULTS, exist_ok=True)
     out = os.path.join(RESULTS, "BENCH_pregen.json")
@@ -184,7 +266,22 @@ def main(smoke: bool = False) -> dict:
           f"({mm['legacy_per_param']:.1f}/param) over "
           f"{mm['prunable_params']} prunable params")
 
+    pt = packed_train
+    print(f"packed train fwd: scatter ops jnp {pt['forward_scatter_ops']['jnp']} "
+          f"pallas {pt['forward_scatter_ops']['pallas']}; nm_spmm calls "
+          f"pallas {pt['forward_nm_spmm_calls']['pallas']} over "
+          f"{pt['packed_sites']} packed sites; FF HBM saving "
+          f"{pt['ff_hbm_bytes']['saving']:.2f}x")
+
     failed = False
+    if pt["forward_scatter_ops"]["jnp"] or pt["forward_scatter_ops"]["pallas"]:
+        print("[FAIL] packed train forward scatters (vals, idx) back to "
+              "dense — the unified nm_spmm consumption regressed")
+        failed = True
+    if pt["forward_nm_spmm_calls"]["pallas"] < pt["packed_sites"]:
+        print("[FAIL] pallas-backend packed train forward does not invoke "
+              "nm_spmm for every packed site")
+        failed = True
     if mo["pregen_per_param"] != 1.0:
         print(f"[FAIL] mask-once invariant broken: "
               f"{mo['pregen_per_param']:.2f} selections per prunable param "

@@ -1,6 +1,6 @@
 """BDWP — Bidirectional Weight Pruning for N:M sparse training (Alg. 1).
 
-The paper's training flow, as composable JAX ops with custom VJPs:
+The paper's training flow:
 
   FF : y  = x @ sparsify_{N:M}(W, axis=in)      # srste | bdwp
   BP : dx = g @ sparsify_{N:M}(W, axis=out)^T   # sdwp  | bdwp
@@ -11,257 +11,97 @@ Gradients reach the *dense master weights* by straight-through estimation;
 SR-STE's sparse-refined decay term lam*(1-mask)*W is applied in the
 optimizer (``optim/``; fused kernel in ``kernels/fused_update.py``).
 
-Two consumption modes:
-  * ``nm_linear`` / ``nm_conv`` — self-contained: each call re-derives
-    its N:M mask from the weights it is given (score in fp32 of the
-    GIVEN values; cast to the activation dtype only after masking, so
-    callers holding fp32 master get fp32-scored masks).  The conv
-    backward reuses XLA's conv transposes through ``jax.vjp`` closures,
-    so dgrad runs with the BP-pruned weights and wgrad with dense
-    weights — exactly Alg. 1.
-  * ``nm_linear_pregen`` / ``nm_conv_pregen`` — the pre-generation
-    dataflow (paper Fig. 11c): FF/BP consume the bf16 operands the
-    optimizer wrote at WU time (optim/sgd.pregen_tree — masks derived
-    ONCE per parameter per step from fp32 master, one fused top_k via
-    sparsity.nm_mask_pair), with the dense straight-through WU gradient
-    riding on the BP operand's cotangent.  The train-step builders use
-    this mode by default.
+The consumption semantics — in-op masking, pre-generated FF/BP operands
+(Fig. 11c), packed ``(vals, idx)`` — live in ``core/operand.py`` as the
+``SparseOperand`` algebra behind the single ``nm_apply`` entry point;
+this module keeps the *policy* layer (per-parameter pruning eligibility,
+decay/pre-generation site classification, shared-mode serving pack,
+training-FLOP accounting) plus thin deprecation shims for the old
+per-path entry points (``nm_linear``/``nm_conv``/``nm_linear_pregen``/
+``nm_conv_pregen``/``nm_linear_packed``).
 """
 
 from __future__ import annotations
 
 import re
-from functools import partial
-from typing import Optional
+import warnings
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparsity import SparsityConfig, sparsify
+from repro.core import operand as O
+from repro.core.sparsity import SparsityConfig
 
 # ---------------------------------------------------------------------------
-# Matmul view: x (..., K) @ w (K, F) -> (..., F)
-# ---------------------------------------------------------------------------
-
-
-def _ff_weights(w: jax.Array, cfg: SparsityConfig) -> jax.Array:
-    """FF-pruned weights: N:M groups along the input (contraction) axis."""
-    if cfg.prunes_ff_weights():
-        return sparsify(w, cfg, axis=0, share_axis=1)
-    return w
-
-
-def _bp_weights(w: jax.Array, cfg: SparsityConfig) -> jax.Array:
-    """BP-pruned weights: N:M groups along the output axis (dgrad contraction)."""
-    if cfg.prunes_bp_weights():
-        return sparsify(w, cfg, axis=1, share_axis=0)
-    return w
-
-
-@partial(jax.custom_vjp, nondiff_argnums=(2,))
-def nm_linear(x: jax.Array, w: jax.Array, cfg: SparsityConfig) -> jax.Array:
-    """y = x @ w with the cfg.method's N:M sparse training semantics."""
-    return jnp.matmul(x, _ff_weights(w, cfg).astype(x.dtype))
-
-
-def _nm_linear_fwd(x, w, cfg):
-    y = jnp.matmul(x, _ff_weights(w, cfg).astype(x.dtype))
-    return y, (x, w)
-
-
-def _nm_linear_bwd(cfg, res, g):
-    x, w = res
-    # AMP dataflow (paper Fig. 11): BP/WU arithmetic runs in the compute
-    # dtype (bf16 here, FP16 on SAT); only the weight-gradient *result*
-    # accumulates in fp32 for WUVE.  Casting the cotangent down — rather
-    # than the weights up — keeps backward activations, remat recompute
-    # and the TP collectives in 16-bit (2x traffic saving, and faithful).
-    gc = g.astype(x.dtype)
-    # BP: activation gradient with the backward-pruned operand
-    if cfg.prunes_bp_grads():  # SDGP: prune the *output gradients* N:M
-        g_bp = sparsify(gc, cfg, axis=-1)
-        dx = jnp.matmul(g_bp, w.T.astype(gc.dtype))
-    else:
-        w_bp = _bp_weights(w, cfg)
-        dx = jnp.matmul(gc, w_bp.T.astype(gc.dtype))
-    # WU: weight gradient — dense (paper Alg. 1 line 9), straight-through;
-    # fp32 accumulation via preferred_element_type (MXU-native)
-    x2 = x.reshape(-1, x.shape[-1])
-    g2 = gc.reshape(-1, gc.shape[-1])
-    dw = jnp.matmul(x2.T, g2, preferred_element_type=jnp.float32)
-    return dx.reshape(x.shape).astype(x.dtype), dw.astype(w.dtype)
-
-
-nm_linear.defvjp(_nm_linear_fwd, _nm_linear_bwd)
-
-
-# ---------------------------------------------------------------------------
-# Pre-generation mode (Fig. 11c executed): FF/BP consume WU-time operands
+# Deprecation shims — the pre-operand per-path entry points
 # ---------------------------------------------------------------------------
 #
-# ``nm_linear`` re-derives the N:M masks with lax.top_k on every call —
-# once in FF, once in BP, plus once more in the optimizer's SR-STE decay:
-# three selections per prunable parameter per step, and the FF/BP ones
-# are scored on *bf16-rounded* weights while the decay is scored on fp32
-# master.  The pre-generation dataflow moves all of that to WU time: the
-# optimizer computes the FF and BP masks ONCE from fp32 master (one fused
-# top_k — core/sparsity.nm_mask_pair), prunes, casts and (where eligible)
-# SORE-packs the bf16 operands, and the next step's FF/BP load them from
-# the train state without any selection op.  ``nm_linear_pregen`` /
-# ``nm_conv_pregen`` are those consumers; the dense WU gradient
-# (straight-through, Alg. 1 line 9) rides on the BP operand's cotangent —
-# always dense-shaped, even when the FF operand is packed.
+# Every consumer now routes through operand.nm_apply; these wrappers keep
+# external callers and the A/B reference closures in the test-suite
+# working (same custom-VJP cores, so outputs and gradients are bitwise
+# what they always were) while flagging the migration.
 
 
-@jax.custom_vjp
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"bdwp.{old} is deprecated; use core.operand.{new}",
+                  DeprecationWarning, stacklevel=3)
+
+
+def nm_linear(x: jax.Array, w: jax.Array, cfg: SparsityConfig) -> jax.Array:
+    """DEPRECATED: ``nm_apply(MaskedOp(w, cfg), x)``."""
+    _deprecated("nm_linear", "nm_apply(MaskedOp(w, cfg), x)")
+    return O.nm_apply(O.MaskedOp(w, cfg), x)
+
+
 def nm_linear_pregen(x: jax.Array, ff: jax.Array, bp: jax.Array) -> jax.Array:
-    """y = x @ ff with BP running against ``bp`` and a dense WU gradient.
-
-    ff: FF operand written at WU time (N:M-pruned bf16 for srste/bdwp,
-        dense bf16 for sdwp).
-    bp: BP operand (pruned for sdwp/bdwp, dense for srste).  Its
-        cotangent carries the dense straight-through weight gradient.
-    """
-    return jnp.matmul(x, ff.astype(x.dtype))
+    """DEPRECATED: ``nm_apply(PregenOp(ff=ff, bp=bp), x)``."""
+    _deprecated("nm_linear_pregen", "nm_apply(PregenOp(ff=ff, bp=bp), x)")
+    return O.pregen_linear(x, ff, bp)
 
 
-def _nm_linear_pregen_fwd(x, ff, bp):
-    return jnp.matmul(x, ff.astype(x.dtype)), (x, ff, bp)
+def nm_conv(x, w, cfg: SparsityConfig, stride: int = 1,
+            padding: str = "SAME"):
+    """DEPRECATED: ``nm_apply(MaskedOp(w, cfg), x, stride=, padding=)``."""
+    _deprecated("nm_conv", "nm_apply(MaskedOp(w, cfg), x, ...)")
+    return O.masked_conv(x, w, cfg, stride, padding)
 
 
-def _nm_linear_pregen_bwd(res, g):
-    x, ff, bp = res
-    # identical arithmetic to _nm_linear_bwd: bf16 cotangent, bf16 BP
-    # matmul, fp32-accumulated dense WU gradient
-    gc = g.astype(x.dtype)
-    dx = jnp.matmul(gc, bp.T.astype(gc.dtype))
-    x2 = x.reshape(-1, x.shape[-1])
-    g2 = gc.reshape(-1, gc.shape[-1])
-    dw = jnp.matmul(x2.T, g2, preferred_element_type=jnp.float32)
-    return (dx.reshape(x.shape).astype(x.dtype), jnp.zeros_like(ff),
-            dw.astype(bp.dtype))
+def nm_conv_pregen(x, ff, bp, stride: int = 1, padding: str = "SAME"):
+    """DEPRECATED: ``nm_apply(PregenOp(ff=ff, bp=bp), x, stride=, ...)``."""
+    _deprecated("nm_conv_pregen", "nm_apply(PregenOp(ff=ff, bp=bp), x, ...)")
+    return O.pregen_conv(x, ff, bp, stride, padding)
 
 
-nm_linear_pregen.defvjp(_nm_linear_pregen_fwd, _nm_linear_pregen_bwd)
+def nm_linear_packed(x, vals, idx, cfg: SparsityConfig,
+                     use_pallas: bool = False):
+    """DEPRECATED: ``nm_apply(PackedOp(vals, idx, cfg), x, backend=)``."""
+    _deprecated("nm_linear_packed", "nm_apply(PackedOp(vals, idx, cfg), x)")
+    return O.nm_apply(O.PackedOp(vals, idx, cfg), x,
+                      backend="pallas" if use_pallas else "jnp")
 
 
 def is_pregen(leaf) -> bool:
-    """True for a WU-time pre-generated operand dict (optim/sgd emits
-    these in place of a prunable weight array inside the compute tree)."""
+    """True for a WU-time pre-generated operand — an ``operand.PregenOp``
+    leaf (what optim/sgd emits) or the dict form older checkpoints /
+    callers used."""
+    if isinstance(leaf, O.PregenOp):
+        return True
     return isinstance(leaf, dict) and "bp" in leaf and \
         ("ff" in leaf or "vals" in leaf)
 
 
-def pregen_ff_operand(pg: dict, cfg: SparsityConfig) -> jax.Array:
-    """Resolve the dense-layout FF operand of a pre-generated leaf.
-
-    Packed leaves ((vals, idx) along the contraction axis, ndim-2) are
-    scattered back with ``nm_unpack_n`` — exact (pack keeps values
-    verbatim), sort-free, and outside the custom VJP so the uint8
-    indices never need a cotangent.  On TPU the Pallas serving kernel
-    (kernels/nm_spmm) would consume the pair in VMEM instead.
-    """
-    from repro.core.sparsity import nm_unpack_n
+def pregen_ff_operand(pg, cfg: SparsityConfig) -> jax.Array:
+    """Resolve the dense-layout FF operand of a pre-generated leaf
+    (PregenOp or legacy dict).  Packed leaves decompress with the shared
+    select-based helper (kernels.decompress_nm) — exact (pack keeps
+    values verbatim), scatter-free, and outside the custom VJP so the
+    uint8 indices never need a cotangent.  The pallas backend of
+    ``nm_apply`` skips this entirely and consumes the pair in VMEM."""
+    from repro.kernels.nm_spmm_shared import decompress_nm
 
     if "vals" in pg:
-        return nm_unpack_n(pg["vals"], pg["idx"], cfg.n, cfg.m, axis=-2)
+        return decompress_nm(pg["vals"], pg["idx"], cfg.n, cfg.m, axis=-2)
     return pg["ff"]
-
-
-# ---------------------------------------------------------------------------
-# Conv view (NHWC x HWIO -> NHWC) — the paper's CNN benchmarks
-# ---------------------------------------------------------------------------
-
-_CONV_IN_AXIS = 2   # HWIO: input-channel axis (FF grouping, Fig. 5a)
-_CONV_OUT_AXIS = 3  # HWIO: output-channel axis (BP grouping, Fig. 5b)
-
-
-def _conv(x, w, stride, padding):
-    return jax.lax.conv_general_dilated(
-        x, w.astype(x.dtype),
-        window_strides=(stride, stride),
-        padding=padding,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"),
-    )
-
-
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def nm_conv(x, w, cfg: SparsityConfig, stride: int = 1, padding: str = "SAME"):
-    w_ff = sparsify(w, cfg, axis=_CONV_IN_AXIS, share_axis=_CONV_OUT_AXIS) \
-        if cfg.prunes_ff_weights() else w
-    return _conv(x, w_ff, stride, padding)
-
-
-def _nm_conv_fwd(x, w, cfg, stride, padding):
-    w_ff = sparsify(w, cfg, axis=_CONV_IN_AXIS, share_axis=_CONV_OUT_AXIS) \
-        if cfg.prunes_ff_weights() else w
-    return _conv(x, w_ff, stride, padding), (x, w)
-
-
-def _nm_conv_bwd(cfg, stride, padding, res, g):
-    x, w = res
-    if cfg.prunes_bp_grads():
-        g_eff = sparsify(g, cfg, axis=-1)  # N:M across output channels
-        w_bp = w
-    else:
-        g_eff = g
-        w_bp = sparsify(w, cfg, axis=_CONV_OUT_AXIS, share_axis=_CONV_IN_AXIS) \
-            if cfg.prunes_bp_weights() else w
-    # dgrad through a closure over the BP weights
-    _, dgrad = jax.vjp(lambda xx: _conv(xx, w_bp, stride, padding), x)
-    (dx,) = dgrad(g_eff.astype(x.dtype))
-    # wgrad dense (straight-through to master weights)
-    _, wgrad = jax.vjp(lambda ww: _conv(x, ww, stride, padding), w)
-    (dw,) = wgrad(g.astype(x.dtype))
-    return dx, dw.astype(w.dtype)
-
-
-nm_conv.defvjp(_nm_conv_fwd, _nm_conv_bwd)
-
-
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def nm_conv_pregen(x, ff, bp, stride: int = 1, padding: str = "SAME"):
-    """Conv view of ``nm_linear_pregen``: FF convolves the WU-time FF
-    operand, dgrad convolves ``bp``, wgrad is dense straight-through on
-    the BP operand's cotangent."""
-    return _conv(x, ff, stride, padding)
-
-
-def _nm_conv_pregen_fwd(x, ff, bp, stride, padding):
-    return _conv(x, ff, stride, padding), (x, ff, bp)
-
-
-def _nm_conv_pregen_bwd(stride, padding, res, g):
-    x, ff, bp = res
-    _, dgrad = jax.vjp(lambda xx: _conv(xx, bp, stride, padding), x)
-    (dx,) = dgrad(g.astype(x.dtype))
-    _, wgrad = jax.vjp(lambda ww: _conv(x, ww, stride, padding), bp)
-    (dw,) = wgrad(g.astype(x.dtype))
-    return dx, jnp.zeros_like(ff), dw.astype(bp.dtype)
-
-
-nm_conv_pregen.defvjp(_nm_conv_pregen_fwd, _nm_conv_pregen_bwd)
-
-
-# ---------------------------------------------------------------------------
-# Packed-forward (inference / pre-generated weights, Fig. 11c)
-# ---------------------------------------------------------------------------
-
-
-def nm_linear_packed(x, vals, idx, cfg: SparsityConfig, use_pallas: bool = False):
-    """Forward-only matmul consuming SORE-packed weights.
-
-    Used by the serving path: weights live in HBM in compact N:M form
-    (N/M of dense bytes + indices); the Pallas kernel (kernels/nm_spmm)
-    decompresses tile-by-tile in VMEM.  Routes through kernels/ops so
-    TPU runs the kernel; the default oracle path keeps the lowered HLO
-    clean for roofline accounting and is dry-run friendly.
-    """
-    from repro.kernels import ops  # local import to avoid cycles
-
-    x2 = x.reshape(-1, x.shape[-1])
-    y = ops.nm_spmm(x2, vals, idx, cfg.n, cfg.m, use_pallas=use_pallas)
-    return y.reshape(*x.shape[:-1], vals.shape[-1]).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -288,9 +128,12 @@ def shared_ff_pack(w: jax.Array, cfg: SparsityConfig):
 
 
 def packed_shared_apply(p: dict, x: jax.Array) -> jax.Array:
-    """y = gather(x, idx) @ vals  — the reduced-K serving matmul."""
-    xg = jnp.take(x, p["idx"], axis=-1)
-    y = jnp.matmul(xg, p["vals"].astype(xg.dtype))
+    """y = gather(x, idx) @ vals  — the reduced-K serving matmul.
+
+    DEPRECATED entry point: routes through
+    ``nm_apply(SharedOp(vals, idx), x)`` (bias added here)."""
+    _deprecated("packed_shared_apply", "nm_apply(SharedOp(vals, idx), x)")
+    y = O.nm_apply(O.SharedOp(p["vals"], p["idx"]), x)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y
@@ -314,8 +157,11 @@ def serve_packable(name: str, lshape, cfg: SparsityConfig) -> bool:
 
 def pack_tree_shared(params, cfg: SparsityConfig, pspecs=None):
     """Transform a param tree for packed serving: every eligible
-    {"w": (…, K, F)} leaf-dict becomes {"vals", "idx"(, "b")}.  Stacked
-    (L, K, F) weights pack per layer (vmapped pattern selection).
+    {"w": (…, K, F)} leaf-dict becomes {"w": operand.SharedOp(vals,
+    idx)(, "b")} — the bias and leaf-dict shape survive, only the
+    weight leaf changes type (mirroring serve/packed_params'
+    element-mode PackedOp).  Stacked (L, K, F) weights pack per layer
+    (vmapped pattern selection).
 
     With ``pspecs`` given (a matching tree of PartitionSpecs), returns
     (packed_params, packed_pspecs) transformed consistently: vals keep
@@ -339,14 +185,14 @@ def pack_tree_shared(params, cfg: SparsityConfig, pspecs=None):
                     vals, idx = jax.eval_shape(pack, w)  # abstract tree
                 else:
                     vals, idx = pack(w)
-                new = {"vals": vals, "idx": idx}
+                new = {"w": O.SharedOp(vals, idx)}
                 if "b" in node:
                     new["b"] = node["b"]
                 if spec_node is None:
                     return new, None
                 w_spec = spec_node["w"]
                 idx_spec = P(*w_spec[:-1]) if len(w_spec) else P()
-                new_spec = {"vals": w_spec, "idx": idx_spec}
+                new_spec = {"w": O.SharedOp(w_spec, idx_spec)}
                 if "b" in node:
                     new_spec["b"] = spec_node["b"]
                 return new, new_spec

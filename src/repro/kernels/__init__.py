@@ -1,3 +1,32 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Custom-kernel package: Pallas TPU kernels + jnp oracles.
+
+This is the public kernel surface — consumers (core/operand, serve,
+benchmarks) import from here instead of deep-importing the private
+modules:
+
+  nm_compact / nm_spmm / nm_spmm_shared / fused_update
+      jit'd dispatchers (kernels.ops): Pallas on TPU, interpret mode on
+      CPU, oracle with ``use_pallas=False``.
+  nm_spmm_pallas / nm_spmm_shared_pallas / nm_compact_pallas /
+  fused_update_pallas
+      the raw pallas_call wrappers (explicit block sizes).
+  decompress_nm
+      the one shared (vals, idx) -> dense N:M expansion (select-based,
+      scatter-free) used by the kernel, the oracle and the operand
+      fallback alike.
+  pack_shared / packed_bytes
+      host-side shared-mode packer + HBM byte accounting.
+"""
+
+from repro.kernels.fused_update import fused_update_pallas
+from repro.kernels.nm_compact import nm_compact_pallas
+from repro.kernels.nm_spmm import nm_spmm_pallas
+from repro.kernels.nm_spmm_shared import decompress_nm, nm_spmm_shared_pallas
+from repro.kernels.ops import (fused_update, nm_compact, nm_spmm,
+                               nm_spmm_shared, pack_shared, packed_bytes)
+
+__all__ = [
+    "nm_compact", "nm_spmm", "nm_spmm_shared", "fused_update",
+    "nm_compact_pallas", "nm_spmm_pallas", "nm_spmm_shared_pallas",
+    "fused_update_pallas", "decompress_nm", "pack_shared", "packed_bytes",
+]

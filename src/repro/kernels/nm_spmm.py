@@ -40,19 +40,12 @@ from repro.kernels import pallas_compat as pltpu
 def _decompress(vals, idx, n: int, m: int):
     """(TKc, TF) packed -> (TK, TF) dense, TK = TKc*m/n.
 
-    dense[g*m + s, f] = sum_j vals[g*n + j, f] * (idx[g*n + j, f] == s)
-    Unrolled over the m slot positions: all ops are rank-3 selects/adds.
+    Delegates to the package-wide select-based helper (one decompress
+    implementation for the kernel, the oracle and the operand fallback).
     """
-    tkc, tf = vals.shape
-    g = tkc // n
-    v = vals.reshape(g, n, tf)
-    i = idx.reshape(g, n, tf)
-    slots = []
-    for s in range(m):
-        hit = (i == s)
-        slots.append(jnp.sum(jnp.where(hit, v, 0), axis=1))  # (G, TF)
-    dense = jnp.stack(slots, axis=1)  # (G, M, TF)
-    return dense.reshape(g * m, tf)
+    from repro.kernels.nm_spmm_shared import decompress_nm
+
+    return decompress_nm(vals, idx, n, m, axis=0)
 
 
 def _spmm_kernel(act_ref, vals_ref, idx_ref, out_ref, *, n: int, m: int, nk: int):

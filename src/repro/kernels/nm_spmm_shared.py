@@ -29,6 +29,44 @@ from jax.experimental import pallas as pl
 from repro.kernels import pallas_compat as pltpu
 
 
+# ---------------------------------------------------------------------------
+# Shared decompress helper — THE (vals, idx) -> dense expansion
+# ---------------------------------------------------------------------------
+#
+# One implementation of the element-mode N:M decompression, used by the
+# nm_spmm Pallas kernel (per VMEM tile), the ref.py oracle and the
+# core/operand jnp fallback.  Select-based (an M-way select against the
+# offset plane), so it lowers scatter-free — O(K*F) vector work that
+# pipelines away against the MXU matmul.  Exact: packed values are kept
+# verbatim and every in-group offset hits exactly one slot, so the
+# result is bitwise-identical to the scatter formulation
+# (core/sparsity.nm_unpack_n).
+
+
+def decompress_nm(vals: jax.Array, idx: jax.Array, n: int, m: int,
+                  axis: int = -1) -> jax.Array:
+    """(…, Kc, …) packed -> (…, K, …) dense along ``axis``, K = Kc*m/n.
+
+    dense[g*m + s] = sum_j vals[g*n + j] * (idx[g*n + j] == s), unrolled
+    over the m slot positions — all ops are selects/adds, no scatter.
+    """
+    axis = axis % vals.ndim
+    kc = vals.shape[axis]
+    if kc % n:
+        raise ValueError(f"packed axis {kc} not divisible by n={n}")
+    shape = vals.shape
+    g = kc // n
+    gshape = shape[:axis] + (g, n) + shape[axis + 1:]
+    v = vals.reshape(gshape)
+    i = idx.reshape(gshape)
+    slots = []
+    for s in range(m):
+        hit = (i == s)
+        slots.append(jnp.sum(jnp.where(hit, v, 0), axis=axis + 1))
+    dense = jnp.stack(slots, axis=axis + 1)  # (…, G, M, …)
+    return dense.reshape(shape[:axis] + (g * m,) + shape[axis + 1:])
+
+
 def _spmm_shared_kernel(act_ref, vals_ref, rows_ref, out_ref):
     rows = rows_ref[0, :]  # (Kc,) int32, ascending within each M-group
     act_g = jnp.take(act_ref[...], rows, axis=1)  # (TB, Kc)

@@ -28,7 +28,9 @@ def ref_nm_spmm(act: jax.Array, vals: jax.Array, idx: jax.Array, n: int, m: int)
     idx:  (Kc, F) uint8 within-group offsets
     out:  (B, F) fp32
     """
-    w = S.nm_unpack_n(vals, idx, n, m, axis=0)
+    from repro.kernels.nm_spmm_shared import decompress_nm
+
+    w = decompress_nm(vals, idx, n, m, axis=0)
     return jnp.dot(act, w.astype(act.dtype), preferred_element_type=jnp.float32)
 
 

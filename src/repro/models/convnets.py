@@ -1,9 +1,10 @@
 """The paper's own benchmark models: ResNet9/18/50, VGG19, ViT.
 
-These are the five DNNs of Table I/II, built on ``core/bdwp.nm_conv`` /
-``nm_linear`` so BDWP applies exactly as in the paper: every conv layer
-except the first (named ``head0`` — excluded by the default
-SparsityConfig), plus all linear layers of the ViT blocks.  NHWC / HWIO.
+These are the five DNNs of Table I/II, built on ``core/operand.nm_apply``
+(MaskedOp / PregenOp conv + linear views) so BDWP applies exactly as in
+the paper: every conv layer except the first (named ``head0`` — excluded
+by the default SparsityConfig), plus all linear layers of the ViT
+blocks.  NHWC / HWIO.
 """
 
 from __future__ import annotations
@@ -15,7 +16,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core import bdwp
+from repro.core import operand as O
 from repro.core.sparsity import DENSE, SparsityConfig
 from repro.models import layers as L
 
@@ -46,21 +47,18 @@ def _conv_bn_relu(p, x, sp_cfg, name, stride=1):
 
 
 def _nm_conv_auto(leaf, x, sp_cfg, name, stride=1, padding="SAME"):
-    """Conv through BDWP, dispatching on the leaf format.
+    """Conv through ``operand.nm_apply``, dispatching on the leaf format.
 
-    A pre-generated leaf (leaf["w"] is the WU-time operand dict from
-    optim/sgd.pregen_tree) routes to nm_conv_pregen — masks were derived
-    once from fp32 master at WU time.  A plain array routes to nm_conv;
-    pass the fp32 master here (NOT a bf16 compute cast): nm_conv scores
-    its masks on the weights it is given and casts to the activation
-    dtype only after masking, so fp32-master masks come for free.
+    A pre-generated leaf (leaf["w"] is the WU-time PregenOp from
+    optim/sgd.pregen_tree) consumes the stored FF/BP operands — masks
+    were derived once from fp32 master at WU time.  A plain array takes
+    the in-op-masking MaskedOp route; pass the fp32 master here (NOT a
+    bf16 compute cast): the masked conv scores its masks on the weights
+    it is given and casts to the activation dtype only after masking, so
+    fp32-master masks come for free.
     """
-    w = leaf["w"]
-    if isinstance(w, dict):
-        return bdwp.nm_conv_pregen(x, bdwp.pregen_ff_operand(w, sp_cfg),
-                                   w["bp"], stride, padding)
-    return bdwp.nm_conv(x, w, bdwp.pick_cfg(name, w.shape, sp_cfg),
-                        stride, padding)
+    op = O.as_operand(leaf["w"], name, sp_cfg)
+    return O.nm_apply(op, x, stride=stride, padding=padding)
 
 
 # ---------------------------------------------------------------------------
@@ -271,15 +269,18 @@ def vit_init(key, cfg: ViTConfig):
     return p
 
 
+def _nm_lin(leaf, x, name, sp_cfg):
+    """ViT linear through operand.nm_apply (array or PregenOp leaf)."""
+    return O.nm_apply(O.as_operand(leaf["w"], name, sp_cfg), x)
+
+
 def vit_apply(p, x, cfg: ViTConfig, sp_cfg: SparsityConfig = DENSE):
     b = x.shape[0]
     s = cfg.image // cfg.patch
     x = x.reshape(b, s, cfg.patch, s, cfg.patch, 3).transpose(0, 1, 3, 2, 4, 5)
     x = x.reshape(b, s * s, -1).astype(jnp.bfloat16)
     # patch embedding = the "first layer" -> excluded from pruning by name
-    x = bdwp.nm_linear(x, p["patch_frontend"]["w"],
-                       bdwp.pick_cfg("patch_frontend", p["patch_frontend"]["w"].shape,
-                                     sp_cfg))
+    x = _nm_lin(p["patch_frontend"], x, "patch_frontend", sp_cfg)
     cls = jnp.broadcast_to(p["cls_embed"].astype(x.dtype), (b, 1, cfg.d_model))
     x = jnp.concatenate([cls, x], axis=1)
     x = x + p["pos_embed"].astype(x.dtype)
@@ -287,12 +288,9 @@ def vit_apply(p, x, cfg: ViTConfig, sp_cfg: SparsityConfig = DENSE):
     for i in range(cfg.n_layers):
         blk = p[f"block{i}"]
         h = L.layernorm_apply(blk["ln1"], x)
-        q = bdwp.nm_linear(h, blk["q_proj"]["w"],
-                           bdwp.pick_cfg("attn/q_proj", blk["q_proj"]["w"].shape, sp_cfg))
-        k = bdwp.nm_linear(h, blk["k_proj"]["w"],
-                           bdwp.pick_cfg("attn/k_proj", blk["k_proj"]["w"].shape, sp_cfg))
-        v = bdwp.nm_linear(h, blk["v_proj"]["w"],
-                           bdwp.pick_cfg("attn/v_proj", blk["v_proj"]["w"].shape, sp_cfg))
+        q = _nm_lin(blk["q_proj"], h, "attn/q_proj", sp_cfg)
+        k = _nm_lin(blk["k_proj"], h, "attn/k_proj", sp_cfg)
+        v = _nm_lin(blk["v_proj"], h, "attn/v_proj", sp_cfg)
         q = q.reshape(b, -1, cfg.n_heads, hd)
         k = k.reshape(b, -1, cfg.n_heads, hd)
         v = v.reshape(b, -1, cfg.n_heads, hd)
@@ -300,14 +298,11 @@ def vit_apply(p, x, cfg: ViTConfig, sp_cfg: SparsityConfig = DENSE):
                             preferred_element_type=jnp.float32) * hd ** -0.5
         attn = jax.nn.softmax(logits, -1).astype(v.dtype)
         o = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(b, -1, cfg.d_model)
-        o = bdwp.nm_linear(o, blk["o_proj"]["w"],
-                           bdwp.pick_cfg("attn/o_proj", blk["o_proj"]["w"].shape, sp_cfg))
+        o = _nm_lin(blk["o_proj"], o, "attn/o_proj", sp_cfg)
         x = x + o
         h2 = L.layernorm_apply(blk["ln2"], x)
-        f = jax.nn.gelu(bdwp.nm_linear(h2, blk["w_in"]["w"],
-                                       bdwp.pick_cfg("mlp/w_in", blk["w_in"]["w"].shape, sp_cfg)))
-        x = x + bdwp.nm_linear(f.astype(x.dtype), blk["w_out"]["w"],
-                               bdwp.pick_cfg("mlp/w_out", blk["w_out"]["w"].shape, sp_cfg))
+        f = jax.nn.gelu(_nm_lin(blk["w_in"], h2, "mlp/w_in", sp_cfg))
+        x = x + _nm_lin(blk["w_out"], f.astype(x.dtype), "mlp/w_out", sp_cfg)
     cls_out = x[:, 0]
     return jnp.matmul(cls_out, p["head"]["w"].astype(cls_out.dtype),
                       preferred_element_type=jnp.float32)

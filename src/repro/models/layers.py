@@ -6,10 +6,11 @@ Parameters live in plain nested dicts; every ``*_init`` returns
 axes per workload (MaxText-style), so one model definition serves every
 (shape x mesh) cell of the dry-run.
 
-Every weight matmul routes through ``core/bdwp`` so the paper's N:M
-sparse training semantics apply uniformly; per-parameter eligibility is
-decided by name via ``bdwp.pick_cfg`` (embeddings, routers, norms and
-frontends stay dense — the paper's first-layer exclusion, generalized).
+Every weight matmul routes through ``core/operand.nm_apply`` so the
+paper's N:M sparse training semantics apply uniformly; per-parameter
+eligibility is decided by name via ``bdwp.pick_cfg`` (embeddings,
+routers, norms and frontends stay dense — the paper's first-layer
+exclusion, generalized).
 """
 
 from __future__ import annotations
@@ -20,7 +21,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import bdwp
+from repro.core import operand as O
 from repro.core.sparsity import SparsityConfig
 
 # Logical axis vocabulary (see sharding/rules.py):
@@ -46,37 +47,19 @@ def dense_init(key, d_in: int, d_out: int, *, axes, bias: bool = False,
 
 
 def dense_apply(p, x, name: str, cfg: SparsityConfig, compute_dtype=jnp.bfloat16):
-    """x @ w via BDWP with per-param sparsity eligibility.
+    """x @ w via the SparseOperand algebra (core/operand.nm_apply).
 
-    Params route by leaf format:
-      * pre-generated training leaves (p["w"] is an operand dict written
-        at WU time by optim/sgd — Fig. 11c) -> bdwp.nm_linear_pregen
-        consuming the stored FF/BP operands, zero mask re-derivation;
-      * element-packed serving leaves ({"vals","idx"} with idx.ndim ==
-        vals.ndim, from serve.packed_params) -> kernels/nm_spmm consuming
-        the compact (vals, uint8 idx) pair directly (N/M of dense HBM
-        bytes);
-      * shared-packed ({"vals","idx"} with per-row idx, from
-        bdwp.pack_tree_shared) -> the reduced-K gathered matmul."""
-    if "w" in p and isinstance(p["w"], dict):
-        xc = x.astype(compute_dtype)
-        pg = p["w"]
-        y = bdwp.nm_linear_pregen(xc, bdwp.pregen_ff_operand(pg, cfg),
-                                  pg["bp"])
-        if "b" in p:
-            y = y + p["b"].astype(y.dtype)
-        return y
-    if "vals" in p:
-        xc = x.astype(compute_dtype)
-        if p["idx"].ndim == p["vals"].ndim:
-            y = bdwp.nm_linear_packed(xc, p["vals"], p["idx"], cfg)
-            if "b" in p:
-                y = y + p["b"].astype(y.dtype)
-            return y
-        return bdwp.packed_shared_apply(p, xc)
-    w = p["w"]
-    eff = bdwp.pick_cfg(name, w.shape, cfg)
-    y = bdwp.nm_linear(x.astype(compute_dtype), w, eff)
+    The leaf under ``p["w"]`` may be any operand variant — a plain array
+    (legacy in-op masking with per-param eligibility), a PregenOp (the
+    pre-generated training dataflow, Fig. 11c), a PackedOp (element-
+    packed serving, consumed through kernels/nm_spmm) — or, for trees
+    written by older packers, the equivalent dicts, including the flat
+    shared-packed ``{"vals", "idx"}`` layout of bdwp.pack_tree_shared;
+    ``as_operand`` normalizes every format and ``nm_apply`` carries the
+    consumption + custom-VJP semantics."""
+    leaf = p["w"] if "w" in p else p
+    op = O.as_operand(leaf, name, cfg)
+    y = O.nm_apply(op, x.astype(compute_dtype))
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bdwp
+from repro.core import operand as O
 from repro.core.sparsity import SparsityConfig
 from repro.models import layers as L
 from repro.sharding.rules import BATCH, act
@@ -81,27 +82,26 @@ def moe_init(key, d_model: int, cfg: MoEConfig):
 
 def _nm_mm(leaf, x, name: str, sp_cfg: SparsityConfig, *,
            stacked: bool = False):
-    """One bare-leaf matmul through the right consumption mode.
+    """One bare-leaf matmul through ``operand.nm_apply``.
 
-    Pre-generated operand dicts (the training dataflow — optim/sgd
+    Pre-generated operand leaves (the training dataflow — optim/sgd
     wrote the bf16 FF/BP copies at WU time, masks scored once on fp32
-    master) route through ``nm_linear_pregen``: the MoE forward/backward
-    derive zero masks and the dense straight-through WU gradient rides
-    the BP operand's cotangent, exactly like layers.dense_apply.  Bare
-    arrays keep the legacy self-masking ``nm_linear`` (serving from raw
-    bf16 weights, dense methods, the pregen=False A/B path).  With
-    ``stacked=True`` the leaf carries a leading expert axis and the
-    matmul is vmapped per expert — N:M groups stay within one expert.
+    master) consume as PregenOp: the MoE forward/backward derive zero
+    masks, packed ``(vals, idx)`` stacks stream through kernels/nm_spmm
+    on the pallas backend, and the dense straight-through WU gradient
+    rides the BP operand's cotangent — exactly like layers.dense_apply.
+    Bare arrays keep the legacy self-masking semantics (MaskedOp:
+    serving from raw bf16 weights, dense methods, the pregen=False A/B
+    path).  With ``stacked=True`` the leaf carries a leading expert axis
+    and the matmul is vmapped per expert — N:M groups stay within one
+    expert.
     """
-    if bdwp.is_pregen(leaf):
-        ff = bdwp.pregen_ff_operand(leaf, sp_cfg)
-        if stacked:
-            return jax.vmap(bdwp.nm_linear_pregen)(x, ff, leaf["bp"])
-        return bdwp.nm_linear_pregen(x, ff, leaf["bp"])
-    if stacked:
-        cfg = bdwp.pick_cfg(name, leaf.shape[1:], sp_cfg)
-        return jax.vmap(lambda xe, w: bdwp.nm_linear(xe, w, cfg))(x, leaf)
-    return bdwp.nm_linear(x, leaf, bdwp.pick_cfg(name, leaf.shape, sp_cfg))
+    if isinstance(leaf, O.SparseOperand) or bdwp.is_pregen(leaf):
+        op = O.as_operand(leaf, name, sp_cfg)
+    else:
+        lshape = leaf.shape[1:] if stacked else leaf.shape
+        op = O.MaskedOp(leaf, bdwp.pick_cfg(name, lshape, sp_cfg))
+    return O.nm_apply(op, x, stacked=stacked)
 
 
 def _expert_ffn(w_gate, w_up, w_down, x, sp_cfg: SparsityConfig):

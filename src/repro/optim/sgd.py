@@ -11,7 +11,8 @@ master (a single fused ``lax.top_k`` per parameter — nm_mask_pair),
 applies SR-STE's sparse-refined decay from the *same* masks (the copy
 stored at the previous WU), and writes the bf16 FF/BP operands — pruned
 copies, or SORE-packed ``(vals, idx)`` where eligible — that the next
-iteration's FF and BP load directly (core/bdwp.nm_linear_pregen).
+iteration's FF and BP load directly (core/operand.nm_apply over
+PregenOp leaves).
 Forward passes never touch fp32 and never re-derive a mask: the lowered
 train step carries exactly one top_k/sort selection per prunable
 parameter (down from one per consumer — FF forward, FF remat recompute,
@@ -35,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bdwp
+from repro.core import operand as O
 from repro.core.sparsity import (SparsityConfig, _move_axis_last, nm_mask,
                                  nm_mask_pair, nm_mask_shared,
                                  nm_pack_from_mask, nm_unpack_n)
@@ -98,8 +100,8 @@ def _pregen_masks(w, sp_cfg: SparsityConfig):
     return ff_mask, bp_mask, decay_mask
 
 
-def _pregen_leaf(w, sp_cfg: SparsityConfig, pack: bool) -> dict:
-    """fp32 weight -> {"ff"|("vals","idx"), "bp", "mask"} operand dict.
+def _pregen_leaf(w, sp_cfg: SparsityConfig, pack: bool) -> O.PregenOp:
+    """fp32 weight -> PregenOp{ff | (vals, idx), bp, mask} operand leaf.
 
     Masking commutes with the bf16 cast (cast(0) == 0), so the pruned
     bf16 operands equal what masking the bf16 copy would give — but the
@@ -109,23 +111,22 @@ def _pregen_leaf(w, sp_cfg: SparsityConfig, pack: bool) -> dict:
     ff_mask, bp_mask, decay_mask = _pregen_masks(w, sp_cfg)
     ff = jnp.where(ff_mask, w, 0.0) if ff_mask is not None else w
     bp = jnp.where(bp_mask, w, 0.0) if bp_mask is not None else w
-    leaf = {"bp": bp.astype(jnp.bfloat16), "mask": decay_mask}
     ff16 = ff.astype(jnp.bfloat16)
     if pack and ff_mask is not None and sp_cfg.granularity == "element":
         # SORE packing along the contraction axis, sort-free from the mask
         vals, idx = nm_pack_from_mask(ff16, ff_mask, sp_cfg.n, sp_cfg.m,
                                       axis=w.ndim - 2)
-        leaf["vals"], leaf["idx"] = vals, idx
-    else:
-        leaf["ff"] = ff16
-    return leaf
+        return O.PregenOp(bp=bp.astype(jnp.bfloat16), vals=vals, idx=idx,
+                          mask=decay_mask, cfg=sp_cfg)
+    return O.PregenOp(bp=bp.astype(jnp.bfloat16), ff=ff16, mask=decay_mask,
+                      cfg=sp_cfg)
 
 
 def pregen_tree(master, sp_cfg: Optional[SparsityConfig], *,
                 pack: bool = False, bare_sites: bool = True):
     """Build the full pre-generated compute tree from fp32 master.
 
-    Prunable weights (bdwp.pregen_site) become operand dicts — both the
+    Prunable weights (bdwp.pregen_site) become PregenOp leaves — both the
     ``{"w": ...}`` leaf-dict sites and the bare-array MoE expert stacks
     (masks per expert along the last-two contraction/output axes, one
     fused ``nm_mask_pair`` over the whole stacked leaf); every other
@@ -160,7 +161,7 @@ def pregen_grads(grads_compute):
     the BP operand (always dense-shaped); everything else maps through.
     """
     def walk(node):
-        if bdwp.is_pregen(node):
+        if bdwp.is_pregen(node):  # PregenOp or legacy operand dict
             return node["bp"]
         if isinstance(node, dict):
             return {k: walk(v) for k, v in node.items()}
@@ -177,7 +178,7 @@ def stored_decay_masks(compute) -> dict:
         if not isinstance(node, dict):
             return
         for k, v in node.items():
-            if bdwp.is_pregen(v):
+            if bdwp.is_pregen(v):  # PregenOp or legacy operand dict
                 if v.get("mask") is not None:
                     out["/".join(path + (k,))] = v["mask"]
             elif isinstance(v, dict):
@@ -261,17 +262,18 @@ def update(state, grads, opt_cfg: SGDConfig, sp_cfg: SparsityConfig,
         idx = jnp.transpose(pi.reshape(*shp[:-1], kc), inv)
         ff_mask = nm_unpack_n(jnp.ones_like(vals, dtype=bool), idx,
                               sp_cfg.n, sp_cfg.m, axis=ff_ax)
-        leaf = {"mask": ff_mask}
         if sp_cfg.prunes_bp_weights():  # bdwp: BP operand jnp-side
             bp_mask = nm_mask(w_new, sp_cfg.n, sp_cfg.m, axis=w.ndim - 1)
-            leaf["bp"] = jnp.where(bp_mask, w_new, 0.0).astype(jnp.bfloat16)
+            bp_op = jnp.where(bp_mask, w_new, 0.0).astype(jnp.bfloat16)
         else:  # srste: BP runs dense
-            leaf["bp"] = w_new.astype(jnp.bfloat16)
+            bp_op = w_new.astype(jnp.bfloat16)
         if pack and sp_cfg.granularity == "element":
-            leaf["vals"], leaf["idx"] = vals, idx
+            leaf = O.PregenOp(bp=bp_op, vals=vals, idx=idx, mask=ff_mask,
+                              cfg=sp_cfg)
         else:
-            leaf["ff"] = nm_unpack_n(vals, idx, sp_cfg.n, sp_cfg.m,
-                                     axis=ff_ax)
+            leaf = O.PregenOp(bp=bp_op, mask=ff_mask, cfg=sp_cfg,
+                              ff=nm_unpack_n(vals, idx, sp_cfg.n, sp_cfg.m,
+                                             axis=ff_ax))
         return w_new, v_new, leaf
 
     def upd(name, w, g, v):
@@ -289,7 +291,7 @@ def update(state, grads, opt_cfg: SGDConfig, sp_cfg: SparsityConfig,
     new_master = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
     new_mom = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
     # pre-generation: the compute operands written at WU time (Fig. 11c);
-    # pregen-dict "leaves" ride through unflatten as opaque subtrees
+    # PregenOp "leaves" ride through unflatten as opaque pytree subtrees
     compute = jax.tree_util.tree_unflatten(tdef, [o[2] for o in outs])
     new_state = {"master": new_master, "momentum": new_mom,
                  "step": state["step"] + 1}

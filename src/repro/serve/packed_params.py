@@ -8,9 +8,10 @@ contraction axis into
     vals (…, K·N/M, F)   — surviving values, weight dtype
     idx  (…, K·N/M, F)   — uint8 within-group offsets (0..M-1)
 
-and the decode matmuls consume the pair directly through
-``kernels/nm_spmm`` (Pallas on TPU, oracle elsewhere) — weights stream
-from HBM at ~N/M of the dense bytes instead of being re-masked dense.
+and each eligible leaf becomes an ``operand.PackedOp`` — the decode
+matmuls consume the pair directly through ``nm_apply`` -> ``kernels/
+nm_spmm`` (Pallas on TPU, oracle elsewhere): weights stream from HBM at
+~N/M of the dense bytes instead of being re-masked dense.
 
 Element mode keeps the paper-faithful per-column patterns (exactly the
 mask BDWP trained with), unlike ``bdwp.pack_tree_shared`` whose shared
@@ -28,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bdwp
+from repro.core import operand as O
 from repro.core.sparsity import SparsityConfig, nm_pack
 
 
@@ -40,8 +42,10 @@ def pack_tree_element(params, cfg: SparsityConfig, pspecs=None):
 
     Every eligible ``{"w": (…, K, F)}`` leaf-dict (same FF-direction
     eligibility as shared packing: ``bdwp.serve_packable``) becomes
-    ``{"vals", "idx"(, "b")}``; stacked (L, K, F) weights pack per layer.
-    Returns ``(packed_tree, stats)`` where stats counts actual bytes.
+    ``{"w": operand.PackedOp(vals, idx)(, "b")}`` — the bias and the
+    leaf-dict shape survive, only the weight leaf changes type; stacked
+    (L, K, F) weights pack per layer.  Returns ``(packed_tree, stats)``
+    where stats counts actual bytes.
 
     With ``pspecs`` (matching tree of resolved PartitionSpecs) given,
     returns ``(packed_tree, stats, packed_pspecs)``: vals and idx are
@@ -81,7 +85,7 @@ def pack_tree_element(params, cfg: SparsityConfig, pspecs=None):
                                            axis=ww.ndim - 2), w)
                 else:
                     vals, idx = nm_pack(w, cfg.n, cfg.m, axis=w.ndim - 2)
-                new = {"vals": vals, "idx": idx}
+                new = {"w": O.PackedOp(vals, idx, cfg)}
                 stats["n_packed"] += 1
                 stats["dense_bytes"] += _leaf_bytes(w)
                 stats["packed_bytes"] += _leaf_bytes(vals) + _leaf_bytes(idx)
@@ -89,8 +93,9 @@ def pack_tree_element(params, cfg: SparsityConfig, pspecs=None):
                     _leaf_bytes(vals) + int(idx.size) * idx_bits // 8)
                 new_spec = None
                 if spec_node is not None:
-                    new_spec = {"vals": spec_node["w"],
-                                "idx": spec_node["w"]}
+                    # vals and idx are rank-preserving: both keep w's spec
+                    new_spec = {"w": O.PackedOp(spec_node["w"],
+                                                spec_node["w"], cfg)}
                 if "b" in node:
                     new["b"] = node["b"]
                     stats["other_bytes"] += _leaf_bytes(node["b"])
@@ -122,10 +127,10 @@ def pack_tree_element(params, cfg: SparsityConfig, pspecs=None):
 class PackedParamStore:
     """Packed weights + byte accounting; ``.params`` plugs into forward().
 
-    ``models.layers.dense_apply`` recognizes element-packed leaf-dicts
-    (idx.ndim == vals.ndim) and routes them through the nm_spmm kernel,
-    so the whole model runs from the compact representation without any
-    model-code changes.
+    ``models.layers.dense_apply`` consumes the ``operand.PackedOp``
+    leaves through ``nm_apply`` -> the nm_spmm kernel, so the whole
+    model runs from the compact representation without any model-code
+    changes.
     """
 
     params: dict

@@ -209,19 +209,21 @@ def pregen_pspecs(compute_tree, master_pspecs):
 
     The compute tree mirrors master except that prunable weights —
     ``{"w": ...}`` dict sites and bare-array MoE expert stacks alike —
-    became operand dicts ({"ff"|("vals","idx"), "bp", "mask"}).  Every
-    operand inherits the master weight's spec: ff/bp/mask are
-    dense-shaped (expert-parallel sharding of a stacked leaf carries
+    became ``operand.PregenOp`` leaves ({ff | (vals, idx), bp, mask}).
+    Every operand child inherits the master weight's spec: ff/bp/mask
+    are dense-shaped (expert-parallel sharding of a stacked leaf carries
     straight over), and the packed vals/idx only shrink the contraction
     dim (ndim-2) by n/m — a mesh axis the group guard admitted for w
     (per-shard multiple of M along K) divides Kc with per-shard runs
     whole multiples of N, so the same spec keeps packed runs group-whole
     under SPMD (``assert_nm_unsplit`` re-checks).
     """
-    from repro.core import bdwp
+    from repro.core import bdwp, operand as O
 
     def walk(c, s):
-        if bdwp.is_pregen(c):
+        if isinstance(c, O.SparseOperand):
+            return c.map_children(lambda _: s)
+        if bdwp.is_pregen(c):  # legacy operand dicts
             return {k: s for k in c}
         if isinstance(c, dict):
             return {k: walk(v, s[k]) for k, v in c.items()}
@@ -236,11 +238,15 @@ def assert_nm_unsplit(pspecs_tree, params_tree, mesh: Mesh, sp_cfg) -> None:
     Dense prunable ``w`` leaves must keep per-shard size a multiple of M
     along every grouped axis (``nm_group_multiples``); element-packed
     ``vals``/``idx`` leaves a multiple of N along the compact axis
-    (ndim-2).  Raises AssertionError naming the offending leaf.  The
-    pspec tree may hold PartitionSpecs or NamedShardings.
+    (ndim-2).  Operand nodes (``operand.PregenOp`` compute leaves,
+    ``operand.PackedOp`` serving leaves) are recognized by type; the
+    equivalent legacy dict layouts keep working.  Raises AssertionError
+    naming the offending leaf.  The pspec tree may hold PartitionSpecs
+    or NamedShardings.
     """
     if sp_cfg is None or getattr(sp_cfg, "is_dense", True):
         return
+    from repro.core import operand as O
 
     def as_spec(x) -> P:
         return x.spec if isinstance(x, NamedSharding) else x
@@ -258,7 +264,48 @@ def assert_nm_unsplit(pspecs_tree, params_tree, mesh: Mesh, sp_cfg) -> None:
     def is_spec(x):
         return isinstance(x, (P, NamedSharding))
 
+    def check_pregen(name, spec_node, p_node):
+        """PregenOp (or legacy operand-dict) site: pruned operands carry
+        M-groups on their own axis; packed vals/idx carry N-runs on the
+        compact axis (ndim-2)."""
+        if sp_cfg.prunes_ff_weights():
+            if "ff" in spec_node and is_spec(spec_node["ff"]):
+                shape = tuple(p_node["ff"].shape)
+                check(name, "ff", as_spec(spec_node["ff"]), shape,
+                      {len(shape) - 2: sp_cfg.m})
+            for key in ("vals", "idx"):
+                if key in spec_node and is_spec(spec_node[key]):
+                    shape = tuple(p_node[key].shape)
+                    check(name, key, as_spec(spec_node[key]), shape,
+                          {len(shape) - 2: sp_cfg.n})
+        if sp_cfg.prunes_bp_weights() and is_spec(spec_node["bp"]):
+            shape = tuple(p_node["bp"].shape)
+            check(name, "bp", as_spec(spec_node["bp"]), shape,
+                  {len(shape) - 1: sp_cfg.m})
+
     def walk(spec_node, p_node, path):
+        if isinstance(spec_node, O.PregenOp):
+            check_pregen("/".join(str(k) for k in path), spec_node, p_node)
+            return
+        if isinstance(spec_node, O.PackedOp):
+            # element-packed serving operand: N-runs on the compact axis
+            name = "/".join(str(k) for k in path)
+            for key in ("vals", "idx"):
+                if is_spec(spec_node[key]):
+                    shape = tuple(p_node[key].shape)
+                    check(name, key, as_spec(spec_node[key]), shape,
+                          {len(shape) - 2: sp_cfg.n})
+            return
+        if isinstance(spec_node, O.SharedOp):
+            # shared-mode: vals carry the compact axis; per-row idx has
+            # no N-run constraint
+            name = "/".join(str(k) for k in path)
+            if is_spec(spec_node["vals"]):
+                shape = tuple(p_node["vals"].shape)
+                if len(shape) >= 2:
+                    check(name, "vals", as_spec(spec_node["vals"]), shape,
+                          {len(shape) - 2: sp_cfg.n})
+            return
         if is_spec(spec_node):
             # bare-array leaf (MoE expert stack / shared-expert mat):
             # M-groups on the last two axes within each expert, and the
@@ -278,23 +325,8 @@ def assert_nm_unsplit(pspecs_tree, params_tree, mesh: Mesh, sp_cfg) -> None:
             name = "/".join(str(k) for k in path)
             if "bp" in spec_node and ("ff" in spec_node
                                       or "vals" in spec_node):
-                # pre-generated operand dict (optim/sgd): the pruned
-                # operands carry M-groups on their own axis; packed
-                # vals/idx carry N-runs on the compact axis (ndim-2)
-                if sp_cfg.prunes_ff_weights():
-                    if "ff" in spec_node and is_spec(spec_node["ff"]):
-                        shape = tuple(p_node["ff"].shape)
-                        check(name, "ff", as_spec(spec_node["ff"]), shape,
-                              {len(shape) - 2: sp_cfg.m})
-                    for key in ("vals", "idx"):
-                        if key in spec_node and is_spec(spec_node[key]):
-                            shape = tuple(p_node[key].shape)
-                            check(name, key, as_spec(spec_node[key]), shape,
-                                  {len(shape) - 2: sp_cfg.n})
-                if sp_cfg.prunes_bp_weights() and is_spec(spec_node["bp"]):
-                    shape = tuple(p_node["bp"].shape)
-                    check(name, "bp", as_spec(spec_node["bp"]), shape,
-                          {len(shape) - 1: sp_cfg.m})
+                # legacy pre-generated operand dict (pre-operand era)
+                check_pregen(name, spec_node, p_node)
                 return
             if "w" in spec_node and is_spec(spec_node["w"]):
                 shape = tuple(p_node["w"].shape)

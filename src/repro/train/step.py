@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import operand as O
 from repro.core.sparsity import SparsityConfig
 from repro.models import encdec as E
 from repro.models import transformer_lm as T
@@ -66,7 +67,8 @@ def merge_compute(diff, meta):
 
 def lm_train_step(state, batch, *, cfg, sp_cfg, opt_cfg, mesh, names,
                   compress=False, grad_pspecs=None, seq_parallel=False,
-                  pregen=True, pregen_pack=False, use_pallas=False):
+                  pregen=True, pregen_pack=False, use_pallas=False,
+                  nm_backend="auto"):
     def run_model(compute):
         hidden, _, aux = T.forward(compute, batch["tokens"], cfg, sp_cfg,
                                    prefix_embeds=batch.get("prefix_embeds"))
@@ -76,10 +78,13 @@ def lm_train_step(state, batch, *, cfg, sp_cfg, opt_cfg, mesh, names,
         loss = T.lm_loss(compute, hidden, labels, cfg)
         return loss + AUX_COEF * aux, (loss, aux)
 
-    with R.activation_sharding(mesh, R.batch_axes(mesh), sp=seq_parallel):
+    with R.activation_sharding(mesh, R.batch_axes(mesh), sp=seq_parallel), \
+            O.backend_scope(nm_backend):
         if pregen:
             # FF/BP load the operands written at the previous WU — no
-            # per-step master cast, no in-model mask derivation
+            # per-step master cast, no in-model mask derivation; packed
+            # (vals, idx) FF operands stream through kernels/nm_spmm on
+            # the pallas backend (nm_backend)
             diff, meta = split_compute(state["compute"])
             (total, (loss, aux)), gdiff = jax.value_and_grad(
                 lambda d: run_model(merge_compute(d, meta)),
@@ -133,7 +138,8 @@ def init_train_state(key, cfg, family="lm", compress=False, sp_cfg=None,
 
 
 def encdec_train_step(state, batch, *, cfg, sp_cfg, opt_cfg, mesh, names,
-                      pregen=True, pregen_pack=False, use_pallas=False):
+                      pregen=True, pregen_pack=False, use_pallas=False,
+                      nm_backend="auto"):
     def run_model(compute):
         enc = E.encode(compute, batch["frames"], cfg, sp_cfg)
         hidden, _ = E.decode(compute, batch["tokens"], enc, cfg, sp_cfg)
@@ -144,7 +150,8 @@ def encdec_train_step(state, batch, *, cfg, sp_cfg, opt_cfg, mesh, names,
         loss = (logz - gold).mean()
         return loss, loss
 
-    with R.activation_sharding(mesh, R.batch_axes(mesh)):
+    with R.activation_sharding(mesh, R.batch_axes(mesh)), \
+            O.backend_scope(nm_backend):
         if pregen:
             diff, meta = split_compute(state["compute"])
             (_, loss), gdiff = jax.value_and_grad(
@@ -289,7 +296,8 @@ def _train_state_pspecs(p_pspecs, aparams, mesh, sp_cfg, *, compress,
 def build_lm_train(cfg, mesh: Mesh, sp_cfg: SparsityConfig,
                    opt_cfg: sgd.SGDConfig, *, compress=False,
                    donate=True, seq_parallel=False, pregen=True,
-                   pregen_pack=False, use_pallas=False) -> StepBundle:
+                   pregen_pack=False, use_pallas=False,
+                   nm_backend="auto") -> StepBundle:
     aparams, specs = T.init(jax.random.PRNGKey(0), cfg, abstract=True)
     rules = R.TRAIN_RULES
     # N:M-aware resolution: a mesh axis that would split an M-group
@@ -313,7 +321,7 @@ def build_lm_train(cfg, mesh: Mesh, sp_cfg: SparsityConfig,
                  mesh=mesh, names=names, compress=compress,
                  grad_pspecs=p_pspecs, seq_parallel=seq_parallel,
                  pregen=pregen, pregen_pack=pregen_pack,
-                 use_pallas=use_pallas)
+                 use_pallas=use_pallas, nm_backend=nm_backend)
     jitted = jax.jit(fn,
                      in_shardings=(state_sh, batch_sh),
                      out_shardings=(state_sh, None),
@@ -323,7 +331,7 @@ def build_lm_train(cfg, mesh: Mesh, sp_cfg: SparsityConfig,
 
 def build_encdec_train(cfg, mesh: Mesh, sp_cfg, opt_cfg,
                        donate=True, pregen=True, pregen_pack=False,
-                       use_pallas=False) -> StepBundle:
+                       use_pallas=False, nm_backend="auto") -> StepBundle:
     aparams, specs = E.init(jax.random.PRNGKey(0), cfg, abstract=True)
     p_pspecs = R.nm_params_pspecs(specs, R.TRAIN_RULES, aparams, mesh,
                                   sp_cfg)
@@ -341,7 +349,8 @@ def build_encdec_train(cfg, mesh: Mesh, sp_cfg, opt_cfg,
                             is_leaf=lambda x: isinstance(x, P))
     fn = partial(encdec_train_step, cfg=cfg, sp_cfg=sp_cfg, opt_cfg=opt_cfg,
                  mesh=mesh, names=names, pregen=pregen,
-                 pregen_pack=pregen_pack, use_pallas=use_pallas)
+                 pregen_pack=pregen_pack, use_pallas=use_pallas,
+                 nm_backend=nm_backend)
     jitted = jax.jit(fn, in_shardings=(state_sh, batch_sh),
                      out_shardings=(state_sh, None),
                      donate_argnums=(0,) if donate else ())
@@ -405,17 +414,20 @@ def restore_with_pregen(mgr, like_state, step=None, shardings=None, *,
 def _old_compute_shardings(old_compute, new_compute_sh, master_sh):
     """Shardings for a dict-sites-only (pre-MoE) compute structure, so
     the upgrade restore never stages leaves on one device: dict sites
-    match the current compute shardings leaf-for-leaf; bare expert
-    leaves (plain bf16 copies there, operand dicts now) shard like
-    their master weight (same shape)."""
+    (PregenOp there and now) match the current compute shardings
+    leaf-for-leaf; bare expert leaves (plain bf16 copies there, PregenOp
+    operands now) shard like their master weight (same shape)."""
     def walk(old_node, new_sh, m_sh):
+        if isinstance(old_node, O.SparseOperand):
+            return new_sh  # dict sites kept their operand structure
         if isinstance(old_node, dict):
             return {k: walk(old_node[k],
                             new_sh[k] if isinstance(new_sh, dict) else new_sh,
                             m_sh[k] if isinstance(m_sh, dict) else m_sh)
                     for k in old_node}
         # array leaf: a matching leaf sharding, else the master weight's
-        return new_sh if not isinstance(new_sh, dict) else m_sh
+        return new_sh \
+            if not isinstance(new_sh, (dict, O.SparseOperand)) else m_sh
 
     return walk(old_compute, new_compute_sh, master_sh)
 

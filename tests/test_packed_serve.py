@@ -57,11 +57,14 @@ class TestPackTree:
         }
 
     def test_packs_eligible_only(self):
+        from repro.core import operand as O
+
         packed = bdwp.pack_tree_shared(self._params(), SP)
         assert "embed_table" in packed["embed"]          # excluded by name
-        assert "w" in packed["lm_head"]                  # excluded (head)
-        q = packed["blocks"]["attn"]["q_proj"]
-        assert set(q) == {"vals", "idx"}
+        assert not isinstance(packed["lm_head"]["w"],    # excluded (head)
+                              O.SparseOperand)
+        q = packed["blocks"]["attn"]["q_proj"]["w"]
+        assert isinstance(q, O.SharedOp)
         assert q["vals"].shape == (3, 8, 64)             # K 32 -> 8 per layer
         assert q["idx"].shape == (3, 8)
         m = packed["blocks"]["mlp"]["w_in"]
@@ -71,7 +74,7 @@ class TestPackTree:
         params = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self._params())
         packed = bdwp.pack_tree_shared(params, SP)
-        q = packed["blocks"]["attn"]["q_proj"]
+        q = packed["blocks"]["attn"]["q_proj"]["w"]
         assert isinstance(q["vals"], jax.ShapeDtypeStruct)
         assert q["vals"].shape == (3, 8, 64)
 
@@ -86,7 +89,7 @@ class TestPackTree:
             "lm_head": {"w": P(None, "model")},
         }
         _, ps = bdwp.pack_tree_shared(params, SP, pspecs=pspecs)
-        q = ps["blocks"]["attn"]["q_proj"]
+        q = ps["blocks"]["attn"]["q_proj"]["w"]
         assert q["vals"] == P(None, None, "model")
         assert q["idx"] == P(None, None)
 
