@@ -1,21 +1,35 @@
 """Bench regression gate: fresh results/BENCH_*.json vs committed baselines.
 
   PYTHONPATH=src python -m benchmarks.check_regression [--tolerance 0.2]
+  PYTHONPATH=src python -m benchmarks.check_regression --partial
   PYTHONPATH=src python -m benchmarks.check_regression --update
 
 Baselines live in benchmarks/baselines/ (committed — the bench
-trajectory starts here).  Only *deterministic* metrics are gated (byte
-counts, token counts, ratios); wall-clock numbers are recorded in the
-JSON but never compared — CI machines are too noisy.  A gated metric
-drifting more than ``--tolerance`` (default ±20%) from its baseline
-exits nonzero with a per-metric report; ``--update`` rewrites the
-baselines from the fresh results instead (run it when a drift is
-intentional and commit the diff).
+trajectory starts here).  Two kinds of gate:
+
+  * baseline gates (GATES): *deterministic* metrics (byte counts, token
+    counts, ratios) compared against the committed baseline within
+    ``--tolerance`` (default ±20%).  Wall-clock numbers are never
+    compared across machines — CI runners are too noisy.
+  * directional gates (DIRECTIONAL): win-or-fail comparisons evaluated
+    on the FRESH results alone.  Both sides come from the same run on
+    the same machine, so these CAN gate wall-clock: the compressed
+    cross-pod sync must beat the dense sync's step-time median, or the
+    lane goes red.  Directional gates run even under ``--update`` — a
+    losing bench cannot be baselined away.
+
+Coverage is closed both ways: a fresh BENCH_*.json with no GATES entry
+(orphan output) is a hard failure, and a committed baseline with no
+fresh result (orphan baseline) is a hard failure unless ``--partial``
+is passed by jobs that intentionally run a subset of the benches.
+``--update`` rewrites the baselines from the fresh results (run it when
+a drift is intentional and commit the diff).
 """
 
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import os
 import sys
@@ -42,6 +56,8 @@ GATES = {
         "sync.wire_ratio",
         "variants.dense_sync.collectives.total",
         "variants.compressed_sync.collectives.total",
+        "variants.dense_sync.pod_link_bytes",
+        "variants.compressed_sync.pod_link_bytes",
         "variants.dense_sync.hlo_flops",
         "variants.compressed_sync.hlo_flops",
     ],
@@ -67,6 +83,31 @@ GATES = {
         "packed_train.ff_hbm_bytes.packed",
         "packed_train.ff_hbm_bytes.dense",
         "packed_train.ff_hbm_bytes.saving",
+    ],
+}
+
+
+# file -> (lhs dotted path, op, rhs) win-or-fail comparisons evaluated on
+# the FRESH result alone.  rhs is either another dotted path into the same
+# file or a numeric literal.  Both sides of a path-vs-path gate come from
+# one run on one machine, so wall-clock medians are fair game here even
+# though GATES never compares them across machines.
+DIRECTIONAL = {
+    "BENCH_spmd.json": [
+        # the whole point of the compressed sync: it must WIN, not just
+        # ship.  step_ms_median = measured compute + measured pod-crossing
+        # bytes charged at the bench's fixed emulated inter-pod link
+        # (spmd_bench.POD_LINK_GBPS) — so this passes only when the real
+        # compute overhead of compressing is smaller than the wire time
+        # the real byte saving buys
+        ("variants.compressed_sync.step_ms_median", "<=",
+         "variants.dense_sync.step_ms_median"),
+        # and the measured pod-crossing traffic itself must shrink
+        ("variants.compressed_sync.pod_link_bytes", "<=",
+         "variants.dense_sync.pod_link_bytes"),
+        # 2:8 payload (bf16 vals + uint8 idx) must stay ≤ a quarter of the
+        # dense fp32 wire bytes
+        ("sync.wire_ratio", "<=", 0.25),
     ],
 }
 
@@ -116,6 +157,28 @@ def check_file(name: str, fresh_path: str, base_path: str,
     return failures
 
 
+def check_directional(name: str, fresh_path: str) -> list:
+    with open(fresh_path) as f:
+        fresh = _flatten(json.load(f))
+    failures = []
+    for lhs, op, rhs in DIRECTIONAL.get(name, []):
+        left = fresh.get(lhs)
+        right = fresh.get(rhs) if isinstance(rhs, str) else float(rhs)
+        if left is None or right is None:
+            missing = lhs if left is None else rhs
+            failures.append(f"{name}:{missing}: directional gate operand "
+                            f"missing from fresh result")
+            continue
+        ok = left <= right if op == "<=" else left >= right
+        tag = "ok" if ok else "FAIL"
+        rhs_tag = f"{rhs}=" if isinstance(rhs, str) else ""
+        print(f"[{tag}] {name}: {lhs}={left:g} {op} {rhs_tag}{right:g}")
+        if not ok:
+            failures.append(f"{name}: {lhs}={left:g} must be {op} "
+                            f"{rhs}={right:g} (win-or-fail)")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--results", default=RESULTS)
@@ -123,16 +186,41 @@ def main(argv=None) -> int:
     ap.add_argument("--tolerance", type=float, default=0.20)
     ap.add_argument("--update", action="store_true",
                     help="rewrite baselines from fresh results")
+    ap.add_argument("--partial", action="store_true",
+                    help="job runs a subset of the benches: absent fresh "
+                         "results are skips, not orphan-baseline failures")
     args = ap.parse_args(argv)
 
     os.makedirs(args.baselines, exist_ok=True)
     failures, checked = [], 0
+
+    # coverage closure, fresh side: every results/BENCH_*.json must have a
+    # gate entry, or the bench silently escapes regression tracking
+    for path in sorted(glob.glob(os.path.join(args.results, "BENCH_*.json"))):
+        name = os.path.basename(path)
+        if name not in GATES:
+            failures.append(f"{name}: fresh result has no GATES entry "
+                            f"(orphan output — add gates or delete the bench)")
+            print(f"[FAIL] {failures[-1]}")
+
     for name in sorted(GATES):
         fresh_path = os.path.join(args.results, name)
         base_path = os.path.join(args.baselines, name)
         if not os.path.exists(fresh_path):
-            print(f"[skip] {name}: no fresh result in {args.results}")
+            # coverage closure, baseline side: a committed baseline whose
+            # bench stopped emitting would drift forever unnoticed
+            if os.path.exists(base_path) and not args.partial:
+                failures.append(
+                    f"{name}: baseline committed but no fresh result in "
+                    f"{args.results} (orphan baseline — run the bench or "
+                    f"pass --partial for subset jobs)")
+                print(f"[FAIL] {failures[-1]}")
+            else:
+                print(f"[skip] {name}: no fresh result in {args.results}")
             continue
+        # directional gates run even under --update: a losing bench result
+        # must never be baselined into green
+        failures.extend(check_directional(name, fresh_path))
         if args.update:
             with open(fresh_path) as f:
                 data = f.read()

@@ -6,14 +6,41 @@
 Builds the real sharded train step on a ("pod","data","model") mesh
 over every visible device (the module forces 8 CPU devices when it owns
 the process), runs it both with dense cross-pod gradient sync and with
-the N:M-compressed path (optim/compress), and records:
+the N:M-compressed path (optim/compress), and records per variant:
 
-  * per-step wall time (median of the timed steps, compile excluded) —
-    informational only, CI machines are too noisy to gate on it;
-  * per-chip collective link bytes from the optimized HLO (hlo_cost's
-    ring accounting) — deterministic, gated by check_regression;
-  * the analytic wire-format arithmetic: fp32 grad bytes vs packed
-    bf16-vals + u8-idx bytes over the compressible leaves.
+  * compute_ms_median — measured steady-state wall time (the compile
+    step AND the warmup steps are discarded).  Machine-noisy in absolute
+    terms; both variants run in one process on one machine, so the
+    directional comparison is fair;
+  * pod_link_bytes — the per-chip ring link bytes of collectives whose
+    replica groups SPAN pods, measured from the optimized HLO
+    (hlo_cost.analyze(pod_block=...)).  Deterministic;
+  * pod_wire_ms / step_ms_median — the emulated inter-pod link model.
+    The CI hosts force 8 XLA devices onto shared memory: every
+    collective is a memcpy, so raw wall time cannot see the one cost
+    the compressed sync exists to remove — inter-pod wire time.  The
+    bench therefore charges each variant's MEASURED pod-crossing bytes
+    at a fixed POD_LINK_GBPS (1 Gb/s commodity Ethernet — the canonical
+    setting of the gradient-compression literature, e.g. Deep Gradient
+    Compression, arXiv 1712.01887) and reports
+
+        step_ms_median = compute_ms_median
+                       + pod_link_bytes * device_count / link_bw
+
+    applied identically to both variants: intra-pod collectives are
+    free (fast fabric), pod-crossing ones pay the modeled link.  The
+    granularity is WHOLE-HOST on both terms, deliberately: the forced
+    devices serialize onto the host's cores, so compute_ms_median is
+    the sum over all chips' compute — and the emulated host likewise
+    has ONE physical NIC shared by all its chips, so wall wire time is
+    the sum over all chips' pod-crossing link bytes (per-chip ring
+    bytes × device_count), not one chip's.  The win-or-fail gate in
+    check_regression compares step_ms_median, so a compressed sync
+    only wins when its REAL measured compute overhead is smaller than
+    the wire time its REAL measured byte saving buys;
+  * the analytic wire-format arithmetic (optim/compress.wire_bytes):
+    fp32 grad bytes vs the bucketed packed slab's bf16-vals + u8-idx
+    bytes, gated on wire_ratio.
 
 Writes results/BENCH_spmd.json.
 """
@@ -36,45 +63,51 @@ import numpy as np
 from jax.sharding import NamedSharding
 
 from repro.configs import get_arch
-from repro.core.sparsity import SparsityConfig, nm_pack
+from repro.core.sparsity import SparsityConfig
 from repro.data import synthetic as D
 from repro.launch import hlo_cost
 from repro.launch import spmd
 from repro.models import transformer_lm as T
+from repro.optim import compress as C
 from repro.optim import sgd
 from repro.train import step as ST
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 
+# Emulated inter-pod link bandwidth, Gbit/s.  1 GbE is the canonical
+# gradient-compression setting (DGC, arXiv 1712.01887); the pod-crossing
+# bytes it is applied to are MEASURED from the compiled HLO, never
+# assumed.  Fixed — not a CLI knob — so the win-or-fail CI gate always
+# compares against the same link model.
+POD_LINK_GBPS = 1.0
 
-def grad_sync_bytes(params, sp_cfg: SparsityConfig) -> dict:
-    """Wire bytes of one cross-pod gradient sync, dense vs packed."""
-    dense = packed = ragged = 0
-    for leaf in jax.tree.leaves(params):
-        nbytes = int(np.prod(leaf.shape)) * 4  # fp32 grads
-        dense += nbytes
-        if leaf.ndim and int(np.prod(leaf.shape)) % sp_cfg.m == 0:
-            vals, idx = jax.eval_shape(
-                lambda l: nm_pack(
-                    jnp.zeros((int(np.prod(l.shape)) // sp_cfg.m,
-                               sp_cfg.m), jnp.bfloat16),
-                    sp_cfg.n, sp_cfg.m, axis=-1), leaf)
-            packed += (int(np.prod(vals.shape)) * 2
-                       + int(np.prod(idx.shape)) * 1)
-        else:
-            packed += nbytes  # rides uncompressed
-            ragged += nbytes
+
+def grad_sync_bytes(params, sp_cfg: SparsityConfig,
+                    gc_cfg: "C.GradCompressConfig | None" = None) -> dict:
+    """Wire bytes of one cross-pod gradient sync, dense vs packed —
+    the same bucketed-slab accounting optim/compress ships (bf16 vals +
+    u8 idx per M-group over the compressible slab, fp32 raggeds)."""
+    gc = gc_cfg or C.GradCompressConfig.from_sparsity(sp_cfg)
+    leaves = jax.tree.leaves(params)
+    dense = sum(int(np.prod(leaf.shape)) * 4 for leaf in leaves)
+    total = C.err_state_elems(params, gc.m)
+    ragged = sum(int(np.prod(leaf.shape)) for leaf in leaves
+                 if not C.compressible_shape(leaf.shape, gc.m))
+    packed = C.wire_bytes(total, ragged, gc)
     return {"dense_bytes": dense, "packed_bytes": packed,
-            "uncompressed_ragged_bytes": ragged,
+            "uncompressed_ragged_bytes": ragged * 4,
+            "slab_elems": total,
+            "buckets": len(C.plan_buckets(total, gc.bucket_elems, gc.m)),
             "wire_ratio": packed / max(dense, 1)}
 
 
 def bench_variant(cfg, mesh, sp_cfg, opt_cfg, *, compress: bool,
-                  batch: int, seq: int, steps: int) -> dict:
-    bundle = ST.build_lm_train(cfg, mesh, sp_cfg, opt_cfg, donate=False,
+                  batch: int, seq: int, steps: int,
+                  warmup: int = 2) -> dict:
+    bundle = ST.build_lm_train(cfg, mesh, sp_cfg, opt_cfg, donate=True,
                                compress=compress)
     state = ST.init_train_state(jax.random.PRNGKey(0), cfg,
-                                compress=compress, sp_cfg=sp_cfg)
+                                compress=compress, sp_cfg=sp_cfg, mesh=mesh)
     state = jax.device_put(state, bundle.state_shardings)
     sh = {k: NamedSharding(mesh, ps)
           for k, ps in bundle.input_pspecs.items()}
@@ -82,9 +115,15 @@ def bench_variant(cfg, mesh, sp_cfg, opt_cfg, *, compress: bool,
 
     _, first = next(stream)
     lowered = bundle.step_fn.lower(state, first)
-    analysis = hlo_cost.analyze(lowered.compile().as_text())
+    pod_block = jax.device_count() // mesh.shape.get("pod", 1)
+    analysis = hlo_cost.analyze(lowered.compile().as_text(),
+                                pod_block=pod_block)
 
-    state, _ = bundle.step_fn(state, first)  # compile + warmup
+    state, _ = bundle.step_fn(state, first)  # compile step (never timed)
+    jax.block_until_ready(state)
+    for _ in range(warmup):  # discarded: medians are steady-state only
+        _, b = next(stream)
+        state, metrics = bundle.step_fn(state, b)
     jax.block_until_ready(state)
     times = []
     for _ in range(steps):
@@ -93,9 +132,23 @@ def bench_variant(cfg, mesh, sp_cfg, opt_cfg, *, compress: bool,
         state, metrics = bundle.step_fn(state, b)
         jax.block_until_ready(metrics["loss"])
         times.append(time.perf_counter() - t0)
+    compute_ms = float(np.median(times) * 1e3)
+    pod_link_bytes = analysis["collectives"]["pod_crossing"]
+    # measured pod-crossing bytes charged at the fixed emulated link.
+    # × device_count: compute_ms is the whole host's serialized compute,
+    # so the wire term is the whole host's traffic through its one NIC
+    # (per-chip ring bytes × chips), keeping both terms host-granular.
+    host_bytes = pod_link_bytes * jax.device_count()
+    pod_wire_ms = host_bytes * 8 / (POD_LINK_GBPS * 1e9) * 1e3
     return {
-        "step_ms_median": float(np.median(times) * 1e3),
-        "step_ms_all": [round(t * 1e3, 2) for t in times],
+        "compute_ms_median": compute_ms,
+        "compute_ms_all": [round(t * 1e3, 2) for t in times],
+        "pod_link_bytes": pod_link_bytes,
+        "pod_link_gbps": POD_LINK_GBPS,
+        "pod_wire_ms": round(pod_wire_ms, 3),
+        "step_ms_median": compute_ms + pod_wire_ms,
+        "warmup_steps": warmup,
+        "timed_steps": len(times),
         "final_loss": float(metrics["loss"]),
         "collectives": analysis["collectives"],
         "hlo_flops": analysis["flops"],
@@ -107,7 +160,11 @@ def main(smoke: bool = False, out_path: str | None = None) -> dict:
     cfg = arch.smoke
     sp_cfg = SparsityConfig(n=2, m=8, method="bdwp")
     opt_cfg = sgd.SGDConfig(lr=0.1)
-    batch, seq, steps = (8, 32, 3) if smoke else (8, 64, 8)
+    # enough timed steps for a stable median (odd count → the median is
+    # one real sample, robust to transient host-contention outliers):
+    # the directional win gate compares the two variants' medians from
+    # this one process
+    batch, seq, steps = (8, 32, 11) if smoke else (8, 64, 11)
 
     n_dev = jax.device_count()
     mesh = spmd.make_spmd_mesh("pod,data,model")
@@ -119,8 +176,10 @@ def main(smoke: bool = False, out_path: str | None = None) -> dict:
                                        compress=compress, batch=batch,
                                        seq=seq, steps=steps)
         v = variants[name]
-        print(f"{name:16s} {v['step_ms_median']:8.1f} ms/step  "
-              f"coll={v['collectives']['total']:>12,} B/chip  "
+        print(f"{name:16s} {v['step_ms_median']:8.1f} ms/step "
+              f"(compute {v['compute_ms_median']:.1f} + pod wire "
+              f"{v['pod_wire_ms']:.1f} @ {POD_LINK_GBPS:g}Gb/s)  "
+              f"pod-crossing={v['pod_link_bytes']:>9,} B/chip  "
               f"loss={v['final_loss']:.4f}")
 
     params, _ = T.init(jax.random.PRNGKey(0), cfg, abstract=True)

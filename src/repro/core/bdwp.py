@@ -101,6 +101,8 @@ def pregen_ff_operand(pg, cfg: SparsityConfig) -> jax.Array:
 
     if "vals" in pg:
         return decompress_nm(pg["vals"], pg["idx"], cfg.n, cfg.m, axis=-2)
+    if "ff" not in pg:  # transposable: the one stored operand serves both
+        return pg["bp"]
     return pg["ff"]
 
 

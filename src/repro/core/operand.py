@@ -175,18 +175,27 @@ class MaskedOp(SparseOperand):
 class PregenOp(SparseOperand):
     """Pre-generated WU-time operands (optim/sgd, paper Fig. 11c).
 
-    Exactly one of ``ff`` (dense-layout bf16 FF operand) or
+    At most one of ``ff`` (dense-layout bf16 FF operand) or
     ``vals``+``idx`` (SORE-packed FF operand along the contraction axis)
     is present; ``bp`` always is (its cotangent carries the dense
     straight-through WU gradient); ``mask`` is the stored SR-STE decay
-    mask (optional)."""
+    mask (optional).
+
+    With a *transposable* cfg (arXiv 2102.08124: one mask N:M in both
+    orientations) a bare ``bp`` operand is also valid — the same stored
+    array serves FF and BP, so no separate ``ff`` leaf exists and the
+    pregen weight state halves."""
 
     _FIELDS = ("bp", "ff", "idx", "mask", "vals")  # alphabetical — see above
 
     def __init__(self, *, bp, ff=None, vals=None, idx=None, mask=None,
                  cfg: SparsityConfig | None = None):
-        if (ff is None) == (vals is None):
-            raise ValueError("PregenOp needs exactly one of ff | (vals, idx)")
+        transposable = cfg is not None and getattr(cfg, "transposable", False)
+        if ff is not None and vals is not None:
+            raise ValueError("PregenOp needs at most one of ff | (vals, idx)")
+        if ff is None and vals is None and not transposable:
+            raise ValueError("PregenOp needs exactly one of ff | (vals, idx)"
+                             " (bp-only operands require a transposable cfg)")
         if (vals is None) != (idx is None):
             raise ValueError("PregenOp packed form needs both vals and idx")
         present = {"bp": bp, "ff": ff, "idx": idx, "mask": mask, "vals": vals}
@@ -199,6 +208,11 @@ class PregenOp(SparseOperand):
     @property
     def is_packed(self) -> bool:
         return "vals" in self.fields
+
+    @property
+    def is_transposable(self) -> bool:
+        return self.cfg is not None and getattr(self.cfg, "transposable",
+                                                False)
 
 
 @_register
@@ -454,6 +468,43 @@ def _packed_pregen_bwd(n, m, use_pallas, res, g):
 packed_pregen_linear.defvjp(_packed_pregen_fwd, _packed_pregen_bwd)
 
 
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def packed_pregen_linear_t(x, vals, idx, bp, n: int, m: int,
+                           use_pallas: bool = True):
+    """Transposable-mask packed matmul (arXiv 2102.08124): the ONE
+    stored mask is N:M along both the contraction and the output axis,
+    so the packed ``(vals, idx)`` pair serves FF *and* BP.  The forward
+    is ``packed_pregen_linear``'s (nm_spmm on the pair); dgrad
+    decompresses the pair (select-based, exact — decompressed == the
+    dense ``bp`` copy bitwise, same mask, same bf16 values) and
+    contracts g @ w^T instead of reading ``bp``.  ``bp`` therefore only
+    carries the dense straight-through WU gradient on its cotangent —
+    no op ever reads the array, so the lowered step loads one weight
+    operand per layer instead of two."""
+    y, _ = _packed_pregen_fwd(x, vals, idx, bp, n, m, use_pallas)
+    return y
+
+
+def _packed_pregen_t_bwd(n, m, use_pallas, res, g):
+    x, vals, idx, bp = res
+    from repro.kernels.nm_spmm_shared import decompress_nm
+
+    stack = bp.ndim - 2
+    gc = g.astype(x.dtype)
+    g2 = gc.reshape(*gc.shape[:stack], -1, gc.shape[-1])
+    x2 = x.reshape(*x.shape[:stack], -1, x.shape[-1])
+    w_bp = decompress_nm(vals, idx, n, m, axis=-2)
+    dx = jnp.matmul(g2, jnp.swapaxes(w_bp, -1, -2).astype(gc.dtype))
+    dx = dx.reshape(x.shape).astype(x.dtype)
+    dw = jnp.matmul(jnp.swapaxes(x2, -1, -2), g2,
+                    preferred_element_type=jnp.float32)
+    didx = np.zeros(idx.shape, dtype=jax.dtypes.float0)
+    return dx, jnp.zeros_like(vals), didx, dw.astype(bp.dtype)
+
+
+packed_pregen_linear_t.defvjp(_packed_pregen_fwd, _packed_pregen_t_bwd)
+
+
 # ---------------------------------------------------------------------------
 # Custom-VJP cores — conv view (NHWC x HWIO -> NHWC)
 # ---------------------------------------------------------------------------
@@ -561,13 +612,17 @@ def _shared_serve(x, op: SharedOp):
 
 def _pregen_ff_dense(op: PregenOp) -> jax.Array:
     """Dense-layout FF operand of a PregenOp (decompressing packed
-    leaves with the shared select-based helper — exact, scatter-free)."""
-    if not op.is_packed:
+    leaves with the shared select-based helper — exact, scatter-free).
+    Transposable bp-only operands FF on ``bp`` itself: the one mask is
+    N:M in both orientations, so the same array is the FF operand."""
+    if op.ff is not None:
         return op.ff
-    from repro.kernels.nm_spmm_shared import decompress_nm
+    if op.is_packed:
+        from repro.kernels.nm_spmm_shared import decompress_nm
 
-    cfg = op.cfg
-    return decompress_nm(op.vals, op.idx, cfg.n, cfg.m, axis=-2)
+        cfg = op.cfg
+        return decompress_nm(op.vals, op.idx, cfg.n, cfg.m, axis=-2)
+    return op.bp
 
 
 def nm_apply(op, x: jax.Array, *, backend: str = "auto",
@@ -613,8 +668,9 @@ def nm_apply(op, x: jax.Array, *, backend: str = "auto",
                                stride, padding)
         if op.is_packed and backend == "pallas":
             cfg = op.cfg
-            return packed_pregen_linear(x, op.vals, op.idx, op.bp,
-                                        cfg.n, cfg.m, True)
+            fn = packed_pregen_linear_t if op.is_transposable \
+                else packed_pregen_linear
+            return fn(x, op.vals, op.idx, op.bp, cfg.n, cfg.m, True)
         ff = _pregen_ff_dense(op)
         if stacked:
             return jax.vmap(pregen_linear)(x, ff, op.bp)

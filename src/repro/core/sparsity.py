@@ -45,6 +45,11 @@ class SparsityConfig:
       lam: SR-STE sparse-refined regularization strength (lambda_w).
       excluded: regex fragments of param names excluded from pruning
         (paper: first conv layer; here also routers/embeddings/norms).
+      transposable: one mask serves W and Wᵀ (Hubara et al., NeurIPS'21,
+        arXiv 2102.08124): survivors satisfy N:M along BOTH the FF
+        (contraction) and BP (output) axes of every m x m tile, so the
+        pre-generated FF and BP operands collapse into one stored
+        operand + one mask.  bdwp + element granularity only.
     """
 
     n: int = 2
@@ -54,6 +59,7 @@ class SparsityConfig:
     tile: int = 128
     lam: float = 2e-4
     excluded: tuple = ("embed", "router", "norm", "frontend", "bias", "head0")
+    transposable: bool = False
 
     def __post_init__(self):
         if not (0 < self.n <= self.m):
@@ -62,6 +68,11 @@ class SparsityConfig:
             raise ValueError(f"unknown method {self.method!r}")
         if self.granularity not in ("element", "shared"):
             raise ValueError(f"unknown granularity {self.granularity!r}")
+        if self.transposable and (self.method != "bdwp"
+                                  or self.granularity != "element"):
+            raise ValueError(
+                "transposable masks need method='bdwp' and element "
+                f"granularity, got {self.method!r}/{self.granularity!r}")
 
     @property
     def is_dense(self) -> bool:
@@ -163,6 +174,106 @@ def nm_mask_pair(x: jax.Array, n: int, m: int, ff_axis: int, bp_axis: int):
         out.append(jnp.transpose(mask, inv))
         offset += rows
     return tuple(out)
+
+
+def nm_mask_transposable(x: jax.Array, n: int, m: int) -> jax.Array:
+    """One mask serving W and Wᵀ: N:M along rows AND columns of every
+    m x m tile of the last two axes (Hubara et al., arXiv 2102.08124).
+
+    Three phases, all vectorized over tiles and deterministic:
+      1. greedy — accept cells largest-|x|-first while the cell's row
+         and column quotas are both open (ties to the earliest row-major
+         cell, the same greater-than-only convention as ``nm_mask``);
+         greedy can strand a few quotas (a deficit row's open columns
+         may all sit in saturated rows' shadows);
+      2. repair — while any quota is open, apply the best augmenting
+         swap: add (r, c2) and (r', c), drop (r', c2), for the selected
+         cell (r', c2) maximizing the score gain; each swap closes one
+         row and one column deficit and never overfills a quota;
+      3. fallback — any tile the bounded repair loop leaves deficient
+         (not observed in practice; the loop runs n*m swaps and each
+         valid swap closes a deficit) gets the top-n cyclic-diagonal
+         mask, which is transposable by construction.
+
+    Leading axes batch through (a stacked MoE leaf gets per-expert
+    tiles).  Both trailing dims must be divisible by m.
+    """
+    if n == m:
+        return jnp.ones_like(x, dtype=bool)
+    *lead, rdim, cdim = x.shape
+    if rdim % m or cdim % m:
+        raise ValueError(f"dims ({rdim}, {cdim}) not divisible by m={m}")
+    rt, ct = rdim // m, cdim // m
+    tiles = x.reshape(*lead, rt, m, ct, m)
+    tiles = jnp.moveaxis(tiles, -3, -2)          # (*lead, rt, ct, m, m)
+    score = jnp.abs(tiles).astype(jnp.float32).reshape(-1, m * m)
+    order = jnp.argsort(-score, axis=-1)         # stable: ties earliest-first
+    t = score.shape[0]
+    cell_ids = jnp.arange(m * m, dtype=jnp.int32)
+    slot_ids = jnp.arange(m, dtype=jnp.int32)
+
+    def greedy(k, carry):
+        mask, rows, cols = carry                 # (T, m*m), (T, m), (T, m)
+        cell = order[:, k]
+        r, c = cell // m, cell % m
+        r_hot = slot_ids[None, :] == r[:, None]  # (T, m)
+        c_hot = slot_ids[None, :] == c[:, None]
+        ok = (jnp.sum(jnp.where(r_hot, rows, 0), axis=-1) < n) \
+            & (jnp.sum(jnp.where(c_hot, cols, 0), axis=-1) < n)
+        mask = mask | ((cell_ids[None, :] == cell[:, None]) & ok[:, None])
+        rows = rows + jnp.where(r_hot & ok[:, None], 1, 0)
+        cols = cols + jnp.where(c_hot & ok[:, None], 1, 0)
+        return mask, rows, cols
+
+    init = (jnp.zeros((t, m * m), bool),
+            jnp.zeros((t, m), jnp.int32), jnp.zeros((t, m), jnp.int32))
+    mask, _, _ = jax.lax.fori_loop(0, m * m, greedy, init)
+    mask = mask.reshape(t, m, m)
+    sc = score.reshape(t, m, m)
+
+    def repair(_, mask):
+        rows = mask.sum(-1)                      # (T, m)
+        cols = mask.sum(-2)
+        need = (rows < n).any(-1)                # (T,)
+        r = jnp.argmax(rows < n, axis=-1)        # first deficit row
+        c = jnp.argmax(cols < n, axis=-1)        # first deficit column
+        row_r = jnp.take_along_axis(mask, r[:, None, None], axis=1)[:, 0]
+        col_c = jnp.take_along_axis(mask, c[:, None, None], axis=2)[:, :, 0]
+        s_row = jnp.take_along_axis(sc, r[:, None, None], axis=1)[:, 0]
+        s_col = jnp.take_along_axis(sc, c[:, None, None], axis=2)[:, :, 0]
+        # swap candidates (r', c2): drop selected (r', c2), add (r, c2)
+        # and (r', c); c2 == c / r' == r are self-excluded by the masks
+        valid = mask & ~row_r[:, None, :] & ~col_c[:, :, None] \
+            & need[:, None, None]
+        gain = s_row[:, None, :] + s_col[:, :, None] - sc
+        flat = jnp.where(valid, gain, -jnp.inf).reshape(t, m * m)
+        best = jnp.argmax(flat, axis=-1)
+        rp, c2 = best // m, best % m
+        apply = (need & valid.reshape(t, m * m).any(-1))[:, None, None]
+        oh = lambda i: slot_ids[None, :] == i[:, None]
+        add = (oh(r)[:, :, None] & oh(c2)[:, None, :]) \
+            | (oh(rp)[:, :, None] & oh(c)[:, None, :])
+        rem = oh(rp)[:, :, None] & oh(c2)[:, None, :]
+        return (mask | (add & apply)) & ~(rem & apply)
+
+    mask = jax.lax.fori_loop(0, n * m, repair, mask)
+
+    # guaranteed-valid fallback: top-n cyclic diagonals by summed |x|
+    rolled = jax.vmap(lambda s: jnp.stack(
+        [jnp.diagonal(jnp.roll(s, -d, axis=1), axis1=0, axis2=1).sum()
+         for d in range(m)]))(sc)                # (T, m) diagonal scores
+    dsel = _topn_group_mask(rolled, n)           # (T, m) chosen offsets
+    i_ = slot_ids[None, :, None]
+    j_ = slot_ids[None, None, :]
+    fallback = jnp.take_along_axis(
+        jnp.broadcast_to(dsel[:, None, :], (t, m, m)),
+        jnp.broadcast_to((j_ - i_) % m, (t, m, m)), axis=2)
+    ok_tile = (mask.sum(-1) == n).all(-1) & (mask.sum(-2) == n).all(-1)
+    mask = jnp.where(ok_tile[:, None, None], mask, fallback)
+
+    mask = mask.reshape(*lead, rt, ct, m, m)
+    mask = jnp.moveaxis(mask, -3, -2)
+    return mask.reshape(*lead, rdim, cdim)
 
 
 def nm_mask_shared(

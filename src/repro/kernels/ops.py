@@ -21,6 +21,10 @@ import jax.numpy as jnp
 from repro.core import sparsity as S
 from repro.kernels import ref
 from repro.kernels.fused_update import fused_update_pallas
+from repro.kernels.grad_compress import (
+    grad_compress_pallas,
+    grad_decompress_mean_pallas,
+)
 from repro.kernels.nm_compact import nm_compact_pallas
 from repro.kernels.nm_spmm import nm_spmm_pallas
 from repro.kernels.nm_spmm_shared import nm_spmm_shared_pallas
@@ -98,6 +102,118 @@ def fused_update(w, g, v, lr, mu, wd, lam, n: int, m: int, use_pallas: bool = Tr
         vals.reshape(*shape[:-1], kc),
         idx.reshape(*shape[:-1], kc),
     )
+
+
+def _jnp_grad_compress(g, err, n: int, m: int):
+    """Vectorized jnp EF compress, bitwise-identical to ``ref_grad_compress``.
+
+    The oracle spells the semantics with ``nm_pack``/``nm_unpack_n``
+    (top_k + sort + scatter) — readable, but those lower to per-group
+    variadic sorts and scatters that dominate the sync step on XLA CPU.
+    This path gets the same bits from branchless elementwise ops only:
+
+      * selection: n rounds of masked argmax.  ``jnp.argmax`` keeps the
+        *first* occurrence on ties, which is exactly ``lax.top_k``'s
+        stable lower-index-wins rule, so the survivor sets and packed
+        order (ascending offset after the n-element sort) agree with the
+        oracle on every tie pattern.
+      * ordering: the n selected offsets are distinct, so an exchange
+        (bubble) network of ``minimum``/``maximum`` pairs yields the same
+        ascending order as ``jnp.sort`` — without the variadic per-group
+        sort XLA CPU would otherwise emit (~10x slower at slab sizes).
+      * residual: no decode/scatter at all.  The decoded payload equals
+        ``bf16(t)`` at survivor lanes and 0 elsewhere, so
+        ``t - decode(payload)`` is just ``where(survivor, t - bf16(t), t)``
+        — elementwise, and bitwise the same f32 subtraction the oracle
+        performs.
+
+    tests/test_grad_compress.py pins the bitwise equality property.
+    """
+    t = g.astype(jnp.float32) + err.astype(jnp.float32)
+    k = t.shape[-1]
+    gg = t.reshape(*t.shape[:-1], k // m, m)
+    score = jnp.abs(gg)
+    offs = jnp.arange(m, dtype=jnp.int32)
+    masked = score
+    sel = []
+    for _ in range(n):
+        i = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+        sel.append(i)
+        masked = jnp.where(offs == i[..., None], -jnp.inf, masked)
+    for a in range(n - 1):
+        for b in range(n - 1 - a):
+            lo = jnp.minimum(sel[b], sel[b + 1])
+            hi = jnp.maximum(sel[b], sel[b + 1])
+            sel[b], sel[b + 1] = lo, hi
+    idx = jnp.stack(sel, axis=-1)
+    vals = jnp.take_along_axis(gg, idx, axis=-1)
+    survivor = jnp.zeros(gg.shape, bool)
+    for i in sel:
+        survivor = survivor | (offs == i[..., None])
+    rounded = gg.astype(jnp.bfloat16).astype(jnp.float32)
+    new_err = jnp.where(survivor, gg - rounded, gg).reshape(t.shape)
+    kc = k // m * n
+    return (vals.astype(jnp.bfloat16).reshape(*t.shape[:-1], kc),
+            idx.reshape(*t.shape[:-1], kc).astype(jnp.uint8),
+            new_err)
+
+
+def _jnp_grad_decompress_mean(vals, idx, n: int, m: int):
+    """Vectorized pod-mean decompress, bitwise == ``ref_grad_decompress_mean``.
+
+    One-hot multiply-accumulate instead of the oracle's scatter: XLA CPU
+    lowers ``put_along_axis`` to a serial per-group scatter loop, while
+    the (P, G, n, m) one-hot contraction stays a fused elementwise kernel
+    (~5x faster at sync-slab sizes).
+    """
+    p, kc = vals.shape
+    gv = vals.astype(jnp.float32).reshape(p, kc // n, n)
+    gi = idx.reshape(p, kc // n, n).astype(jnp.int32)
+    offs = jnp.arange(m, dtype=jnp.int32)
+    dense = jnp.sum(gv[..., None] * (gi[..., None] == offs), axis=-2)
+    return dense.reshape(p, kc // n * m).mean(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m", "use_pallas"))
+def grad_compress(g, err, n: int, m: int, use_pallas: bool = True):
+    """Fused EF compress: (g+err) -> (bf16 vals, uint8 idx, new residual).
+
+    Accepts any shape whose last axis is divisible by m (the sync path
+    passes (n_pods, bucket) slabs).  Telescoping is exact: the decoded
+    payload plus the returned residual equals g + err bitwise in f32.
+    """
+    if not use_pallas:
+        return _jnp_grad_compress(g, err, n, m)
+    shape = g.shape
+    g2 = g.reshape(-1, shape[-1]).astype(jnp.float32)
+    e2 = err.reshape(-1, shape[-1]).astype(jnp.float32)
+    r, k = g2.shape
+    br = _pick_block(r, (8, 4, 2, 1))
+    bk = _pick_block(k, (2048, 1024, 512, 256, 128, 64, 32, 16, 8),
+                     multiple_of=m)
+    vals, idx, new_err = grad_compress_pallas(
+        g2, e2, n, m, block_r=br, block_k=bk, interpret=_interpret()
+    )
+    kc = k // m * n
+    return (
+        vals.reshape(*shape[:-1], kc),
+        idx.reshape(*shape[:-1], kc),
+        new_err.reshape(shape),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m", "use_pallas"))
+def grad_decompress_mean(vals, idx, n: int, m: int, use_pallas: bool = True):
+    """All-gathered payloads (P, Kc) -> pod-mean dense gradient (K,) f32."""
+    if not use_pallas:
+        return _jnp_grad_decompress_mean(vals, idx, n, m)
+    p, kc = vals.shape
+    bc = _pick_block(kc, (2048, 1024, 512, 256, 128, 64, 32, 16, 8),
+                     multiple_of=n)
+    out = grad_decompress_mean_pallas(
+        vals, idx, n, m, block_c=bc, interpret=_interpret()
+    )
+    return out.reshape(kc // n * m)
 
 
 def pack_shared(w: jax.Array, n: int, m: int, tile: int = 128):

@@ -50,6 +50,27 @@ def ref_nm_spmm_shared(act: jax.Array, vals: jax.Array, rows: jax.Array):
     return outs.reshape(act.shape[0], -1)
 
 
+def ref_grad_compress(g: jax.Array, err: jax.Array, n: int, m: int):
+    """EF compress oracle: (g, err) -> (bf16 vals, uint8 idx, new_err f32).
+
+    t = g + err; top-n |t| per consecutive-m group along the last axis;
+    the wire payload is bf16, and the residual subtracts the *rounded*
+    values so error feedback telescopes exactly: decoded + new_err ==
+    g + err bitwise in f32.
+    """
+    t = (g.astype(jnp.float32) + err.astype(jnp.float32))
+    vals, idx = S.nm_pack(t, n, m, axis=-1)
+    sent = vals.astype(jnp.bfloat16)
+    dec = S.nm_unpack_n(sent.astype(jnp.float32), idx, n, m, axis=-1)
+    return sent, idx, t - dec
+
+
+def ref_grad_decompress_mean(vals: jax.Array, idx: jax.Array, n: int, m: int):
+    """Pod-mean decompress oracle: (P, Kc) payloads -> (K,) dense f32."""
+    dec = S.nm_unpack_n(vals.astype(jnp.float32), idx, n, m, axis=-1)
+    return dec.mean(axis=0)
+
+
 def ref_fused_update(
     w: jax.Array,
     g: jax.Array,

@@ -22,6 +22,14 @@ Per-op accounting (per-device, since SPMD modules are per-partition):
   collective link bytes (per chip, ring accounting):
     all-reduce 2·s·(g-1)/g | all-gather s·(g-1)/g | reduce-scatter
     s·(g-1)   | all-to-all s·(g-1)/g | collective-permute s
+
+Pod-crossing attribution: with ``pod_block`` (devices per pod; the pod
+axis is the mesh's outermost, so pod(id) = id // pod_block), each
+collective's replica_groups / source_target_pairs are parsed and its
+link bytes are additionally booked as *pod-crossing* when any group or
+pair spans two pods.  This is what benchmarks/spmd_bench.py feeds its
+emulated inter-pod link model: intra-pod collectives ride the fast
+fabric, pod-crossing ones are charged at the modeled link bandwidth.
 """
 
 from __future__ import annotations
@@ -47,6 +55,10 @@ _BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
 _TRIP_RE = re.compile(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)')
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_FULL_RE = re.compile(r"replica_groups=\{\{(.*?)\}\}")
+_GROUPS_IOTA_FULL_RE = re.compile(
+    r"replica_groups=\[([\d,]+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{\{(.*?)\}\}")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
 _WINDOW_RE = re.compile(r"window=\{size=([\dx]+)")
@@ -109,10 +121,13 @@ class Cost:
     bytes: float = 0.0
     coll: Optional[dict] = None
     coll_count: int = 0
+    cross: Optional[dict] = None   # pod-crossing subset of coll
 
     def __post_init__(self):
         if self.coll is None:
             self.coll = {k: 0.0 for k in _COLLECTIVES}
+        if self.cross is None:
+            self.cross = {k: 0.0 for k in _COLLECTIVES}
 
     def add(self, other: "Cost", times: float = 1.0):
         self.flops += other.flops * times
@@ -120,10 +135,15 @@ class Cost:
         self.coll_count += int(other.coll_count * times)
         for k in _COLLECTIVES:
             self.coll[k] += other.coll[k] * times
+            self.cross[k] += other.cross[k] * times
 
     @property
     def coll_bytes(self) -> float:
         return sum(self.coll.values())
+
+    @property
+    def cross_bytes(self) -> float:
+        return sum(self.cross.values())
 
 
 # ---------------------------------------------------------------------------
@@ -233,6 +253,63 @@ def parse_module(text: str) -> Dict[str, Computation]:
 # ---------------------------------------------------------------------------
 
 
+def _crosses_pod(line: str, pod_block: int) -> bool:
+    """Does this collective's device grouping span two pods?
+
+    pod(id) = id // pod_block (the pod axis is the mesh's outermost).
+    Handles explicit replica_groups={{0,4},{1,5}}, the iota form
+    replica_groups=[G,S]<=[dims](T(perm)), and collective-permute's
+    source_target_pairs.  A collective with no visible grouping spans
+    the world — conservatively counted as crossing.
+    """
+    def spans(ids) -> bool:
+        return len({int(i) // pod_block for i in ids}) > 1
+
+    m = _PAIRS_RE.search(line)
+    if m:
+        for pair in m.group(1).split("},{"):
+            if spans(x for x in pair.split(",") if x.strip()):
+                return True
+        return False
+    m = _GROUPS_FULL_RE.search(line)
+    if m:
+        for grp in m.group(1).split("},{"):
+            if spans(x for x in grp.split(",") if x.strip()):
+                return True
+        return False
+    m = _GROUPS_IOTA_FULL_RE.search(line)
+    if m:
+        dims = [int(x) for x in m.group(1).split(",")]
+        space = [int(x) for x in m.group(2).split(",")]
+        perm = ([int(x) for x in m.group(3).split(",")] if m.group(3)
+                else list(range(len(space))))
+        n = math.prod(space)
+        ids = list(range(n))
+        # arange(n).reshape(space).transpose(perm).reshape(G, S)
+        strides = [0] * len(space)
+        acc = 1
+        for i in reversed(range(len(space))):
+            strides[i] = acc
+            acc *= space[i]
+        pspace = [space[p] for p in perm]
+        pstrides = [strides[p] for p in perm]
+        flat = []
+        idx = [0] * len(pspace)
+        for _ in range(n):
+            flat.append(sum(i * s for i, s in zip(idx, pstrides)))
+            for d in reversed(range(len(pspace))):
+                idx[d] += 1
+                if idx[d] < pspace[d]:
+                    break
+                idx[d] = 0
+        gsize = n // max(dims[0], 1) if dims else n
+        for g in range(0, n, max(gsize, 1)):
+            if spans(flat[g:g + gsize]):
+                return True
+        return False
+    return True
+
+
 def _group_size(line: str) -> int:
     m = _GROUPS_IOTA_RE.search(line)
     if m:
@@ -280,8 +357,9 @@ def _conv_flops(comp: Computation, op: Op) -> float:
 
 
 class HloCostModel:
-    def __init__(self, text: str):
+    def __init__(self, text: str, pod_block: Optional[int] = None):
         self.comps = parse_module(text)
+        self.pod_block = pod_block
         self._memo: Dict[str, Cost] = {}
         entry = None
         for name in self.comps:
@@ -413,6 +491,8 @@ class HloCostModel:
                     link = size
                 total.coll[base] += link
                 total.coll_count += 1
+                if self.pod_block and _crosses_pod(op.line, self.pod_block):
+                    total.cross[base] += link
             total.bytes += result_bytes + operand_bytes
             return
         if kind.endswith("-done"):
@@ -443,17 +523,25 @@ class HloCostModel:
             total.flops += _numel(shapes[0][1])
 
 
-def analyze(hlo_text: str) -> dict:
-    """Entry point: optimized HLO text -> per-device cost dict."""
-    model = HloCostModel(hlo_text)
+def analyze(hlo_text: str, pod_block: Optional[int] = None) -> dict:
+    """Entry point: optimized HLO text -> per-device cost dict.
+
+    With ``pod_block`` (devices per pod) the collectives dict also
+    carries ``pod_crossing``: the ring link bytes of collectives whose
+    groups span pods — the traffic that rides the slow inter-pod links.
+    """
+    model = HloCostModel(hlo_text, pod_block=pod_block)
     c = model.cost()
-    return {
+    out = {
         "flops": c.flops,
         "bytes": c.bytes,
         "collectives": {**{k: int(v) for k, v in c.coll.items()},
                         "count": c.coll_count,
                         "total": int(c.coll_bytes)},
     }
+    if pod_block:
+        out["collectives"]["pod_crossing"] = int(c.cross_bytes)
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -50,6 +50,14 @@ def build_parser():
                     help="N:M cross-pod gradient compression (needs a "
                          "mesh with a 'pod' axis, e.g. --mesh "
                          "pod,data,model)")
+    ap.add_argument("--grad-estimator", default="topk",
+                    choices=["topk", "mvue"],
+                    help="gradient sparsifier for --compress: topk with "
+                         "error feedback, or the unbiased MVUE sampler "
+                         "(arXiv 2203.10991)")
+    ap.add_argument("--bucket-elems", type=int, default=1 << 16,
+                    help="compressed-sync bucket size in elements "
+                         "(must be a multiple of M)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--mesh", default=None,
                     help="mesh spec over the visible devices, e.g. "
@@ -106,13 +114,18 @@ def run_training(args) -> int:
     if arch.family == "encdec":
         bundle = ST.build_encdec_train(cfg, mesh, sp_cfg, opt_cfg)
     else:
+        from repro.optim.compress import GradCompressConfig
+        grad_sync = GradCompressConfig(
+            n=n, m=m, estimator=args.grad_estimator,
+            bucket_elems=args.bucket_elems) if compress else None
         bundle = ST.build_lm_train(cfg, mesh, sp_cfg, opt_cfg,
-                                   compress=compress)
+                                   compress=compress, grad_sync=grad_sync)
 
     def fresh():
         key = jax.random.PRNGKey(args.seed)
         state = ST.init_train_state(key, cfg, family=arch.family,
-                                    compress=compress, sp_cfg=sp_cfg)
+                                    compress=compress, sp_cfg=sp_cfg,
+                                    mesh=mesh)
         return jax.device_put(state, bundle.state_shardings)
 
     if args.resume and args.ckpt_dir:

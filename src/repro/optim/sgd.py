@@ -39,7 +39,8 @@ from repro.core import bdwp
 from repro.core import operand as O
 from repro.core.sparsity import (SparsityConfig, _move_axis_last, nm_mask,
                                  nm_mask_pair, nm_mask_shared,
-                                 nm_pack_from_mask, nm_unpack_n)
+                                 nm_mask_transposable, nm_pack_from_mask,
+                                 nm_unpack_n)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +83,12 @@ def _pregen_masks(w, sp_cfg: SparsityConfig):
     unused directions return None."""
     n, m = sp_cfg.n, sp_cfg.m
     ff_ax, bp_ax = w.ndim - 2, w.ndim - 1
+    if sp_cfg.transposable:
+        # ONE mask, N:M along both the contraction and the output axis
+        # (arXiv 2102.08124) — serves FF, BP and the SR-STE decay, so
+        # the per-param mask state halves
+        tm = nm_mask_transposable(w, n, m)
+        return tm, tm, tm
     shared = sp_cfg.granularity == "shared"
     ff_mask = bp_mask = None
     if sp_cfg.prunes_ff_weights() and sp_cfg.prunes_bp_weights():
@@ -109,8 +116,19 @@ def _pregen_leaf(w, sp_cfg: SparsityConfig, pack: bool) -> O.PregenOp:
     split between FF/BP and SR-STE decay.
     """
     ff_mask, bp_mask, decay_mask = _pregen_masks(w, sp_cfg)
-    ff = jnp.where(ff_mask, w, 0.0) if ff_mask is not None else w
     bp = jnp.where(bp_mask, w, 0.0) if bp_mask is not None else w
+    if sp_cfg.transposable:
+        # the one transposable-masked operand serves FF and BP — no
+        # separate ff leaf (bf16 weight state halves); pack rides the
+        # same mask along the contraction axis
+        bp16 = bp.astype(jnp.bfloat16)
+        if pack:
+            vals, idx = nm_pack_from_mask(bp16, ff_mask, sp_cfg.n, sp_cfg.m,
+                                          axis=w.ndim - 2)
+            return O.PregenOp(bp=bp16, vals=vals, idx=idx, mask=decay_mask,
+                              cfg=sp_cfg)
+        return O.PregenOp(bp=bp16, mask=decay_mask, cfg=sp_cfg)
+    ff = jnp.where(ff_mask, w, 0.0) if ff_mask is not None else w
     ff16 = ff.astype(jnp.bfloat16)
     if pack and ff_mask is not None and sp_cfg.granularity == "element":
         # SORE packing along the contraction axis, sort-free from the mask
@@ -280,7 +298,10 @@ def update(state, grads, opt_cfg: SGDConfig, sp_cfg: SparsityConfig,
         lshape, off = _logical_shape(name, w.shape)
         site = pregen and bdwp.pregen_site(name, lshape, sp_cfg)
         if (site and use_pallas and sp_cfg.granularity == "element"
-                and sp_cfg.method in ("srste", "bdwp")):
+                and sp_cfg.method in ("srste", "bdwp")
+                and not sp_cfg.transposable):
+            # fused_update derives a one-sided FF mask in-VMEM — wrong
+            # for transposable operands, which stay on the jnp path
             return pallas_upd(name, w, g, v)
         return jnp_upd(name, w, g, v, lshape, off, site)
 

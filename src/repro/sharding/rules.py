@@ -350,6 +350,23 @@ def assert_nm_unsplit(pspecs_tree, params_tree, mesh: Mesh, sp_cfg) -> None:
     walk(pspecs_tree, params_tree, ())
 
 
+def grad_sync_pspecs(mesh: Mesh) -> dict:
+    """PartitionSpecs for the bucketed compressed gradient sync.
+
+    err: the persistent error-feedback residual, (n_pods, T_loc*S) —
+    row p lives on pod p's devices and the width axis is laid out as S
+    device-local slabs along the intra-pod axes, so each device's EF
+    state covers exactly the leaf blocks it compresses
+    (optim/compress._slab_layout) and never moves between steps.  On a
+    pod-less mesh the spec degenerates to replicated (the sync path is
+    a no-op there).
+    """
+    pod = "pod" if "pod" in mesh.axis_names else None
+    intra = tuple(a for a in mesh.axis_names if a != "pod")
+    slab = P(pod, intra) if intra else P(pod, None)
+    return {"err": slab}
+
+
 def batch_axes(mesh: Mesh):
     """DP axes for the activation batch dimension on this mesh."""
     names = mesh.axis_names

@@ -42,7 +42,7 @@ from repro.core.sparsity import SparsityConfig
 from repro.data import synthetic as D
 from repro.launch import spmd
 from repro.optim import sgd
-from repro.optim.compress import cross_pod_mean
+from repro.optim import compress as C
 from repro.sharding import rules as R
 from repro.train import step as ST
 from repro.train.checkpoint import CheckpointManager
@@ -69,7 +69,7 @@ def _run_train(mesh, steps=3, compress=False):
     bundle = ST.build_lm_train(CFG, mesh, SP, OPT, donate=False,
                                compress=use_c)
     state = ST.init_train_state(jax.random.PRNGKey(0), CFG, compress=use_c,
-                                sp_cfg=SP)
+                                sp_cfg=SP, mesh=mesh)
     state = jax.device_put(state, bundle.state_shardings)
     sh = {k: NamedSharding(mesh, ps) for k, ps in bundle.input_pspecs.items()}
     stream = D.lm_stream(CFG.vocab, 8, 32, shardings=sh, seed=0)
@@ -125,27 +125,50 @@ class TestTrainParity:
             np.testing.assert_allclose(a, b, atol=5e-2)
 
     def test_error_feedback_telescopes(self, mesh8):
-        """kept_t = g_t + e_{t-1} - e_t exactly, so over T steps
-        sum(kept) + e_T == sum(g): the compression is lossless in
-        accumulation — the minimum-variance sparse-sync property.
-        ``compress_leaf`` folds the bf16 wire rounding into the residual,
-        so this telescopes to fp32 precision (NOT a ~1e-2 bf16 haze —
-        the old residual ignored packing quantization and leaked it)."""
-        grads = {"blk": {"w": jnp.arange(64, dtype=jnp.float32)
-                         .reshape(8, 8) / 7.0 - 4.0,
-                         "b": jnp.ones((3,), jnp.float32)}}
-        pspecs = jax.tree.map(lambda _: P(), grads)
-        err = jax.tree.map(jnp.zeros_like, grads)
-        acc = jax.tree.map(jnp.zeros_like, grads)
+        """Per pod p: decoded_t + e_t == g_t + e_{t-1} exactly (the fused
+        kernel folds the bf16 wire rounding into the residual), so the
+        pod-mean output telescopes: sum_t out_t + mean_p(e_T) ==
+        sum_t mean_p(g_t) to fp32 precision — compression is lossless in
+        accumulation even with per-pod DISTINCT gradients.  Ragged leaves
+        (the (3,) bias) ride the dense pod mean and telescope trivially."""
+        n_pods = mesh8.shape["pod"]
+        key = jax.random.PRNGKey(3)
+        grads = {"blk": {
+            "w": jax.random.normal(key, (n_pods, 8, 8), jnp.float32),
+            "b": jax.random.normal(jax.random.fold_in(key, 1),
+                                   (n_pods, 3), jnp.float32)}}
+        pspecs = {"blk": {"w": P(), "b": P()}}
+        master = {"blk": {"w": jnp.zeros((8, 8)), "b": jnp.zeros((3,))}}
+        cfg = C.GradCompressConfig(n=SP.n, m=SP.m, bucket_elems=32)
+        width = C.err_state_elems(master, SP.m, mesh8, pspecs)
+        # replicated leaves -> every intra-pod device carries the whole
+        # 64-elem slab: the EF state is S identical device slabs wide
+        assert width == 64 * C.slab_shards(mesh8)
+        err = jnp.zeros((n_pods, width), jnp.float32)
+        acc = {"blk": {"w": jnp.zeros((8, 8)), "b": jnp.zeros((3,))}}
+        sync = jax.jit(lambda g, e: C.cross_pod_sync(
+            g, e, mesh8, pspecs, cfg))
         for t in range(4):
             g_t = jax.tree.map(lambda g: g * (0.5 ** t), grads)
-            kept, err = cross_pod_mean(g_t, err, mesh8, pspecs, SP)
-            acc = jax.tree.map(jnp.add, acc, kept)
+            out, err = sync(g_t, err)
+            acc = jax.tree.map(jnp.add, acc, out)
+        # fold the residual back in: pod-mean of the first device slab
+        # (its duplicates are bitwise identical — deterministic top-k)
+        err_slabs = np.asarray(err).mean(0).reshape(-1, 64)
+        np.testing.assert_array_equal(err_slabs,
+                                      np.broadcast_to(err_slabs[:1],
+                                                      err_slabs.shape))
+        acc["blk"]["w"] = acc["blk"]["w"] + err_slabs[0].reshape(8, 8)
         total = jax.tree.map(
-            lambda g: g * sum(0.5 ** t for t in range(4)), grads)
-        for a, b in zip(_host(jax.tree.map(jnp.add, acc, err)),
-                        _host(total)):
+            lambda g: g.mean(0) * sum(0.5 ** t for t in range(4)), grads)
+        for a, b in zip(_host(acc), _host(total)):
             np.testing.assert_allclose(a, b, atol=1e-5)
+
+    def test_bucket_split_refusal(self):
+        with pytest.raises(ValueError, match="M-group"):
+            C.GradCompressConfig(n=2, m=8, bucket_elems=20)
+        with pytest.raises(ValueError, match="M-group"):
+            C.plan_buckets(64, 12, 8)
 
 
 class TestServeParity:
