@@ -42,10 +42,25 @@ BASELINES = os.path.join(HERE, "baselines")
 # numeric leaf beneath it ("loads.*" wildcards one list level).
 GATES = {
     "BENCH_serve.json": [
+        "hbm.idx_bits",
         "hbm.packed_weight_bytes",
+        "hbm.packed_weight_bytes_4bit_idx",
+        "hbm.measured_packed_weight_bytes",
         "hbm.dense_weight_bytes",
         "hbm.hbm_saving",
         "hbm.total_hbm_bytes",
+        # measured decode traffic: structural HLO bytes of one compiled
+        # decode step (deterministic for a pinned jax), u4 vs u8 store
+        "decode.hlo_bytes_per_step_u4",
+        "decode.hlo_bytes_per_step_u8",
+        "decode.idx_bytes_saved_accounted",
+        # per-projection stored bytes (latency keys are wall-clock and
+        # deliberately NOT gated)
+        "projections.*.vals_bytes",
+        "projections.*.idx_bytes",
+        "projections.*.stored_bytes",
+        "projections.*.dense_bytes",
+        "projections.*.idx_bits",
         "loads.*.tokens",
         "loads.*.decode_steps",
         "loads.*.slot_utilization",
@@ -93,6 +108,20 @@ GATES = {
 # one run on one machine, so wall-clock medians are fair game here even
 # though GATES never compares them across machines.
 DIRECTIONAL = {
+    "BENCH_serve.json": [
+        # the u4 store must SHIP what it accounts: live buffer bytes of
+        # the packed tree within ±5% of the SORE 4-bit-idx footprint
+        # (they are equal by construction today; 5% leaves room for
+        # padding on odd compact extents without letting the accounting
+        # drift back to fiction)
+        ("hbm.measured_over_accounted_4bit", ">=", 0.95),
+        ("hbm.measured_over_accounted_4bit", "<=", 1.05),
+        # the fused u4 decode must move fewer bytes per step than the
+        # byte-wide control — measured off the optimized HLO of the
+        # exact compiled decode, same run, same machine
+        ("decode.hlo_bytes_per_step_u4", "<=",
+         "decode.hlo_bytes_per_step_u8"),
+    ],
     "BENCH_spmd.json": [
         # the whole point of the compressed sync: it must WIN, not just
         # ship.  step_ms_median = measured compute + measured pod-crossing
@@ -143,6 +172,13 @@ def check_file(name: str, fresh_path: str, base_path: str,
     gated = [p for p in base
              if any(_match(p, pat) for pat in patterns)]
     for path in sorted(gated):
+        if "interpret" in path:
+            # benches label CPU interpret-mode kernel timings with an
+            # "_interpret" suffix: they measure the Pallas interpreter,
+            # not the kernel, and gating one is a configuration error
+            failures.append(f"{name}:{path}: interpret-mode metric is "
+                            f"gated — fix the GATES pattern")
+            continue
         old = base[path]
         new = fresh.get(path)
         if new is None:
@@ -190,6 +226,15 @@ def main(argv=None) -> int:
                     help="job runs a subset of the benches: absent fresh "
                          "results are skips, not orphan-baseline failures")
     args = ap.parse_args(argv)
+
+    # gate-config sanity: no gate may name an interpret-mode metric
+    bad = [p for pats in GATES.values() for p in pats if "interpret" in p]
+    bad += [f"{lhs} {op} {rhs}" for gates in DIRECTIONAL.values()
+            for (lhs, op, rhs) in gates
+            if "interpret" in lhs or "interpret" in str(rhs)]
+    if bad:
+        print(f"[FAIL] gate config touches interpret-mode metrics: {bad}")
+        return 1
 
     os.makedirs(args.baselines, exist_ok=True)
     failures, checked = [], 0

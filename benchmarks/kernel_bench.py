@@ -36,35 +36,54 @@ def run() -> list:
     for (b, k, f) in ((256, 1024, 1024), (512, 2048, 512)):
         w = jax.random.normal(key, (k, f), jnp.float32)
         x = jax.random.normal(key, (b, k), jnp.bfloat16)
-        vals, idx = ops.nm_compact(w.T, n, m, use_pallas=False)
-        vals, idx = vals.T, idx.T  # pack along K
-        t_pack = _time(lambda ww: ops.nm_compact(ww, n, m,
-                                                 use_pallas=False), w.T)
-        t_spmm = _time(lambda: ops.nm_spmm(x.astype(jnp.float32), vals, idx,
-                                           n, m, use_pallas=False))
         t_dense = _time(lambda: jnp.matmul(x.astype(jnp.float32), w))
         dense_bytes = k * f * 2
-        packed_bytes = k * f * n // m * 2 + k * f * n // m
-        rows.append({
-            "kernel": "nm_spmm", "shape": f"{b}x{k}x{f}", "nm": f"{n}:{m}",
-            "oracle_ms": t_spmm * 1e3, "dense_matmul_ms": t_dense * 1e3,
-            "pack_ms": t_pack * 1e3,
-            "weight_bytes_dense": dense_bytes,
-            "weight_bytes_packed": packed_bytes,
-            "hbm_reduction": dense_bytes / packed_bytes,
-        })
+        for idx_bits in (8, 4):
+            vals, idx = ops.nm_compact(w.T, n, m, use_pallas=False,
+                                       idx_bits=idx_bits)
+            vals, idx = vals.T, idx.T  # pack along K
+            t_pack = _time(lambda ww: ops.nm_compact(
+                ww, n, m, use_pallas=False, idx_bits=idx_bits), w.T)
+            t_spmm = _time(lambda: ops.nm_spmm(
+                x.astype(jnp.float32), vals, idx, n, m, use_pallas=False,
+                idx_bits=idx_bits))
+            # bytes as stored: bf16-width vals + the actual index plane
+            # (one byte per offset at u8, two offsets per byte at u4)
+            packed_bytes = (k * f * n // m * 2
+                            + k * f * n // m * idx_bits // 8)
+            rows.append({
+                "kernel": "nm_spmm", "shape": f"{b}x{k}x{f}",
+                "nm": f"{n}:{m}", "idx_bits": idx_bits,
+                "oracle_ms": t_spmm * 1e3, "dense_matmul_ms": t_dense * 1e3,
+                "pack_ms": t_pack * 1e3,
+                "weight_bytes_dense": dense_bytes,
+                "weight_bytes_packed": packed_bytes,
+                "hbm_reduction": dense_bytes / packed_bytes,
+            })
+        # the two index widths must be interchangeable bitwise — the u4
+        # plane is a storage format, never a different computation
+        v8, i8 = ops.nm_compact(w.T, n, m, use_pallas=False, idx_bits=8)
+        v4, i4 = ops.nm_compact(w.T, n, m, use_pallas=False, idx_bits=4)
+        y8 = ops.nm_spmm(x.astype(jnp.float32), v8.T, i8.T, n, m,
+                         use_pallas=False)
+        y4 = ops.nm_spmm(x.astype(jnp.float32), v4.T, i4.T, n, m,
+                         use_pallas=False, idx_bits=4)
+        assert (y8 == y4).all(), "u4 decode diverged from byte-wide"
     return rows
 
 
 def main():
     rows = run()
-    print("kernel,shape,nm,oracle_ms,dense_ms,pack_ms,hbm_reduction")
+    print("kernel,shape,nm,idx_bits,oracle_ms,dense_ms,pack_ms,"
+          "hbm_reduction")
     for r in rows:
-        print(f"{r['kernel']},{r['shape']},{r['nm']},{r['oracle_ms']:.2f},"
+        print(f"{r['kernel']},{r['shape']},{r['nm']},{r['idx_bits']},"
+              f"{r['oracle_ms']:.2f},"
               f"{r['dense_matmul_ms']:.2f},{r['pack_ms']:.2f},"
               f"{r['hbm_reduction']:.2f}")
-    print("# packed N:M weights move ~M/(N+idx) x fewer HBM bytes — the "
-          "decode-path win (see EXPERIMENTS.md §Perf)")
+    print("# packed N:M weights move ~M/(N+idx) x fewer HBM bytes — u4 "
+          "indices push 2:8 bf16 from 2.67x to 3.2x (see EXPERIMENTS.md "
+          "§Perf)")
 
 
 if __name__ == "__main__":

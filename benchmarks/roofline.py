@@ -33,7 +33,8 @@ def render(recs, mesh="16x16") -> str:
     hints = {
         ("memory", "train"): "cut fp32 activation passes / remat stash",
         ("memory", "prefill"): "KV/layout fusion; bf16 end-to-end",
-        ("memory", "decode"): "N:M-packed weights (paper): HBM bytes / (M/N)",
+        ("memory", "decode"): "u4-idx N:M-packed weights: HBM bytes x N/M "
+                              "+ half-byte idx (BENCH_serve measures it)",
         ("collective", "train"): "reduce-scatter grads; overlap TP collectives",
         ("collective", "prefill"): "sequence-parallel halves TP traffic",
         ("collective", "decode"): "TP all-reduce in bf16; fewer hops",
@@ -84,16 +85,47 @@ def interesting_cells(recs, mesh="16x16"):
             "paper_representative": (paper["arch"], paper["shape"])}
 
 
+def measured_decode_footer(serve_json="results/BENCH_serve.json") -> str:
+    """Close the decode-memory loop against MEASURED numbers: the table's
+    Tm claim for decode cells assumes packed weights move N/M of the
+    dense bytes — BENCH_serve.json carries the measured store bytes and
+    the HLO-measured per-step traffic of the exact compiled decode, so
+    the roofline's assumption is checkable, not folklore."""
+    if not os.path.exists(serve_json):
+        return (f"# measured decode bytes: {serve_json} absent — run "
+                f"`python -m benchmarks.serve_bench` to close the loop")
+    with open(serve_json) as f:
+        s = json.load(f)
+    hbm, dec = s.get("hbm", {}), s.get("decode", {})
+    lines = [
+        "# measured decode-path HBM (benchmarks/serve_bench.py):",
+        f"#   packed store: {hbm.get('measured_packed_weight_bytes', 0)} B "
+        f"live (idx_bits={hbm.get('idx_bits')}) = "
+        f"{hbm.get('measured_over_accounted_4bit', 0):.3f}x the accounted "
+        f"SORE 4-bit footprint; {hbm.get('hbm_saving', 0):.2f}x below "
+        f"dense",
+    ]
+    if dec:
+        lines.append(
+            f"#   decode step HLO bytes: u4 "
+            f"{dec.get('hlo_bytes_per_step_u4', 0)} vs u8 "
+            f"{dec.get('hlo_bytes_per_step_u8', 0)} "
+            f"({dec.get('idx_bytes_saved_per_step', 0)} B/step saved)")
+    return "\n".join(lines)
+
+
 def main():
     g = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun/*.json"
     recs = load(g)
     if not recs:
         print(f"# no dry-run records under {g} — run "
               f"`python -m repro.launch.dryrun --all --out results/dryrun`")
+        print(measured_decode_footer())
         return
     print(render(recs))
     print()
     print("picks:", json.dumps(interesting_cells(recs)))
+    print(measured_decode_footer())
 
 
 if __name__ == "__main__":

@@ -8,6 +8,21 @@ measuring delivered tok/s, per-request latency (in engine steps) and
 slot utilization — the "serves heavy traffic" axis of the roadmap, on
 the smoke config so it runs on CPU CI.
 
+Beyond throughput, the bench MEASURES (never merely accounts) the
+decode-path HBM story of the u4-packed store:
+
+  * ``hbm``   — the store's own report: live ``.nbytes`` of every
+    PackedOp leaf (``measured_packed_weight_bytes``) against the
+    accounted SORE 4-bit footprint; the ratio is directionally gated
+    within ±5% by check_regression.
+  * ``decode`` — structural HBM bytes of ONE lowered decode step
+    (``launch.hlo_cost.analyze`` over the optimized HLO), for the u4
+    store and a byte-wide u8 control on the same weights: the index
+    plane halving must show up in the measured per-step traffic.
+  * ``projections`` — per packed projection: stored vals/idx bytes vs
+    dense, plus decode-shaped oracle latency (wall-clock, recorded but
+    never gated — CI machines are noisy; byte fields are gated).
+
 Writes a JSON summary to results/BENCH_serve.json so the bench
 trajectory accumulates across PRs (CI uploads it as an artifact).
 """
@@ -76,6 +91,61 @@ def run_load(engine: ServeEngine, *, n_requests: int, load: float,
     }
 
 
+def _decode_step_hlo(engine: ServeEngine) -> dict:
+    """Structural per-step cost of the engine's compiled decode fn —
+    measured off the optimized HLO of the exact jit the hot loop runs,
+    not re-derived from shapes."""
+    from repro.launch import hlo_cost
+    b = engine.batcher
+    lowered = b._decode.lower(b.params, b.kv.cache, b.tokens, b.positions)
+    return hlo_cost.analyze(lowered.compile().as_text())
+
+
+def projection_section(engine: ServeEngine, n_slots: int) -> dict:
+    """Per-projection stored bytes + decode-shaped consumption latency.
+
+    Walks the packed store's PackedOp leaves (one per projection; stacked
+    (L, Kc, F) leaves time their layer-0 slice — the per-step decode cost
+    is per layer).  Latency is the jitted oracle path (`use_pallas=False`,
+    real XLA CPU timing); the Pallas kernel only runs interpreted on CPU,
+    so timing it here would measure the interpreter, not the kernel —
+    see docs/benchmarks.md on the interpret-mode confound.
+    """
+    import jax.tree_util as jtu
+    from repro.core import operand as O
+
+    out = {}
+    flat, _ = jtu.tree_flatten_with_path(
+        engine.store.params, is_leaf=lambda x: isinstance(x, O.PackedOp))
+    for path, leaf in flat:
+        if not isinstance(leaf, O.PackedOp):
+            continue
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        vals, idx = leaf.vals, leaf.idx
+        v2, i2 = (vals[0], idx[0]) if vals.ndim == 3 else (vals, idx)
+        op = O.PackedOp(v2, i2, leaf.cfg, leaf.idx_bits)
+        k_dense = v2.shape[0] * leaf.cfg.m // leaf.cfg.n
+        x = jax.random.normal(jax.random.PRNGKey(0), (n_slots, k_dense),
+                              jnp.bfloat16)
+        apply = jax.jit(lambda o, xx: O.nm_apply(o, xx, backend="jnp"))
+        jax.block_until_ready(apply(op, x))  # compile outside the timer
+        t0 = time.perf_counter()
+        reps = 10
+        for _ in range(reps):
+            jax.block_until_ready(apply(op, x))
+        out[name] = {
+            "layers": int(vals.shape[0]) if vals.ndim == 3 else 1,
+            "idx_bits": leaf.idx_bits,
+            "vals_bytes": int(vals.nbytes),
+            "idx_bytes": int(idx.nbytes),
+            "stored_bytes": int(vals.nbytes) + int(idx.nbytes),
+            "dense_bytes": int(vals.nbytes) * leaf.cfg.m // leaf.cfg.n,
+            "decode_latency_oracle_ms": (time.perf_counter() - t0)
+            / reps * 1e3,
+        }
+    return out
+
+
 def main(smoke: bool = False, out_path: str | None = None) -> dict:
     arch = get_arch("qwen3-8b")
     cfg = arch.smoke
@@ -94,6 +164,32 @@ def main(smoke: bool = False, out_path: str | None = None) -> dict:
     # host-side counters between load levels
     engine = ServeEngine(params, cfg, sp_cfg, serve_cfg)
     hbm = engine.hbm_report()
+
+    # measured decode traffic: structural bytes of one lowered decode
+    # step, u4 store vs a byte-wide u8 control over the same weights —
+    # the index-plane halving must be visible in the per-step HLO bytes
+    hlo_u4 = _decode_step_hlo(engine)
+    eng_u8 = ServeEngine(params, cfg, sp_cfg,
+                         ServeConfig(n_slots=slots, prompt_bucket=16,
+                                     max_len=16 + max_new, packed=True,
+                                     idx_bits=8))
+    hlo_u8 = _decode_step_hlo(eng_u8)
+    decode = {
+        "hlo_bytes_per_step_u4": int(hlo_u4["bytes"]),
+        "hlo_bytes_per_step_u8": int(hlo_u8["bytes"]),
+        "hlo_flops_per_step": int(hlo_u4["flops"]),
+        # what the u4 plane saves each step, measured off the HLO.  This
+        # exceeds the raw plane-size delta below: the halved plane also
+        # halves every fusion-boundary re-read and decompress
+        # intermediate derived from it inside the scanned layer body
+        "idx_bytes_saved_per_step": int(hlo_u8["bytes"] - hlo_u4["bytes"]),
+        # the stored-plane delta: u8 planes minus u4 planes, off .nbytes
+        "idx_bytes_saved_accounted": (
+            eng_u8.store.measured_packed_bytes()
+            - engine.store.measured_packed_bytes()),
+    }
+    del eng_u8
+    projections = projection_section(engine, slots)
     rows = []
     for load in loads:
         engine.reset()
@@ -111,6 +207,8 @@ def main(smoke: bool = False, out_path: str | None = None) -> dict:
         "serve": {"n_slots": slots, "prompt_bucket": 16,
                   "max_len": 16 + max_new, "packed": True},
         "hbm": hbm,
+        "decode": decode,
+        "projections": projections,
         "smoke": smoke,
         "loads": rows,
     }
@@ -118,6 +216,14 @@ def main(smoke: bool = False, out_path: str | None = None) -> dict:
     out_path = out_path or os.path.join(RESULTS, "BENCH_serve.json")
     with open(out_path, "w") as f:
         json.dump(summary, f, indent=2)
+    print(f"store: idx_bits={hbm['idx_bits']} measured "
+          f"{hbm['measured_packed_weight_bytes']} B = "
+          f"{hbm['measured_over_accounted_4bit']:.3f}x the accounted "
+          f"4-bit-idx footprint ({hbm['packed_weight_bytes_4bit_idx']} B)")
+    print(f"decode step HLO bytes: u4 {decode['hlo_bytes_per_step_u4']} "
+          f"vs u8 {decode['hlo_bytes_per_step_u8']} "
+          f"(saves {decode['idx_bytes_saved_per_step']} B/step; "
+          f"planes account {decode['idx_bytes_saved_accounted']} B)")
     print(f"wrote {out_path}")
     return summary
 

@@ -17,17 +17,25 @@ checkpoint as ordinary leaves):
                         methods incl. sdgp gradient pruning).
   PregenOp(ff|vals+idx, pre-generated WU-time operands (paper Fig. 11c,
            bp, mask,    written by optim/sgd): FF forward on the stored
-           cfg)         sparse operand — packed ``(vals, idx)`` consumed
-                        straight through ``kernels/nm_spmm`` on the
+           cfg,         sparse operand — packed ``(vals, idx)`` consumed
+           idx_bits)    straight through ``kernels/nm_spmm`` on the
                         pallas backend, decompressed (select-based, no
                         scatter) on the jnp backend — BP backward on the
                         ``bp`` operand, and the dense straight-through
                         WU gradient riding the ``bp`` cotangent.
   PackedOp(vals, idx,   forward-only element-packed serving weight
-           cfg)         (serve/packed_params): ``kernels/nm_spmm``
-                        consumes the pair at ~N/M of dense HBM bytes.
+           cfg,         (serve/packed_params): ``kernels/nm_spmm``
+           idx_bits)    consumes the pair at ~N/M of dense HBM bytes.
   SharedOp(vals, idx)   shared-pattern reduced-K serving weight
                         (bdwp.pack_tree_shared): gather + short matmul.
+
+``idx_bits`` (4 or 8, default 8) names the stored index-plane width on
+the two packed operands: 8 = one uint8 in-group offset per kept value,
+4 = two offsets per byte (``sparsity.pack_idx_u4`` layout, M <= 16 —
+the serving default, worth an extra ~17% off packed HBM bytes at 2:8).
+It rides the pytree *aux* (not a leaf), so jit caches key on the index
+format and a u4 tree can never be silently consumed as u8.  Both widths
+are bitwise interchangeable end-to-end — same matmul, same grads.
 
 Backends: ``backend="auto"`` resolves through the ambient
 ``backend_scope`` (set by the train-step builders) and then the device —
@@ -118,7 +126,11 @@ class SparseOperand:
         return new
 
     def _aux(self):
-        return (self.fields, getattr(self, "cfg", None))
+        # idx_bits rides the aux so jit caches key on the index format;
+        # the 2-tuple form is still accepted by _unflatten (pre-u4
+        # pickled treedefs and any external callers keep working)
+        return (self.fields, getattr(self, "cfg", None),
+                getattr(self, "idx_bits", 8))
 
     def _children(self):
         return tuple(getattr(self, f) for f in self.fields)
@@ -126,7 +138,8 @@ class SparseOperand:
     @classmethod
     def _unflatten(cls, aux, children):
         new = object.__new__(cls)
-        new.fields, new.cfg = aux
+        new.fields, new.cfg = aux[0], aux[1]
+        new.idx_bits = aux[2] if len(aux) > 2 else 8
         for f in cls._FIELDS:
             setattr(new, f, None)
         for f, c in zip(new.fields, children):
@@ -189,7 +202,7 @@ class PregenOp(SparseOperand):
     _FIELDS = ("bp", "ff", "idx", "mask", "vals")  # alphabetical — see above
 
     def __init__(self, *, bp, ff=None, vals=None, idx=None, mask=None,
-                 cfg: SparsityConfig | None = None):
+                 cfg: SparsityConfig | None = None, idx_bits: int = 8):
         transposable = cfg is not None and getattr(cfg, "transposable", False)
         if ff is not None and vals is not None:
             raise ValueError("PregenOp needs at most one of ff | (vals, idx)")
@@ -198,12 +211,15 @@ class PregenOp(SparseOperand):
                              " (bp-only operands require a transposable cfg)")
         if (vals is None) != (idx is None):
             raise ValueError("PregenOp packed form needs both vals and idx")
+        if idx_bits not in (4, 8):
+            raise ValueError(f"idx_bits must be 4 or 8, got {idx_bits}")
         present = {"bp": bp, "ff": ff, "idx": idx, "mask": mask, "vals": vals}
         self.fields = tuple(f for f in self._FIELDS
                             if present[f] is not None)
         for f in self._FIELDS:
             setattr(self, f, present[f])
         self.cfg = cfg
+        self.idx_bits = idx_bits
 
     @property
     def is_packed(self) -> bool:
@@ -219,16 +235,24 @@ class PregenOp(SparseOperand):
 class PackedOp(SparseOperand):
     """Forward-only element-packed serving weight (serve/packed_params).
 
-    vals (…, K·N/M, F) surviving values; idx same-shape uint8 in-group
-    offsets; consumed through ``kernels/nm_spmm``."""
+    vals (…, K·N/M, F) surviving values; idx the uint8 in-group offset
+    plane — same shape as vals with ``idx_bits=8``, or the u4-packed
+    plane (…, ceil(K·N/M / 2), F) with ``idx_bits=4`` (two offsets per
+    byte, ``core.sparsity.pack_idx_u4`` layout — half the index HBM
+    traffic).  Consumed through ``kernels/nm_spmm``; ``idx_bits`` rides
+    the pytree aux, so both formats dispatch through ``nm_apply``
+    unchanged."""
 
     _FIELDS = ("idx", "vals")  # alphabetical
 
-    def __init__(self, vals, idx, cfg: SparsityConfig):
+    def __init__(self, vals, idx, cfg: SparsityConfig, idx_bits: int = 8):
+        if idx_bits not in (4, 8):
+            raise ValueError(f"idx_bits must be 4 or 8, got {idx_bits}")
         self.fields = ("idx", "vals")
         self.vals = vals
         self.idx = idx
         self.cfg = cfg
+        self.idx_bits = idx_bits
 
     @property
     def shape(self) -> tuple:
@@ -409,23 +433,27 @@ def _pregen_linear_bwd(res, g):
 pregen_linear.defvjp(_pregen_linear_fwd, _pregen_linear_bwd)
 
 
-def _spmm_stacked(x2, vals, idx, n: int, m: int, use_pallas: bool):
+def _spmm_stacked(x2, vals, idx, n: int, m: int, use_pallas: bool,
+                  idx_bits: int = 8):
     """kernels/nm_spmm over optionally-stacked packed weights.
 
     x2 (*stack, T, K), vals/idx (*stack, Kc, F) — vmaps the kernel over
-    the leading stack axes (MoE expert stacks ride the same kernel)."""
+    the leading stack axes (MoE expert stacks ride the same kernel).
+    ``idx_bits=4`` hands the kernel the u4 index plane unchanged."""
     from repro.kernels import ops  # local import to avoid cycles
 
     if vals.ndim == 2:
-        return ops.nm_spmm(x2, vals, idx, n, m, use_pallas=use_pallas)
+        return ops.nm_spmm(x2, vals, idx, n, m, use_pallas=use_pallas,
+                           idx_bits=idx_bits)
     return jax.vmap(
-        lambda xe, ve, ie: _spmm_stacked(xe, ve, ie, n, m, use_pallas)
+        lambda xe, ve, ie: _spmm_stacked(xe, ve, ie, n, m, use_pallas,
+                                         idx_bits)
     )(x2, vals, idx)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
 def packed_pregen_linear(x, vals, idx, bp, n: int, m: int,
-                         use_pallas: bool = True):
+                         use_pallas: bool = True, idx_bits: int = 8):
     """Packed-FF pre-generated matmul: the forward consumes the SORE
     pair ``(vals, idx)`` directly through ``kernels/nm_spmm`` — the
     dense FF layout never materializes in HBM — while BP/WU follow the
@@ -434,21 +462,22 @@ def packed_pregen_linear(x, vals, idx, bp, n: int, m: int,
 
     Shapes: x (*stack, ..., K), vals/idx (*stack, Kc, F), bp
     (*stack, K, F); token dims between stack and K are flattened for the
-    kernel and restored after.
+    kernel and restored after.  ``idx_bits=4``: idx is the u4 plane
+    (*stack, ceil(Kc/2), F).
     """
-    y, _ = _packed_pregen_fwd(x, vals, idx, bp, n, m, use_pallas)
+    y, _ = _packed_pregen_fwd(x, vals, idx, bp, n, m, use_pallas, idx_bits)
     return y
 
 
-def _packed_pregen_fwd(x, vals, idx, bp, n, m, use_pallas):
+def _packed_pregen_fwd(x, vals, idx, bp, n, m, use_pallas, idx_bits=8):
     stack = vals.ndim - 2
     x2 = x.reshape(*x.shape[:stack], -1, x.shape[-1])
-    y = _spmm_stacked(x2, vals, idx, n, m, use_pallas)
+    y = _spmm_stacked(x2, vals, idx, n, m, use_pallas, idx_bits)
     y = y.reshape(*x.shape[:-1], vals.shape[-1]).astype(x.dtype)
     return y, (x, vals, idx, bp)
 
 
-def _packed_pregen_bwd(n, m, use_pallas, res, g):
+def _packed_pregen_bwd(n, m, use_pallas, idx_bits, res, g):
     x, vals, idx, bp = res
     stack = bp.ndim - 2
     gc = g.astype(x.dtype)
@@ -468,9 +497,9 @@ def _packed_pregen_bwd(n, m, use_pallas, res, g):
 packed_pregen_linear.defvjp(_packed_pregen_fwd, _packed_pregen_bwd)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
 def packed_pregen_linear_t(x, vals, idx, bp, n: int, m: int,
-                           use_pallas: bool = True):
+                           use_pallas: bool = True, idx_bits: int = 8):
     """Transposable-mask packed matmul (arXiv 2102.08124): the ONE
     stored mask is N:M along both the contraction and the output axis,
     so the packed ``(vals, idx)`` pair serves FF *and* BP.  The forward
@@ -481,11 +510,11 @@ def packed_pregen_linear_t(x, vals, idx, bp, n: int, m: int,
     carries the dense straight-through WU gradient on its cotangent —
     no op ever reads the array, so the lowered step loads one weight
     operand per layer instead of two."""
-    y, _ = _packed_pregen_fwd(x, vals, idx, bp, n, m, use_pallas)
+    y, _ = _packed_pregen_fwd(x, vals, idx, bp, n, m, use_pallas, idx_bits)
     return y
 
 
-def _packed_pregen_t_bwd(n, m, use_pallas, res, g):
+def _packed_pregen_t_bwd(n, m, use_pallas, idx_bits, res, g):
     x, vals, idx, bp = res
     from repro.kernels.nm_spmm_shared import decompress_nm
 
@@ -493,7 +522,7 @@ def _packed_pregen_t_bwd(n, m, use_pallas, res, g):
     gc = g.astype(x.dtype)
     g2 = gc.reshape(*gc.shape[:stack], -1, gc.shape[-1])
     x2 = x.reshape(*x.shape[:stack], -1, x.shape[-1])
-    w_bp = decompress_nm(vals, idx, n, m, axis=-2)
+    w_bp = decompress_nm(vals, idx, n, m, axis=-2, idx_bits=idx_bits)
     dx = jnp.matmul(g2, jnp.swapaxes(w_bp, -1, -2).astype(gc.dtype))
     dx = dx.reshape(x.shape).astype(x.dtype)
     dw = jnp.matmul(jnp.swapaxes(x2, -1, -2), g2,
@@ -595,7 +624,7 @@ def _packed_serve(x, op: PackedOp, backend: str):
     stack = op.vals.ndim - 2
     x2 = x.reshape(*x.shape[:stack], -1, x.shape[-1])
     y = _spmm_stacked(x2, op.vals, op.idx, op.cfg.n, op.cfg.m,
-                      backend == "pallas")
+                      backend == "pallas", op.idx_bits)
     return y.reshape(*x.shape[:-1], op.vals.shape[-1]).astype(x.dtype)
 
 
@@ -621,7 +650,8 @@ def _pregen_ff_dense(op: PregenOp) -> jax.Array:
         from repro.kernels.nm_spmm_shared import decompress_nm
 
         cfg = op.cfg
-        return decompress_nm(op.vals, op.idx, cfg.n, cfg.m, axis=-2)
+        return decompress_nm(op.vals, op.idx, cfg.n, cfg.m, axis=-2,
+                             idx_bits=op.idx_bits)
     return op.bp
 
 
@@ -640,7 +670,11 @@ def nm_apply(op, x: jax.Array, *, backend: str = "auto",
         "pallas" streams them through ``kernels/nm_spmm`` (interpret
         mode off-TPU), "jnp" decompresses in-register (select-based, no
         scatter) and runs the dense-layout matmul; "auto" defers to the
-        ambient ``backend_scope`` then the device.
+        ambient ``backend_scope`` then the device;
+      * the operand's ``idx_bits`` flows through unchanged — a u4 index
+        plane is expanded inside the kernel tile (pallas) or unpacked
+        nibble-first before the in-register decompress (jnp); the two
+        widths are bitwise interchangeable.
 
     Gradient semantics ride the operand type: MaskedOp re-derives masks
     per cfg.method; PregenOp backs through ``bp`` with the dense
@@ -670,7 +704,8 @@ def nm_apply(op, x: jax.Array, *, backend: str = "auto",
             cfg = op.cfg
             fn = packed_pregen_linear_t if op.is_transposable \
                 else packed_pregen_linear
-            return fn(x, op.vals, op.idx, op.bp, cfg.n, cfg.m, True)
+            return fn(x, op.vals, op.idx, op.bp, cfg.n, cfg.m, True,
+                      op.idx_bits)
         ff = _pregen_ff_dense(op)
         if stacked:
             return jax.vmap(pregen_linear)(x, ff, op.bp)

@@ -418,6 +418,48 @@ def nm_unpack_n(values: jax.Array, indices: jax.Array, n: int, m: int, axis: int
 
 
 # ---------------------------------------------------------------------------
+# 4-bit index packing — two in-group offsets per byte
+# ---------------------------------------------------------------------------
+#
+# An N:M in-group offset needs ceil(log2 M) bits; for every M <= 16 that is
+# at most 4, so two consecutive offsets along the compact axis share one
+# uint8: entry 2i in the low nibble, entry 2i+1 in the high nibble.  An odd
+# compact-axis length zero-pads the final high nibble (the unpacked length
+# is an explicit argument of ``unpack_idx_u4``, so the pad never leaks).
+# This is the storage format arXiv 2102.04010 argues makes N:M
+# hardware-friendly: index HBM traffic halves on a bytes-bound decode.
+
+
+def pack_idx_u4(idx: jax.Array, axis: int = -1) -> jax.Array:
+    """Pack uint8 in-group offsets (< 16) to two-per-byte along ``axis``.
+
+    Output axis length is ``ceil(len/2)``; all other axes are unchanged.
+    Bitwise inverse of ``unpack_idx_u4`` for any values < 16 (the N:M
+    compact formats guarantee offsets in [0, M) with M <= 16).
+    """
+    it, inv = _move_axis_last(idx, axis)
+    kc = it.shape[-1]
+    pad = kc % 2
+    if pad:
+        it = jnp.pad(it, [(0, 0)] * (it.ndim - 1) + [(0, 1)])
+    pairs = it.reshape(*it.shape[:-1], (kc + pad) // 2, 2).astype(jnp.uint8)
+    packed = pairs[..., 0] | (pairs[..., 1] << 4)
+    return jnp.transpose(packed, inv)
+
+
+def unpack_idx_u4(packed: jax.Array, kc: int, axis: int = -1) -> jax.Array:
+    """Unpack two-per-byte nibbles back to ``kc`` uint8 offsets along ``axis``."""
+    pt, inv = _move_axis_last(packed, axis)
+    if pt.shape[-1] != (kc + 1) // 2:
+        raise ValueError(
+            f"packed axis {pt.shape[-1]} does not hold kc={kc} nibbles")
+    lo = pt & jnp.uint8(0x0F)
+    hi = pt >> 4
+    idx = jnp.stack([lo, hi], axis=-1).reshape(*pt.shape[:-1], -1)[..., :kc]
+    return jnp.transpose(idx, inv)
+
+
+# ---------------------------------------------------------------------------
 # SR-STE regularized straight-through update term
 # ---------------------------------------------------------------------------
 

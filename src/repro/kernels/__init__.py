@@ -4,16 +4,31 @@ This is the public kernel surface — consumers (core/operand, serve,
 benchmarks) import from here instead of deep-importing the private
 modules:
 
-  nm_compact / nm_spmm / nm_spmm_shared / fused_update
-      jit'd dispatchers (kernels.ops): Pallas on TPU, interpret mode on
-      CPU, oracle with ``use_pallas=False``.
-  nm_spmm_pallas / nm_spmm_shared_pallas / nm_compact_pallas /
+  nm_compact(w, n, m, *, idx_bits=8)
+      SORE compact packing: dense -> (vals, idx) along the second-to-
+      last axis.  ``idx_bits=4`` emits the half-width index plane (two
+      in-group offsets per byte, low nibble first, final high nibble
+      zero-padded on odd compact extents; requires M <= 16).
+  nm_spmm(x, vals, idx, n, m, *, idx_bits=8)
+      fused decompress-matmul: the dense weight tile exists only in
+      VMEM.  ``idx_bits=4`` expands nibbles inside the kernel tile, so
+      the index plane crosses HBM at half width.  The pallas path falls
+      back to the bitwise-equal jnp oracle when a u4 tile cannot split
+      cleanly (odd compact rows per block); callers never see the
+      difference — the two widths are bitwise interchangeable by
+      construction and pinned so in tests/test_operand.py.
+  nm_spmm_shared / fused_update
+      reduced-K shared-pattern matmul; fused SGD + re-sparsify weight
+      update (emits u8 or u4 planes to match the operand).
+  nm_compact_pallas / nm_spmm_pallas / nm_spmm_shared_pallas /
   fused_update_pallas
-      the raw pallas_call wrappers (explicit block sizes).
-  decompress_nm
+      the raw pallas_call wrappers (explicit block sizes) behind the
+      jit'd dispatchers above — Pallas on TPU, interpret mode on CPU,
+      oracle with ``use_pallas=False``.
+  decompress_nm(vals, idx, n, m, *, idx_bits=8)
       the one shared (vals, idx) -> dense N:M expansion (select-based,
       scatter-free) used by the kernel, the oracle and the operand
-      fallback alike.
+      fallback alike; unpacks u4 nibbles first when ``idx_bits=4``.
   pack_shared / packed_bytes
       host-side shared-mode packer + HBM byte accounting.
 """

@@ -57,12 +57,21 @@ def _select_topn(g: jax.Array, n: int, m: int):
     return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
 
 
-def _compact_kernel(x_ref, vals_ref, idx_ref, *, n: int, m: int):
+def _compact_kernel(x_ref, vals_ref, idx_ref, *, n: int, m: int,
+                    idx_bits: int = 8):
     tr, tk = x_ref.shape
     g = x_ref[...].reshape(tr, tk // m, m)
     v, i = _select_topn(g, n, m)
-    vals_ref[...] = v.reshape(tr, (tk // m) * n).astype(vals_ref.dtype)
-    idx_ref[...] = i.reshape(tr, (tk // m) * n).astype(jnp.uint8)
+    kc = (tk // m) * n
+    vals_ref[...] = v.reshape(tr, kc).astype(vals_ref.dtype)
+    if idx_bits == 4:
+        # two offsets per byte, low nibble first — the SORE output in the
+        # ceil(log2 M)-bit storage format (arXiv 2102.04010); the byte-wide
+        # index never exists outside this tile
+        pair = i.reshape(tr, kc // 2, 2).astype(jnp.uint8)
+        idx_ref[...] = pair[..., 0] | (pair[..., 1] << 4)
+    else:
+        idx_ref[...] = i.reshape(tr, kc).astype(jnp.uint8)
 
 
 def nm_compact_pallas(
@@ -72,22 +81,35 @@ def nm_compact_pallas(
     *,
     block_r: int = 256,
     block_k: int = 512,
+    idx_bits: int = 8,
     interpret: bool = False,
 ):
-    """Pack (R, K) -> values (R, K*n/m), idx uint8 along the last axis."""
+    """Pack (R, K) -> values (R, K*n/m), idx uint8 along the last axis.
+
+    ``idx_bits=4`` emits the u4 index plane (R, K*n/m/2) straight from
+    the selection tile — two in-group offsets per byte, low nibble first
+    (``core.sparsity.pack_idx_u4`` layout).  Needs an even per-tile
+    compact length, which every even ``n`` guarantees.
+    """
     r, k = x.shape
     block_r = min(block_r, r)
     block_k = min(block_k, k)
     assert k % m == 0 and block_k % m == 0, (k, block_k, m)
     assert r % block_r == 0 and k % block_k == 0, (r, k, block_r, block_k)
     kc_blk = block_k // m * n
+    if idx_bits == 4:
+        assert kc_blk % 2 == 0, (
+            f"u4 compact tiles must be even, got block_kc={kc_blk}")
+    idx_blk = kc_blk // 2 if idx_bits == 4 else kc_blk
     grid = (r // block_r, k // block_k)
+    kc = k // m * n
     out_shape = (
-        jax.ShapeDtypeStruct((r, k // m * n), x.dtype),
-        jax.ShapeDtypeStruct((r, k // m * n), jnp.uint8),
+        jax.ShapeDtypeStruct((r, kc), x.dtype),
+        jax.ShapeDtypeStruct((r, kc // 2 if idx_bits == 4 else kc),
+                             jnp.uint8),
     )
     return pl.pallas_call(
-        functools.partial(_compact_kernel, n=n, m=m),
+        functools.partial(_compact_kernel, n=n, m=m, idx_bits=idx_bits),
         grid=grid,
         in_specs=[
             pl.BlockSpec(
@@ -103,7 +125,7 @@ def nm_compact_pallas(
                 memory_space=pltpu.MemorySpace.VMEM,
             ),
             pl.BlockSpec(
-                (block_r, kc_blk),
+                (block_r, idx_blk),
                 lambda i, j: (i, j),
                 memory_space=pltpu.MemorySpace.VMEM,
             ),
@@ -116,5 +138,5 @@ def nm_compact_pallas(
             )
         ),
         interpret=interpret,
-        name=f"nm_compact_{n}_{m}",
+        name=f"nm_compact_{n}_{m}" + ("_u4" if idx_bits == 4 else ""),
     )(x)

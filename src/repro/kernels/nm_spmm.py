@@ -37,25 +37,29 @@ from jax.experimental import pallas as pl
 from repro.kernels import pallas_compat as pltpu
 
 
-def _decompress(vals, idx, n: int, m: int):
+def _decompress(vals, idx, n: int, m: int, idx_bits: int = 8):
     """(TKc, TF) packed -> (TK, TF) dense, TK = TKc*m/n.
 
     Delegates to the package-wide select-based helper (one decompress
     implementation for the kernel, the oracle and the operand fallback).
+    With ``idx_bits=4`` the index tile is the u4 plane (TKc//2, TF) and
+    the nibble expansion happens here, inside the tile — the byte-wide
+    index never exists in HBM and the dense weight never leaves VMEM.
     """
     from repro.kernels.nm_spmm_shared import decompress_nm
 
-    return decompress_nm(vals, idx, n, m, axis=0)
+    return decompress_nm(vals, idx, n, m, axis=0, idx_bits=idx_bits)
 
 
-def _spmm_kernel(act_ref, vals_ref, idx_ref, out_ref, *, n: int, m: int, nk: int):
+def _spmm_kernel(act_ref, vals_ref, idx_ref, out_ref, *, n: int, m: int,
+                 nk: int, idx_bits: int = 8):
     k_step = pl.program_id(2)
 
     @pl.when(k_step == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    w_dense = _decompress(vals_ref[...], idx_ref[...], n, m)
+    w_dense = _decompress(vals_ref[...], idx_ref[...], n, m, idx_bits)
     acc = jnp.dot(
         act_ref[...],
         w_dense.astype(act_ref.dtype),
@@ -74,23 +78,40 @@ def nm_spmm_pallas(
     block_b: int = 128,
     block_f: int = 128,
     block_k: int = 512,
+    idx_bits: int = 8,
     interpret: bool = False,
 ):
-    """act (B, K) @ packed weights (Kc=K*n/m, F) -> (B, F) fp32."""
+    """act (B, K) @ packed weights (Kc=K*n/m, F) -> (B, F) fp32.
+
+    ``idx_bits=4`` consumes the u4-packed index plane (Kc//2, F): the
+    index BlockSpec streams half the bytes per tile and the nibble
+    expansion is fused into the tile decompress, so decode moves
+    ``Kc*F`` value bytes + ``Kc*F/2`` index bytes and nothing dense.
+    Requires an even per-tile compact length (any even ``n`` satisfies
+    it); ``kernels.ops.nm_spmm`` falls back to jnp otherwise.
+    """
     b, k = act.shape
     kc, f = vals.shape
     assert kc * m == k * n, (k, kc, n, m)
-    assert idx.shape == vals.shape
     block_b = min(block_b, b)
     block_f = min(block_f, f)
     block_k = min(block_k, k)
     assert b % block_b == 0 and f % block_f == 0 and k % block_k == 0
     assert block_k % m == 0
     block_kc = block_k // m * n
+    if idx_bits == 4:
+        assert kc % 2 == 0 and block_kc % 2 == 0, (
+            f"u4 pallas path needs even compact tiles, got Kc={kc}, "
+            f"block_kc={block_kc}")
+        assert idx.shape == (kc // 2, f), (idx.shape, kc, f)
+        block_kci = block_kc // 2
+    else:
+        assert idx.shape == vals.shape
+        block_kci = block_kc
     nk = k // block_k
     grid = (b // block_b, f // block_f, nk)
     return pl.pallas_call(
-        functools.partial(_spmm_kernel, n=n, m=m, nk=nk),
+        functools.partial(_spmm_kernel, n=n, m=m, nk=nk, idx_bits=idx_bits),
         grid=grid,
         in_specs=[
             pl.BlockSpec(
@@ -104,7 +125,7 @@ def nm_spmm_pallas(
                 memory_space=pltpu.MemorySpace.VMEM,
             ),
             pl.BlockSpec(
-                (block_kc, block_f),
+                (block_kci, block_f),
                 lambda i, j, kk: (kk, j),
                 memory_space=pltpu.MemorySpace.VMEM,
             ),
@@ -123,5 +144,5 @@ def nm_spmm_pallas(
             )
         ),
         interpret=interpret,
-        name=f"nm_spmm_{n}_{m}",
+        name=f"nm_spmm_{n}_{m}" + ("_u4" if idx_bits == 4 else ""),
     )(act, vals, idx)

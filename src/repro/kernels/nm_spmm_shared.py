@@ -43,17 +43,41 @@ from repro.kernels import pallas_compat as pltpu
 # (core/sparsity.nm_unpack_n).
 
 
+def unpack_idx_nibbles(idx: jax.Array, kc: int, axis: int) -> jax.Array:
+    """Two-per-byte nibble expansion along ``axis`` (low nibble first).
+
+    Kernel-safe inline of ``core.sparsity.unpack_idx_u4`` — interleaves
+    ``idx & 0xF`` and ``idx >> 4`` and trims to ``kc`` entries.  Lives
+    here so the Pallas tile decompress never imports the core layer.
+    """
+    axis = axis % idx.ndim
+    lo = idx & jnp.uint8(0x0F)
+    hi = idx >> 4
+    pair = jnp.stack([lo, hi], axis=axis + 1)
+    shape = idx.shape[:axis] + (2 * idx.shape[axis],) + idx.shape[axis + 1:]
+    return jax.lax.slice_in_dim(pair.reshape(shape), 0, kc, axis=axis)
+
+
 def decompress_nm(vals: jax.Array, idx: jax.Array, n: int, m: int,
-                  axis: int = -1) -> jax.Array:
+                  axis: int = -1, idx_bits: int = 8) -> jax.Array:
     """(…, Kc, …) packed -> (…, K, …) dense along ``axis``, K = Kc*m/n.
 
     dense[g*m + s] = sum_j vals[g*n + j] * (idx[g*n + j] == s), unrolled
     over the m slot positions — all ops are selects/adds, no scatter.
+
+    ``idx_bits=4`` accepts the u4-packed index plane (two in-group
+    offsets per byte along ``axis``, ceil(Kc/2) bytes); it is expanded
+    with :func:`unpack_idx_nibbles` first, so the result is bitwise
+    identical to the byte-wide path on the same offsets.
     """
     axis = axis % vals.ndim
     kc = vals.shape[axis]
     if kc % n:
         raise ValueError(f"packed axis {kc} not divisible by n={n}")
+    if idx_bits == 4:
+        idx = unpack_idx_nibbles(idx, kc, axis)
+    elif idx_bits != 8:
+        raise ValueError(f"idx_bits must be 4 or 8, got {idx_bits}")
     shape = vals.shape
     g = kc // n
     gshape = shape[:axis] + (g, n) + shape[axis + 1:]

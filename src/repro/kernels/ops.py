@@ -37,34 +37,67 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("n", "m", "use_pallas"))
-def nm_compact(x: jax.Array, n: int, m: int, use_pallas: bool = True):
-    """SORE: pack along the last axis -> (values, uint8 indices)."""
-    if not use_pallas:
-        return ref.ref_nm_compact(x, n, m)
+@functools.partial(jax.jit,
+                   static_argnames=("n", "m", "use_pallas", "idx_bits"))
+def nm_compact(x: jax.Array, n: int, m: int, use_pallas: bool = True,
+               idx_bits: int = 8):
+    """SORE: pack along the last axis -> (values, uint8 indices).
+
+    ``idx_bits=4`` returns the u4 index plane (two offsets per byte,
+    compact axis length ceil(Kc/2)); the Pallas path emits it straight
+    from the selection tile, the fallback packs the oracle's bytes.
+    """
+    if idx_bits not in (4, 8):
+        raise ValueError(f"idx_bits must be 4 or 8, got {idx_bits}")
     shape = x.shape
-    x2 = x.reshape(-1, shape[-1])
-    r, k = x2.shape
-    br = _pick_block(r, (256, 128, 64, 32, 16, 8, 4, 2, 1))
-    bk = _pick_block(k, (512, 256, 128, 64, 32, 16, 8), multiple_of=m)
-    v, i = nm_compact_pallas(x2, n, m, block_r=br, block_k=bk, interpret=_interpret())
-    kc = k // m * n
-    return v.reshape(*shape[:-1], kc), i.reshape(*shape[:-1], kc)
+    kc = shape[-1] // m * n
+    bk_ok = True
+    if use_pallas:
+        x2 = x.reshape(-1, shape[-1])
+        r, k = x2.shape
+        br = _pick_block(r, (256, 128, 64, 32, 16, 8, 4, 2, 1))
+        bk = _pick_block(k, (512, 256, 128, 64, 32, 16, 8), multiple_of=m)
+        bk_ok = idx_bits == 8 or (bk // m * n) % 2 == 0
+    if not use_pallas or not bk_ok:
+        v, i = ref.ref_nm_compact(x, n, m)
+        if idx_bits == 4:
+            i = S.pack_idx_u4(i, axis=-1)
+        return v, i
+    v, i = nm_compact_pallas(x2, n, m, block_r=br, block_k=bk,
+                             idx_bits=idx_bits, interpret=_interpret())
+    kci = (kc + 1) // 2 if idx_bits == 4 else kc
+    return v.reshape(*shape[:-1], kc), i.reshape(*shape[:-1], kci)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "m", "use_pallas"))
-def nm_spmm(act, vals, idx, n: int, m: int, use_pallas: bool = True):
-    """Element-mode sparse matmul: (B,K) @ packed(Kc,F) -> (B,F) fp32."""
+@functools.partial(jax.jit,
+                   static_argnames=("n", "m", "use_pallas", "idx_bits"))
+def nm_spmm(act, vals, idx, n: int, m: int, use_pallas: bool = True,
+            idx_bits: int = 8):
+    """Element-mode sparse matmul: (B,K) @ packed(Kc,F) -> (B,F) fp32.
+
+    ``idx_bits=4`` consumes the u4 index plane (ceil(Kc/2), F) — two
+    in-group offsets per byte, low nibble first (see
+    ``core.sparsity.pack_idx_u4``).  The Pallas path fuses the nibble
+    expansion into the tile decompress (half the index HBM traffic, no
+    dense weight outside VMEM); shapes the tiled kernel cannot split
+    evenly (odd compact tiles — impossible for even n) fall back to the
+    oracle.  Both paths are bitwise-identical to ``idx_bits=8`` on the
+    same offsets.
+    """
     if not use_pallas:
-        return ref.ref_nm_spmm(act, vals, idx, n, m)
+        return ref.ref_nm_spmm(act, vals, idx, n, m, idx_bits=idx_bits)
     b, k = act.shape
-    _, f = vals.shape
+    kc, f = vals.shape
     bb = _pick_block(b, (128, 64, 32, 16, 8, 4, 2, 1))
     bf = _pick_block(f, (128, 64, 32, 16, 8))
     bk = _pick_block(k, (512, 256, 128, 64, 32, 16, 8), multiple_of=m)
+    if idx_bits == 4 and (kc % 2 or (bk // m * n) % 2):
+        # the tiled kernel streams whole bytes of the u4 plane; an odd
+        # compact tile would straddle one — route to the fused-free oracle
+        return ref.ref_nm_spmm(act, vals, idx, n, m, idx_bits=idx_bits)
     return nm_spmm_pallas(
         act, vals, idx, n, m, block_b=bb, block_f=bf, block_k=bk,
-        interpret=_interpret(),
+        idx_bits=idx_bits, interpret=_interpret(),
     )
 
 

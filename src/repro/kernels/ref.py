@@ -20,17 +20,19 @@ def ref_nm_compact(x: jax.Array, n: int, m: int):
     return S.nm_pack(x, n, m, axis=-1)
 
 
-def ref_nm_spmm(act: jax.Array, vals: jax.Array, idx: jax.Array, n: int, m: int):
+def ref_nm_spmm(act: jax.Array, vals: jax.Array, idx: jax.Array, n: int, m: int,
+                idx_bits: int = 8):
     """Element-mode N:M sparse matmul oracle.
 
     act:  (B, K) dense activations
     vals: (Kc, F) packed weight values, Kc = K*n/m, pattern along K per column
-    idx:  (Kc, F) uint8 within-group offsets
+    idx:  (Kc, F) uint8 within-group offsets — or the u4 plane
+          (ceil(Kc/2), F) with ``idx_bits=4``, two offsets per byte
     out:  (B, F) fp32
     """
     from repro.kernels.nm_spmm_shared import decompress_nm
 
-    w = decompress_nm(vals, idx, n, m, axis=0)
+    w = decompress_nm(vals, idx, n, m, axis=0, idx_bits=idx_bits)
     return jnp.dot(act, w.astype(act.dtype), preferred_element_type=jnp.float32)
 
 

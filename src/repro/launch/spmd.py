@@ -146,10 +146,14 @@ def sanitize_pspecs(pspecs, tree, mesh: Mesh):
 
 
 def serve_shardings(cfg, mesh: Mesh, sp_cfg, *, n_slots: int, max_len: int,
-                    packed: bool = False, cache_dtype=jnp.bfloat16) -> dict:
+                    packed: bool = False, idx_bits=None,
+                    cache_dtype=jnp.bfloat16) -> dict:
     """Resolve SERVE_BATCH NamedShardings for a continuous-batching
     engine: params (TP over "model", N:M groups unsplit), the slot-paged
     KV cache (slot axis over the DP axes), per-slot tokens/positions.
+
+    ``idx_bits`` must match the engine's packed store (None resolves the
+    same ``default_idx_bits`` auto choice, so the default agrees).
 
     Returns {"params", "cache", "token", "pos"} of NamedSharding trees
     plus the raw "pspecs" for introspection/tests.  The resolved specs
@@ -164,7 +168,8 @@ def serve_shardings(cfg, mesh: Mesh, sp_cfg, *, n_slots: int, max_len: int,
     check_tree = aparams
     if packed:
         check_tree, _, p_pspecs = pack_tree_element(aparams, sp_cfg,
-                                                    pspecs=p_pspecs)
+                                                    pspecs=p_pspecs,
+                                                    idx_bits=idx_bits)
     R.assert_nm_unsplit(p_pspecs, check_tree, mesh, sp_cfg)
 
     cache = jax.eval_shape(

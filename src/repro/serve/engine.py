@@ -34,6 +34,9 @@ class ServeConfig:
     prompt_bucket: int = 32   # prompts right-padded to this length
     eos_token: Optional[int] = None  # engine-wide default stop token
     packed: bool = False      # serve from element-packed N:M weights
+    idx_bits: Optional[int] = None   # stored index width for the packed
+    # store: 4 (u4, two offsets/byte), 8 (byte-wide), or None to pick
+    # automatically (u4 whenever M <= 16 — packed_params.default_idx_bits)
 
 
 @dataclasses.dataclass
@@ -69,7 +72,8 @@ class ServeEngine:
         self.mesh = mesh
         self.store: Optional[PackedParamStore] = None
         if serve_cfg.packed:
-            self.store = PackedParamStore.pack(params, sp_cfg)
+            self.store = PackedParamStore.pack(params, sp_cfg,
+                                               idx_bits=serve_cfg.idx_bits)
             params = self.store.params
         shardings = None
         if mesh is not None and mesh.devices.size > 1:
@@ -80,6 +84,7 @@ class ServeEngine:
             shardings = spmd.serve_shardings(
                 cfg, mesh, sp_cfg, n_slots=serve_cfg.n_slots,
                 max_len=serve_cfg.max_len, packed=serve_cfg.packed,
+                idx_bits=serve_cfg.idx_bits,
                 cache_dtype=cache_dtype or jnp.bfloat16)
         self.batcher = ContinuousBatcher(
             params, cfg, sp_cfg,

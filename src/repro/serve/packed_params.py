@@ -30,14 +30,21 @@ import jax.numpy as jnp
 
 from repro.core import bdwp
 from repro.core import operand as O
-from repro.core.sparsity import SparsityConfig, nm_pack
+from repro.core.sparsity import SparsityConfig, nm_pack, pack_idx_u4
 
 
 def _leaf_bytes(x) -> int:
     return int(x.size) * jnp.dtype(x.dtype).itemsize
 
 
-def pack_tree_element(params, cfg: SparsityConfig, pspecs=None):
+def default_idx_bits(cfg: SparsityConfig) -> int:
+    """Stored index width for a config: 4 whenever the in-group offset
+    fits a nibble (M <= 16 — every paper config), else byte-wide."""
+    return 4 if cfg.m <= 16 else 8
+
+
+def pack_tree_element(params, cfg: SparsityConfig, pspecs=None,
+                      idx_bits: Optional[int] = None):
     """Transform a param tree for element-mode packed serving.
 
     Every eligible ``{"w": (…, K, F)}`` leaf-dict (same FF-direction
@@ -47,20 +54,38 @@ def pack_tree_element(params, cfg: SparsityConfig, pspecs=None):
     (L, K, F) weights pack per layer.  Returns ``(packed_tree, stats)``
     where stats counts actual bytes.
 
+    ``idx_bits`` picks the stored index width: 8 stores byte-wide
+    offsets, 4 stores the u4 plane (two offsets per byte along the
+    compact axis — ``core.sparsity.pack_idx_u4``), and ``None`` (the
+    default) resolves via :func:`default_idx_bits` — u4 whenever
+    M <= 16.  ``stats["packed_bytes"]`` counts the bytes actually
+    stored, so with u4 it matches the previously merely *accounted*
+    ``packed_bytes_4bit`` figure.
+
     With ``pspecs`` (matching tree of resolved PartitionSpecs) given,
     returns ``(packed_tree, stats, packed_pspecs)``: vals and idx are
-    rank-preserving (both (…, K·N/M, F)) so they inherit w's spec.  The
-    N:M group invariant transfers: a K shard that is a multiple of M
-    packs to a compact shard that is a multiple of N, so specs resolved
-    through ``rules.nm_params_pspecs`` stay group-safe after packing
+    rank-preserving (the u4 plane only shortens the compact axis) so
+    they inherit w's spec.  The N:M group invariant transfers: a K
+    shard that is a multiple of M packs to a compact shard that is a
+    multiple of N (N/2 bytes of u4 plane), so specs resolved through
+    ``rules.nm_params_pspecs`` stay group-safe after packing
     (``rules.assert_nm_unsplit`` re-checks the packed tree).
     """
+    if idx_bits is None:
+        idx_bits = default_idx_bits(cfg)
+    if idx_bits not in (4, 8):
+        raise ValueError(f"idx_bits must be 4 or 8, got {idx_bits}")
     stats = {"n_packed": 0, "n_dense": 0,
-             "packed_bytes": 0,      # vals + uint8 idx as stored
-             "packed_bytes_4bit": 0,  # vals + ceil(log2 M)-bit idx (SORE)
+             "idx_bits": idx_bits,    # stored index width
+             "packed_bytes": 0,      # vals + idx bytes as actually stored
+             "packed_bytes_4bit": 0,  # vals + nibble-wide idx (SORE)
              "dense_bytes": 0,       # dense bytes of the packed leaves
              "other_bytes": 0}       # leaves kept dense
-    idx_bits = max(1, math.ceil(math.log2(cfg.m)))
+    # accounted index width: ceil(log2 M) bits rounded up to the nibble a
+    # byte-addressable store can actually ship (m=8 needs 3 bits, stored
+    # in 4 — the old accounting multiplied by the raw 3 and undercounted
+    # the realizable footprint by 2304 B on the bench model)
+    acct_bits = 4 if cfg.m <= 16 else 8
 
     def pack_ok(name, w) -> bool:
         # Parity with the masked forward is the invariant: pack a weight
@@ -79,23 +104,29 @@ def pack_tree_element(params, cfg: SparsityConfig, pspecs=None):
             w = node["w"]
             name = "/".join(str(k) for k in path)
             if pack_ok(name, w):
+                def pack_one(ww):
+                    vals, idx = nm_pack(ww, cfg.n, cfg.m, axis=ww.ndim - 2)
+                    if idx_bits == 4:
+                        idx = pack_idx_u4(idx, axis=ww.ndim - 2)
+                    return vals, idx
                 if isinstance(w, jax.ShapeDtypeStruct):
-                    vals, idx = jax.eval_shape(
-                        lambda ww: nm_pack(ww, cfg.n, cfg.m,
-                                           axis=ww.ndim - 2), w)
+                    vals, idx = jax.eval_shape(pack_one, w)
                 else:
-                    vals, idx = nm_pack(w, cfg.n, cfg.m, axis=w.ndim - 2)
-                new = {"w": O.PackedOp(vals, idx, cfg)}
+                    vals, idx = pack_one(w)
+                new = {"w": O.PackedOp(vals, idx, cfg, idx_bits)}
                 stats["n_packed"] += 1
                 stats["dense_bytes"] += _leaf_bytes(w)
                 stats["packed_bytes"] += _leaf_bytes(vals) + _leaf_bytes(idx)
+                # accounted SORE footprint: one ceil(log2 M)-bit offset
+                # per surviving value, independent of the stored width
                 stats["packed_bytes_4bit"] += (
-                    _leaf_bytes(vals) + int(idx.size) * idx_bits // 8)
+                    _leaf_bytes(vals) + int(vals.size) * acct_bits // 8)
                 new_spec = None
                 if spec_node is not None:
                     # vals and idx are rank-preserving: both keep w's spec
                     new_spec = {"w": O.PackedOp(spec_node["w"],
-                                                spec_node["w"], cfg)}
+                                                spec_node["w"], cfg,
+                                                idx_bits)}
                 if "b" in node:
                     new["b"] = node["b"]
                     stats["other_bytes"] += _leaf_bytes(node["b"])
@@ -137,16 +168,19 @@ class PackedParamStore:
     sp_cfg: SparsityConfig
     n_packed: int
     n_dense: int
-    packed_bytes: int        # stored bytes of packed leaves (uint8 idx)
+    idx_bits: int            # stored index width (4 = two offsets/byte)
+    packed_bytes: int        # stored bytes of packed leaves (vals + idx)
     packed_bytes_4bit: int   # with ceil(log2 M)-bit indices (SORE format)
     dense_bytes: int         # dense-equivalent bytes of the packed leaves
     other_bytes: int         # leaves served dense (embeds, norms, head)
 
     @classmethod
-    def pack(cls, params, sp_cfg: SparsityConfig) -> "PackedParamStore":
-        packed, st = pack_tree_element(params, sp_cfg)
+    def pack(cls, params, sp_cfg: SparsityConfig,
+             idx_bits: Optional[int] = None) -> "PackedParamStore":
+        packed, st = pack_tree_element(params, sp_cfg, idx_bits=idx_bits)
         return cls(params=packed, sp_cfg=sp_cfg,
                    n_packed=st["n_packed"], n_dense=st["n_dense"],
+                   idx_bits=st["idx_bits"],
                    packed_bytes=st["packed_bytes"],
                    packed_bytes_4bit=st["packed_bytes_4bit"],
                    dense_bytes=st["dense_bytes"],
@@ -161,13 +195,30 @@ class PackedParamStore:
     def total_bytes(self) -> int:
         return self.packed_bytes + self.other_bytes
 
+    def measured_packed_bytes(self) -> int:
+        """Sum of the live buffer sizes of every PackedOp leaf — what the
+        stored pair actually occupies, measured off the arrays rather
+        than re-derived from shapes (serve_bench gates the ratio of this
+        against the accounted SORE footprint)."""
+        total = 0
+        for leaf in jax.tree.leaves(
+                self.params, is_leaf=lambda x: isinstance(x, O.PackedOp)):
+            if isinstance(leaf, O.PackedOp):
+                total += int(leaf.vals.nbytes) + int(leaf.idx.nbytes)
+        return total
+
     def report(self) -> dict:
+        measured = self.measured_packed_bytes()
         return {
             "n_packed": self.n_packed,
             "n_dense": self.n_dense,
             "n": self.sp_cfg.n, "m": self.sp_cfg.m,
+            "idx_bits": self.idx_bits,
             "packed_weight_bytes": self.packed_bytes,
             "packed_weight_bytes_4bit_idx": self.packed_bytes_4bit,
+            "measured_packed_weight_bytes": measured,
+            "measured_over_accounted_4bit": (
+                measured / max(self.packed_bytes_4bit, 1)),
             "dense_weight_bytes": self.dense_bytes,
             "other_param_bytes": self.other_bytes,
             "hbm_saving": self.hbm_saving,

@@ -264,6 +264,16 @@ def assert_nm_unsplit(pspecs_tree, params_tree, mesh: Mesh, sp_cfg) -> None:
     def is_spec(x):
         return isinstance(x, (P, NamedSharding))
 
+    def idx_multiple(spec_node, key) -> int:
+        """Per-shard multiple for a compact-axis index plane.  Byte-wide
+        idx shards like vals (whole N-runs).  A u4 plane holds two
+        offsets per byte: even N needs N/2 bytes per group; odd N's
+        group boundaries fall mid-byte, so shards must cover whole
+        byte-aligned group pairs (N bytes = 2 groups)."""
+        if key == "idx" and getattr(spec_node, "idx_bits", 8) == 4:
+            return sp_cfg.n // 2 if sp_cfg.n % 2 == 0 else sp_cfg.n
+        return sp_cfg.n
+
     def check_pregen(name, spec_node, p_node):
         """PregenOp (or legacy operand-dict) site: pruned operands carry
         M-groups on their own axis; packed vals/idx carry N-runs on the
@@ -277,7 +287,7 @@ def assert_nm_unsplit(pspecs_tree, params_tree, mesh: Mesh, sp_cfg) -> None:
                 if key in spec_node and is_spec(spec_node[key]):
                     shape = tuple(p_node[key].shape)
                     check(name, key, as_spec(spec_node[key]), shape,
-                          {len(shape) - 2: sp_cfg.n})
+                          {len(shape) - 2: idx_multiple(spec_node, key)})
         if sp_cfg.prunes_bp_weights() and is_spec(spec_node["bp"]):
             shape = tuple(p_node["bp"].shape)
             check(name, "bp", as_spec(spec_node["bp"]), shape,
@@ -289,12 +299,13 @@ def assert_nm_unsplit(pspecs_tree, params_tree, mesh: Mesh, sp_cfg) -> None:
             return
         if isinstance(spec_node, O.PackedOp):
             # element-packed serving operand: N-runs on the compact axis
+            # (N/2-byte runs on a u4 index plane)
             name = "/".join(str(k) for k in path)
             for key in ("vals", "idx"):
                 if is_spec(spec_node[key]):
                     shape = tuple(p_node[key].shape)
                     check(name, key, as_spec(spec_node[key]), shape,
-                          {len(shape) - 2: sp_cfg.n})
+                          {len(shape) - 2: idx_multiple(spec_node, key)})
             return
         if isinstance(spec_node, O.SharedOp):
             # shared-mode: vals carry the compact axis; per-row idx has

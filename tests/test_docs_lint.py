@@ -1,0 +1,38 @@
+"""The docs lint is a tier-1 test, not just a CI step: a PR that
+renames a module without updating README/ROADMAP/docs fails locally."""
+
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+LINT = os.path.join(ROOT, "tools", "docs_lint.py")
+
+
+def test_docs_reference_only_live_paths():
+    proc = subprocess.run([sys.executable, LINT], cwd=ROOT,
+                          capture_output=True, text=True)
+    assert proc.returncode == 0, (
+        f"docs lint failed:\n{proc.stdout}\n{proc.stderr}")
+
+
+def test_lint_catches_a_dead_reference(tmp_path):
+    # the checker itself must not be a rubber stamp: a doc naming a
+    # nonexistent module and a broken relative link must both fail
+    import importlib.util
+    spec = importlib.util.spec_from_file_location("docs_lint", LINT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+
+    bad = tmp_path / "bad.md"
+    bad.write_text("see `src/repro/not/a/module.py` and "
+                   "[schema](missing_page.md)\n")
+    failures = mod.check_doc(str(bad))
+    assert len(failures) == 2
+    assert any("not on disk" in f for f in failures)
+    assert any("does not resolve" in f for f in failures)
+
+    good = tmp_path / "good.md"
+    good.write_text("plain prose, a web [link](https://example.com), "
+                    "and an artifact glob results/dryrun/*.json\n")
+    assert mod.check_doc(str(good)) == []

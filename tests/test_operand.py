@@ -39,7 +39,7 @@ from repro.configs import get_arch
 from repro.core import bdwp
 from repro.core import operand as O
 from repro.core.sparsity import (DENSE, SparsityConfig, nm_mask, nm_pack,
-                                 nm_unpack_n, sparsify)
+                                 nm_unpack_n, pack_idx_u4, sparsify)
 from repro.data import synthetic as D
 from repro.kernels import ops
 from repro.launch.hlo_cost import count_jaxpr_prims, count_mask_ops
@@ -336,6 +336,120 @@ class TestNmApplyParity:
                              BDWP)
         y_pk_dict = L.dense_apply({"vals": vals, "idx": idx}, x, name, BDWP)
         _eq(y_pk, y_pk_dict)
+
+
+class TestU4Operand:
+    """u4-packed index planes through the one nm_apply seam: the fused
+    decode kernel (and its jnp fallback) consuming two offsets per byte
+    must be BITWISE the byte-wide path it halves the index traffic of."""
+
+    def _u4(self, key, stack=()):
+        x, w, vals, idx, ff, bp = _pregen_arrays(key, stack=stack)
+        idx4 = pack_idx_u4(idx, axis=w.ndim - 2)
+        return x, w, vals, idx, idx4, ff, bp
+
+    def test_pytree_aux_roundtrip_preserves_idx_bits(self):
+        x, w, vals, idx, idx4, ff, bp = self._u4(30)
+        for op in (O.PackedOp(vals, idx4, BDWP, idx_bits=4),
+                   O.PregenOp(bp=bp, vals=vals, idx=idx4, cfg=BDWP,
+                              idx_bits=4)):
+            leaves, tdef = jax.tree_util.tree_flatten(op)
+            back = jax.tree_util.tree_unflatten(tdef, leaves)
+            assert type(back) is type(op) and back.idx_bits == 4
+            for fld in op.fields:
+                _eq(back[fld], op[fld])
+        # distinct aux: a u4 and a u8 operand must never share a jit
+        # cache entry (the kernel decodes them differently)
+        t4 = jax.tree_util.tree_structure(O.PackedOp(vals, idx4, BDWP, 4))
+        t8 = jax.tree_util.tree_structure(O.PackedOp(vals, idx, BDWP, 8))
+        assert t4 != t8
+
+    def test_idx_bits_validated(self):
+        x, w, vals, idx, idx4, ff, bp = self._u4(31)
+        with pytest.raises(ValueError):
+            O.PackedOp(vals, idx4, BDWP, idx_bits=6)
+        with pytest.raises(ValueError):
+            O.PregenOp(bp=bp, vals=vals, idx=idx4, cfg=BDWP, idx_bits=2)
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_packed_serve_u4_bitwise_vs_u8(self, backend):
+        """The fused u4 decode — in-kernel nibble expansion on pallas,
+        select-decompress on jnp — is bitwise the byte-wide kernel AND
+        the unpacked masked matmul oracle."""
+        x, w, vals, idx, idx4, ff, bp = self._u4(32)
+        y4 = O.nm_apply(O.PackedOp(vals, idx4, BDWP, idx_bits=4), x,
+                        backend=backend)
+        y8 = O.nm_apply(O.PackedOp(vals, idx, BDWP), x, backend=backend)
+        _eq(y4, y8, backend)
+        _eq(y4, jnp.matmul(x, ff), backend)
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_packed_serve_u4_stacked_leaf(self, backend):
+        """Layer-stacked (L, Kc/2, F) u4 planes vmapping over the stack
+        axis — bitwise the per-layer 2-D consumption."""
+        x, w, vals, idx, idx4, ff, bp = self._u4(33, stack=(3,))
+        op = O.PackedOp(vals, idx4, BDWP, idx_bits=4)
+        y = O.nm_apply(op, x, backend=backend)
+        ref = jnp.stack([
+            O.nm_apply(O.PackedOp(vals[i], idx4[i], BDWP, idx_bits=4),
+                       x[i], backend=backend)
+            for i in range(vals.shape[0])])
+        _eq(y, ref, backend)
+        _eq(y, O.nm_apply(O.PackedOp(vals, idx, BDWP), x, backend=backend),
+            backend)
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_pregen_train_forward_u4_bitwise(self, backend):
+        """The packed pregen TRAIN forward with a u4 plane: forward, dx
+        and the dense bp cotangent all bitwise the u8 path; vals and the
+        index plane stay gradient-free."""
+        x, w, vals, idx, idx4, ff, bp = self._u4(34)
+
+        def loss(x, vals, bp, idx_p, bits):
+            o = O.PregenOp(bp=bp, vals=vals, idx=idx_p, cfg=BDWP,
+                           idx_bits=bits)
+            return O.nm_apply(o, x, backend=backend).astype(
+                jnp.float32).sum()
+
+        y4 = O.nm_apply(O.PregenOp(bp=bp, vals=vals, idx=idx4, cfg=BDWP,
+                                   idx_bits=4), x, backend=backend)
+        y8 = O.nm_apply(O.PregenOp(bp=bp, vals=vals, idx=idx, cfg=BDWP),
+                        x, backend=backend)
+        _eq(y4, y8, backend)
+        g4 = jax.grad(loss, argnums=(0, 1, 2))(x, vals, bp, idx4, 4)
+        g8 = jax.grad(loss, argnums=(0, 1, 2))(x, vals, bp, idx, 8)
+        for a, b in zip(g4, g8):
+            _eq(a, b, backend)
+        assert float(jnp.abs(g4[1]).sum()) == 0.0
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_pregen_u4_stacked_moe_leaf(self, backend):
+        x, w, vals, idx, idx4, ff, bp = self._u4(35, stack=(3,))
+        op4 = O.PregenOp(bp=bp, vals=vals, idx=idx4, cfg=BDWP, idx_bits=4)
+        op8 = O.PregenOp(bp=bp, vals=vals, idx=idx, cfg=BDWP)
+        _eq(O.nm_apply(op4, x, backend=backend, stacked=True),
+            O.nm_apply(op8, x, backend=backend, stacked=True), backend)
+
+    def test_odd_compact_tile_falls_back_bitwise(self):
+        """A (K·N/M) compact axis the kernel tiling can't halve (odd
+        per-block count) routes to the jnp oracle inside ops.nm_spmm —
+        still bitwise the u8 consumption.  Impossible for even n (2:8
+        tiles always halve), so force it with 3:6 at K=6 -> Kc=3 and a
+        padded final nibble in the u4 plane."""
+        sp = SparsityConfig(n=3, m=6, method="bdwp")
+        kw, kx = jax.random.split(jax.random.PRNGKey(36))
+        w = jax.random.normal(kw, (6, 16), jnp.float32)
+        ff = jnp.where(nm_mask(w, sp.n, sp.m, axis=0), w, 0.0).astype(
+            jnp.bfloat16)
+        vals, idx = nm_pack(ff, sp.n, sp.m, axis=0)
+        idx4 = pack_idx_u4(idx, axis=0)
+        assert idx4.shape[0] == 2  # ceil(3/2): the plane really padded
+        x = jax.random.normal(kx, (4, 6), jnp.bfloat16)
+        for backend in ("jnp", "pallas"):
+            y4 = O.nm_apply(O.PackedOp(vals, idx4, sp, idx_bits=4), x,
+                            backend=backend)
+            _eq(y4, O.nm_apply(O.PackedOp(vals, idx, sp), x,
+                               backend=backend), backend)
 
 
 class TestPackedTrainForward:

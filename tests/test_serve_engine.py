@@ -138,15 +138,26 @@ class TestPackedServing:
     def test_store_byte_accounting(self, params):
         store = PackedParamStore.pack(params, SP)
         rep = store.report()
-        # vals at n/m of dense + one uint8 index per survivor (bf16 w:
-        # vals = dense/4 at 2:8, idx adds half of vals) -> 8/3 saving
-        assert rep["n_packed"] > 0
+        # u4 store (the default at m=8): vals at n/m of dense + one
+        # nibble per survivor (bf16 w: vals = dense/4 at 2:8, u4 idx
+        # adds a quarter of vals) -> 16/5 saving
+        assert rep["n_packed"] > 0 and rep["idx_bits"] == 4
         assert rep["packed_weight_bytes"] < rep["dense_weight_bytes"]
-        want = rep["dense_weight_bytes"] * SP.n / SP.m * 1.5
+        want = rep["dense_weight_bytes"] * SP.n / SP.m * 1.25
         assert rep["packed_weight_bytes"] == int(want)
-        # 4-bit-index format (SORE, m=8 -> 3 bits stored in 4) is smaller
-        assert rep["packed_weight_bytes_4bit_idx"] < rep["packed_weight_bytes"]
-        assert rep["hbm_saving"] == pytest.approx(8 / 3, rel=1e-6)
+        # stored bytes now EQUAL the accounted SORE 4-bit footprint —
+        # the format ships, it is no longer just bookkeeping
+        assert rep["packed_weight_bytes"] == rep["packed_weight_bytes_4bit_idx"]
+        assert rep["measured_packed_weight_bytes"] == rep["packed_weight_bytes"]
+        assert rep["measured_over_accounted_4bit"] == pytest.approx(1.0)
+        assert rep["hbm_saving"] == pytest.approx(16 / 5, rel=1e-6)
+        # a byte-wide store is still available and accounts the same
+        # 4-bit figure it no longer stores
+        rep8 = PackedParamStore.pack(params, SP, idx_bits=8).report()
+        assert rep8["idx_bits"] == 8
+        assert rep8["packed_weight_bytes"] == int(
+            rep["dense_weight_bytes"] * SP.n / SP.m * 1.5)
+        assert rep8["packed_weight_bytes_4bit_idx"] == rep["packed_weight_bytes"]
         # exclusions hold: embeddings / lm_head stay dense
         assert "embed_table" in store.params["embed"]
         assert "w" in store.params["lm_head"]

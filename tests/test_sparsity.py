@@ -234,6 +234,88 @@ class TestStackedExpertLeaves:
         assert not bool(np.asarray(m16)[..., 1, 0].any())
 
 
+class TestU4Index:
+    """u4 index plane (two in-group offsets per byte): bitwise
+    roundtrip on arbitrary axes and odd lengths, agreement of the
+    nibble-expanding decompress with the byte-wide one, and the SORE
+    kernel's native u4 output."""
+
+    @settings(max_examples=40, deadline=None)
+    @given(rows=st.integers(1, 6), length=st.integers(1, 33),
+           axis=st.integers(0, 1), seed=st.integers(0, 2**16))
+    def test_roundtrip_any_offsets(self, rows, length, axis, seed):
+        """pack_idx_u4 ∘ unpack_idx_u4 == id for any offsets < 16,
+        including odd axis lengths (the pad nibble never leaks)."""
+        shape = (rows, length) if axis == 1 else (length, rows)
+        rng = np.random.default_rng(seed)
+        idx = jnp.asarray(rng.integers(0, 16, shape), jnp.uint8)
+        packed = S.pack_idx_u4(idx, axis=axis)
+        assert packed.shape[axis] == (length + 1) // 2
+        out = S.unpack_idx_u4(packed, length, axis=axis)
+        assert out.dtype == jnp.uint8
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(idx))
+
+    @settings(max_examples=25, deadline=None)
+    @given(nm=NM, e=st.integers(1, 3), kg=st.integers(1, 3),
+           fg=st.integers(1, 2), seed=st.integers(0, 2**16))
+    def test_stacked_moe_pack_roundtrip(self, nm, e, kg, fg, seed):
+        """Real nm_pack offsets of a stacked (E, K, F) MoE expert leaf
+        survive the u4 trip along the compact contraction axis — odd
+        group counts (kg*n odd) exercise the pad path."""
+        n, m = nm
+        w = _rand((e, kg * m, fg * m), seed)
+        _, idx = S.nm_pack(w, n, m, axis=1)
+        kc = kg * n
+        packed = S.pack_idx_u4(idx, axis=1)
+        assert packed.shape == (e, (kc + 1) // 2, fg * m)
+        out = S.unpack_idx_u4(packed, kc, axis=1)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(idx))
+
+    @settings(max_examples=20, deadline=None)
+    @given(nm=NM, kg=st.integers(1, 4), fg=st.integers(1, 2),
+           seed=st.integers(0, 2**16),
+           dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+    def test_decompress_u4_equals_u8(self, nm, kg, fg, seed, dtype):
+        """decompress_nm(idx_bits=4) == decompress_nm(idx_bits=8) on the
+        same offsets, bitwise, on both compact-axis positions."""
+        from repro.kernels.nm_spmm_shared import decompress_nm
+        n, m = nm
+        w = _rand((kg * m, fg * m), seed, dtype)
+        vals, idx = S.nm_pack(w, n, m, axis=0)
+        d8 = decompress_nm(vals, idx, n, m, axis=0)
+        d4 = decompress_nm(vals, S.pack_idx_u4(idx, axis=0), n, m,
+                           axis=0, idx_bits=4)
+        np.testing.assert_array_equal(np.asarray(d8), np.asarray(d4))
+
+    def test_values_above_15_rejected_by_roundtrip(self):
+        """The format is 4-bit by contract: offsets >= 16 cannot survive
+        (documented precondition, m <= 16)."""
+        idx = jnp.asarray([[16, 1]], jnp.uint8)
+        out = S.unpack_idx_u4(S.pack_idx_u4(idx, axis=1), 2, axis=1)
+        assert not (np.asarray(out) == np.asarray(idx)).all()
+
+    def test_unpack_wrong_length_raises(self):
+        packed = jnp.zeros((3, 2), jnp.uint8)
+        with pytest.raises(ValueError):
+            S.unpack_idx_u4(packed, 7, axis=1)  # needs 4 bytes, has 2
+
+    @settings(max_examples=10, deadline=None)
+    @given(nm=st.sampled_from([(2, 8), (2, 4), (4, 8), (2, 16)]),
+           rg=st.integers(1, 2), kg=st.integers(1, 3),
+           seed=st.integers(0, 2**16))
+    def test_nm_compact_u4_matches_packed_oracle(self, nm, rg, kg, seed):
+        """The SORE kernel's native u4 output (Pallas, interpret mode)
+        == pack_idx_u4 of the byte-wide oracle output, bitwise."""
+        from repro.kernels import ops
+        n, m = nm
+        x = _rand((rg * 8, kg * m), seed)
+        v8, i8 = ops.nm_compact(x, n, m, use_pallas=False)
+        v4, i4 = ops.nm_compact(x, n, m, use_pallas=True, idx_bits=4)
+        np.testing.assert_array_equal(np.asarray(v8), np.asarray(v4))
+        np.testing.assert_array_equal(
+            np.asarray(S.pack_idx_u4(i8, axis=-1)), np.asarray(i4))
+
+
 class TestSRSTE:
     def test_decay_only_pruned(self):
         x = _rand((4, 16), 3)

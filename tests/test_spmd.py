@@ -172,10 +172,10 @@ class TestTrainParity:
 
 
 class TestServeParity:
-    def _run_engine(self, params, mesh):
+    def _run_engine(self, params, mesh, idx_bits=None):
         from repro.serve import ServeConfig, ServeEngine
         sc = ServeConfig(n_slots=4, max_len=32, prompt_bucket=12,
-                         packed=True)
+                         packed=True, idx_bits=idx_bits)
         eng = ServeEngine(params, CFG, SP, sc, mesh=mesh)
         rng = np.random.default_rng(3)
         for length in (4, 7, 11, 5, 9):
@@ -190,6 +190,19 @@ class TestServeParity:
         solo = self._run_engine(params, None)
         sharded = self._run_engine(params, mesh8)
         assert solo == sharded
+
+    def test_sharded_u4_decode_matches_solo_u8(self, mesh8):
+        """The fused u4 decode under GSPMD (TP-sharded index planes, the
+        default store at m=8) streams the exact tokens of the solo
+        byte-wide path — cross-format AND cross-mesh in one A/B; with
+        test_sharded_engine_decode_matches_solo (u4 solo vs u4 sharded)
+        this pins all four format/mesh corners to one stream."""
+        from repro.models import transformer_lm as T
+        params, _ = T.init(jax.random.PRNGKey(0), CFG)
+        params = jax.tree.map(lambda w: w.astype(jnp.bfloat16), params)
+        solo_u8 = self._run_engine(params, None, idx_bits=8)
+        sharded_u4 = self._run_engine(params, mesh8, idx_bits=4)
+        assert solo_u8 == sharded_u4
 
     def test_sharded_moe_mla_engine_matches_solo(self, mesh8):
         """deepseek smoke: MLA + MoE + unstacked prelude cache.  Guards
@@ -223,14 +236,18 @@ class TestNMGroupInvariant:
         R.assert_nm_unsplit(bundle.state_shardings["master"], aparams,
                             mesh8, SP)
 
-    def test_resolved_serve_shardings_unsplit(self, mesh8):
+    @pytest.mark.parametrize("idx_bits", [4, 8])
+    def test_resolved_serve_shardings_unsplit(self, mesh8, idx_bits):
+        """Both stored index widths resolve group-safe serve shardings:
+        the u4 plane's compact axis (bytes = offsets/2) must shard on
+        multiples of N/2 bytes so no N:M group straddles a shard."""
         sh = spmd.serve_shardings(CFG, mesh8, SP, n_slots=4, max_len=32,
-                                  packed=True)
+                                  packed=True, idx_bits=idx_bits)
         from repro.core import bdwp  # noqa: F401  (eligibility backs this)
         from repro.models import transformer_lm as T
         from repro.serve.packed_params import pack_tree_element
         aparams, _ = T.init(jax.random.PRNGKey(0), CFG, abstract=True)
-        packed, _ = pack_tree_element(aparams, SP)
+        packed, _ = pack_tree_element(aparams, SP, idx_bits=idx_bits)
         R.assert_nm_unsplit(sh["pspecs"]["params"], packed, mesh8, SP)
 
     def test_rules_refuse_group_splitting_spec(self):

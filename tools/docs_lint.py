@@ -1,0 +1,132 @@
+"""Docs lint: every repo path referenced in the docs must exist.
+
+  python tools/docs_lint.py            # from the repo root
+  python tools/docs_lint.py --list     # show every checked reference
+
+Two checks, both blocking in CI (the `test` job) and wrapped as a
+tier-1 test by tests/test_docs_lint.py:
+
+  1. **Path references.**  Every token that looks like a repo path —
+     ``src/...``, ``tests/...``, ``benchmarks/...``, ``tools/...``,
+     ``docs/...``, ``results/...`` — appearing anywhere in README.md,
+     ROADMAP.md, EXPERIMENTS.md, or docs/*.md must exist on disk
+     (file or directory).  Docs that name dead modules are
+     worse than no docs: they send the reader to a file that was
+     renamed three refactors ago.
+  2. **Intra-doc links.**  Every relative markdown link target
+     ``[text](target)`` in those files must resolve (fragments are
+     split off; http/https/mailto links are ignored).
+
+Tokens containing glob characters (``*``, ``?``) are skipped — bench
+docs legitimately reference artifact patterns like
+``results/dryrun/*.json``.  A path ending in ``/`` must be a
+directory.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# documents under lint.  CHANGES.md is deliberately NOT here: it is an
+# append-only history log, and "removed results/foo.py" entries
+# legitimately name files that no longer exist.
+DOC_GLOBS = ("README.md", "ROADMAP.md", "EXPERIMENTS.md", "docs/*.md")
+
+# top-level prefixes whose path-like mentions must exist on disk
+PREFIXES = ("src", "tests", "benchmarks", "tools", "docs", "results")
+
+_PATH_RE = re.compile(
+    r"(?<![\w./-])(?:%s)/[\w./*?-]*[\w*?]" % "|".join(PREFIXES))
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _docs() -> list:
+    out = []
+    for pat in DOC_GLOBS:
+        out.extend(sorted(glob.glob(os.path.join(ROOT, pat))))
+    return out
+
+
+def _exists(path: str) -> bool:
+    full = os.path.join(ROOT, path)
+    if path.endswith("/"):
+        return os.path.isdir(full)
+    if os.path.exists(full):
+        return True
+    # module.attr notation ("tests/conftest.require_or_skip"): accept
+    # when stripping the attribute leaves a live python module
+    base = path.rsplit(".", 1)[0]
+    return os.path.exists(os.path.join(ROOT, base + ".py"))
+
+
+def check_doc(doc: str, show: bool = False) -> list:
+    rel_doc = os.path.relpath(doc, ROOT)
+    with open(doc) as f:
+        text = f.read()
+    failures = []
+
+    refs = set()
+    for m in _PATH_RE.finditer(text):
+        tok = m.group(0).rstrip(".,;:")
+        if "*" in tok or "?" in tok:
+            continue  # artifact patterns like results/dryrun/*.json
+        refs.add(tok)
+    for tok in sorted(refs):
+        ok = _exists(tok)
+        if show:
+            print(f"  [{'ok' if ok else 'MISSING'}] {rel_doc}: {tok}")
+        if not ok:
+            failures.append(f"{rel_doc}: references {tok} — not on disk")
+
+    for m in _LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        full = os.path.normpath(os.path.join(os.path.dirname(doc), path))
+        if (doc.startswith(ROOT + os.sep)
+                and not (full + os.sep).startswith(ROOT + os.sep)):
+            continue  # escapes the repo (GitHub badge URLs) — unverifiable
+        ok = os.path.exists(full)
+        if show:
+            print(f"  [{'ok' if ok else 'BROKEN'}] {rel_doc}: link "
+                  f"-> {target}")
+        if not ok:
+            failures.append(f"{rel_doc}: link ({target}) does not resolve")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--list", action="store_true",
+                    help="print every checked reference, not just failures")
+    args = ap.parse_args(argv)
+
+    docs = _docs()
+    if not docs:
+        print("docs_lint: no documents found — wrong working tree?")
+        return 1
+    failures = []
+    for doc in docs:
+        failures.extend(check_doc(doc, show=args.list))
+    for f in failures:
+        print(f"[FAIL] {f}")
+    n_docs = len(docs)
+    if failures:
+        print(f"\ndocs_lint: {len(failures)} dead reference(s) across "
+              f"{n_docs} documents")
+        return 1
+    print(f"docs_lint: {n_docs} documents clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
