@@ -32,30 +32,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# census helpers live in the nmlint analysis layer — ONE implementation
+# shared by this bench, tests, and tools/nmlint.py's graph audit
+from repro.analysis.graph_audit import (
+    _structs, mask_census, pallas_call_census, prunable_sites,
+    scatter_census,
+)
 from repro.configs import get_arch
-from repro.core import bdwp
 from repro.core.sparsity import SparsityConfig
 from repro.data import synthetic as D
-from repro.launch.hlo_cost import count_mask_ops
 from repro.launch.mesh import make_host_mesh
 from repro.optim import sgd
 from repro.train import step as ST
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
-
-
-def _structs(tree):
-    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
-
-
-def prunable_sites(master, sp_cfg) -> list:
-    names = []
-    for path, w in jax.tree_util.tree_flatten_with_path(master)[0]:
-        name = "/".join(str(getattr(k, "key", k)) for k in path)
-        lshape, _ = sgd._logical_shape(name, w.shape)
-        if bdwp.pregen_site(name, lshape, sp_cfg):
-            names.append(name)
-    return names
 
 
 def time_steps(bundle, state, vocab, batch, seq, steps) -> float:
@@ -99,8 +89,8 @@ def moe_section(smoke: bool) -> dict:
                              ("legacy", False, legacy_state)):
         bundle = ST.build_lm_train(cfg, mesh, sp_cfg, opt_cfg, donate=False,
                                    pregen=pregen)
-        counts[mode] = count_mask_ops(bundle.step_fn, _structs(st),
-                                      _structs(b0), nm=(sp_cfg.n, sp_cfg.m))
+        counts[mode] = mask_census(bundle.step_fn, _structs(st),
+                                   _structs(b0), nm=(sp_cfg.n, sp_cfg.m))
         times[f"moe_{mode}_step_ms_median"] = time_steps(
             bundle, jax.device_put(st, bundle.state_shardings),
             cfg.vocab, batch, seq, steps)
@@ -133,7 +123,6 @@ def packed_train_section(smoke: bool) -> dict:
     times are recorded for the wall-clock trajectory.
     """
     from repro.core import operand as O
-    from repro.launch.hlo_cost import count_jaxpr_prims
     from repro.models import transformer_lm as T
 
     cfg = get_arch("qwen3-8b").smoke
@@ -171,10 +160,8 @@ def packed_train_section(smoke: bool) -> dict:
         jaxpr = jax.make_jaxpr(forward_loss(backend))(
             _structs(state["compute"]), _structs(b0))
         census[backend] = {
-            "scatter_ops": count_jaxpr_prims(
-                jaxpr.jaxpr, names=("scatter", "scatter-add")),
-            "nm_spmm_calls": count_jaxpr_prims(
-                jaxpr.jaxpr, names=("pallas_call",)),
+            "scatter_ops": scatter_census(jaxpr),
+            "nm_spmm_calls": pallas_call_census(jaxpr),
         }
         bundle = ST.build_lm_train(cfg, mesh, sp_cfg, opt_cfg, donate=False,
                                    pregen_pack=True, nm_backend=backend)
@@ -230,8 +217,8 @@ def main(smoke: bool = False) -> dict:
                                    ("legacy", False, False, legacy_state)):
         bundle = ST.build_lm_train(cfg, mesh, sp_cfg, opt_cfg, donate=False,
                                    pregen=pregen, pregen_pack=pack)
-        counts[mode] = count_mask_ops(bundle.step_fn, _structs(st),
-                                      _structs(b0))
+        counts[mode] = mask_census(bundle.step_fn, _structs(st),
+                                   _structs(b0))
         times[f"{mode}_step_ms_median"] = time_steps(
             bundle, jax.device_put(st, bundle.state_shardings),
             cfg.vocab, batch, seq, steps)

@@ -1,0 +1,226 @@
+"""nmlint AST rules (NM101–NM104): source-level N:M invariants.
+
+Scans every ``*.py`` under ``src/repro/`` (no execution, pure
+``ast.parse``) for the four source-shape invariants the paper's
+dataflow depends on.  See repro/analysis/findings.RULES for the rule
+table and docs/analysis.md for the narrative.
+
+Scope conventions:
+  * module allowlists are repo-relative paths under src/repro/ — e.g.
+    the SORE *producers* (kernels/, core/sparsity.py, optim/sgd.py)
+    may scatter/unpack (vals, idx) because packing and WU-time
+    unpacking is their job; every consumer must go through nm_apply.
+  * tests/ and benchmarks/ are deliberately NOT scanned: exercising a
+    deprecated shim or hand-unpacking in an A/B reference closure is
+    what tests are for.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import List, Optional, Sequence
+
+from repro.analysis.findings import Finding
+
+# NM101 — legacy entry points and the module that may define/call them
+DEPRECATED_SHIMS = frozenset({
+    "nm_linear", "nm_linear_pregen", "nm_conv", "nm_conv_pregen",
+    "nm_linear_packed", "packed_shared_apply",
+})
+SHIM_HOME = "core/bdwp.py"
+
+# NM102 — sanctioned (vals, idx) producers/definers; everyone else must
+# consume packed operands through operand.nm_apply -> kernels/nm_spmm.
+# optim/compress.py is the grad-sync wire codec: packing gradients for
+# the pod link and unpacking on receive is its whole job.
+UNPACK_ALLOWED = ("kernels/", "core/sparsity.py", "optim/sgd.py",
+                  "optim/compress.py")
+UNPACK_FNS = frozenset({"nm_unpack_n"})
+
+# NM103 — predicates that return traced arrays under jit
+TRACED_PREDS = frozenset({
+    "any", "all", "isnan", "isfinite", "isinf", "allclose",
+    "array_equal", "logical_and", "logical_or",
+})
+TRACED_BASES = frozenset({"jnp", "lax"})
+
+# modules never scanned: the selftest intentionally embeds one violating
+# example per rule — scanning the seeds would make the pass fail itself
+SCAN_EXCLUDE = ("analysis/selftest.py",)
+
+
+def _call_name(node: ast.Call) -> str:
+    """Trailing identifier of the call target: f(...) -> 'f',
+    mod.sub.f(...) -> 'f'."""
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return ""
+
+
+def _base_name(node: ast.expr) -> str:
+    """Leftmost identifier of an attribute chain ('jnp.any' -> 'jnp')."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+def _is_traced_pred(node: ast.expr) -> Optional[ast.Call]:
+    """First jnp/lax array-predicate call inside an if/while test."""
+    for sub in ast.walk(node):
+        if (isinstance(sub, ast.Call)
+                and isinstance(sub.func, ast.Attribute)
+                and sub.func.attr in TRACED_PREDS
+                and _base_name(sub.func) in TRACED_BASES):
+            return sub
+    return None
+
+
+def _is_scatter_style(node: ast.Call) -> bool:
+    """x.at[...].set(...) / .add(...), jnp.put_along_axis, lax.scatter*."""
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        if fn.attr == "put_along_axis":
+            return True
+        if fn.attr.startswith("scatter") and _base_name(fn) == "lax":
+            return True
+        if fn.attr in ("set", "add") and isinstance(fn.value, ast.Subscript):
+            tgt = fn.value.value
+            if isinstance(tgt, ast.Attribute) and tgt.attr == "at":
+                return True
+    return False
+
+
+def _is_where(node: ast.Call) -> bool:
+    fn = node.func
+    return (isinstance(fn, ast.Attribute) and fn.attr == "where"
+            and _base_name(fn) == "jnp")
+
+
+def _scopes(tree: ast.Module):
+    """(scope_node, body_statements) for the module and every function."""
+    yield tree, tree.body
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node, node.body
+
+
+def check_source(rel_path: str, source: str) -> List[Finding]:
+    """All AST findings for one module (``rel_path`` is relative to the
+    scan root, posix-style — e.g. ``core/operand.py``)."""
+    try:
+        tree = ast.parse(source, filename=rel_path)
+    except SyntaxError as e:
+        return [Finding("NM101", rel_path, e.lineno or 0,
+                        f"unparseable module: {e.msg}")]
+    findings: List[Finding] = []
+    in_shim_home = rel_path == SHIM_HOME
+    unpack_ok = rel_path.startswith(UNPACK_ALLOWED)
+
+    # --- NM101 / NM104 / NM103: single walk over all nodes ---------------
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            name = _call_name(node)
+            if name in DEPRECATED_SHIMS and not in_shim_home:
+                findings.append(Finding(
+                    "NM101", rel_path, node.lineno,
+                    f"internal call to deprecated shim bdwp.{name}() — "
+                    f"use operand.nm_apply"))
+            if name in UNPACK_FNS and not unpack_ok:
+                findings.append(Finding(
+                    "NM102", rel_path, node.lineno,
+                    f"{name}() scatter-unpacks a packed operand outside "
+                    f"the sanctioned producers "
+                    f"({', '.join(UNPACK_ALLOWED)})"))
+            if name == "PackedOp":
+                kwargs = {k.arg for k in node.keywords}
+                if len(node.args) < 4 and "idx_bits" not in kwargs:
+                    findings.append(Finding(
+                        "NM104", rel_path, node.lineno,
+                        "PackedOp(...) without explicit idx_bits — the "
+                        "index plane width must be plumbed, not defaulted"))
+            if name == "PregenOp":
+                kwargs = {k.arg for k in node.keywords}
+                if "vals" in kwargs and "idx_bits" not in kwargs:
+                    findings.append(Finding(
+                        "NM104", rel_path, node.lineno,
+                        "packed PregenOp(vals=...) without explicit "
+                        "idx_bits — the index plane width must be "
+                        "plumbed, not defaulted"))
+        elif isinstance(node, (ast.If, ast.While)):
+            call = _is_traced_pred(node.test)
+            if call is not None:
+                findings.append(Finding(
+                    "NM103", rel_path, node.lineno,
+                    f"Python {type(node).__name__.lower()} branches on "
+                    f"traced predicate "
+                    f"{_base_name(call.func)}.{call.func.attr}(...) — "
+                    f"device-unsafe under jit (use lax.cond / jnp.where)"))
+
+    # --- NM102: scatter-style ops in scopes that bind both vals & idx ----
+    if not unpack_ok:
+        for scope, body in _scopes(tree):
+            names = {n.id for stmt in body for n in ast.walk(stmt)
+                     if isinstance(n, ast.Name)}
+            if not {"vals", "idx"} <= names:
+                continue
+            for stmt in body:
+                for sub in ast.walk(stmt):
+                    if isinstance(sub, ast.Call) and (
+                            _is_scatter_style(sub) or _is_where(sub)):
+                        kind = ("jnp.where recombination"
+                                if _is_where(sub) else "scatter-style op")
+                        findings.append(Finding(
+                            "NM102", rel_path, sub.lineno,
+                            f"{kind} in a scope holding packed (vals, "
+                            f"idx) — raw unpacking belongs to "
+                            f"{', '.join(UNPACK_ALLOWED)}"))
+    # the module scope's name-set contains every function's names, so a
+    # function-level hit is seen twice — dedup by location
+    seen, unique = set(), []
+    for f in findings:
+        key = (f.rule, f.path, f.line, f.message)
+        if key not in seen:
+            seen.add(key)
+            unique.append(f)
+    return unique
+
+
+def run_ast_pass(root: Optional[str] = None,
+                 files: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Scan ``root`` (default: the src/repro/ this module lives in) or an
+    explicit file list.  Returns raw findings; the caller applies
+    waivers."""
+    if root is None:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    findings: List[Finding] = []
+    if files is None:
+        files = []
+        for dirpath, _, names in sorted(os.walk(root)):
+            for name in sorted(names):
+                if name.endswith(".py"):
+                    files.append(os.path.join(dirpath, name))
+    for path in files:
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        if rel in SCAN_EXCLUDE:
+            continue
+        with open(path) as f:
+            findings.extend(check_source(rel, f.read()))
+    return findings
+
+
+def scanned_file_count(root: Optional[str] = None) -> int:
+    if root is None:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    total = 0
+    for dirpath, _, names in os.walk(root):
+        for name in names:
+            if not name.endswith(".py"):
+                continue
+            rel = os.path.relpath(os.path.join(dirpath, name),
+                                  root).replace(os.sep, "/")
+            total += rel not in SCAN_EXCLUDE
+    return total

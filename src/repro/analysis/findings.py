@@ -1,0 +1,165 @@
+"""nmlint rule registry, findings, and the waiver mechanism.
+
+One Rule per N:M structural invariant the repo must keep.  AST rules
+(NM1xx) fire on source text in src/repro/; graph rules (NM2xx) fire on
+traced jaxprs / compiled optimized HLO of the representative config
+matrix (repro/analysis/graph_audit); NM001 is the meta-rule for the
+waiver file itself.  docs/analysis.md carries the human version of
+this table (ID, invariant, paper section, how to waive) and is kept in
+sync by tests/test_nmlint.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import datetime
+import fnmatch
+import json
+import os
+from typing import Dict, List, Optional
+
+WAIVER_FILE = os.path.join("tools", "nmlint_waivers.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    title: str
+    kind: str        # "ast" | "graph" | "meta"
+    invariant: str   # one sentence: what must hold
+    paper: str       # paper section the invariant protects
+
+
+RULES: List[Rule] = [
+    Rule("NM001", "expired-waiver", "meta",
+         "Every waiver in tools/nmlint_waivers.json carries an unexpired "
+         "`expires` date; an expired waiver is itself a finding.",
+         "—"),
+    Rule("NM101", "deprecated-shim-call", "ast",
+         "No module under src/repro/ calls a legacy bdwp entry-point shim "
+         "(nm_linear, nm_linear_pregen, nm_conv, nm_conv_pregen, "
+         "nm_linear_packed, packed_shared_apply) outside core/bdwp.py — "
+         "all consumption goes through operand.nm_apply.",
+         "Sec. V (unified sparse dataflow)"),
+    Rule("NM102", "raw-vals-idx-unpack", "ast",
+         "No scatter-style decompression of packed (vals, idx) operands "
+         "— .at[].set/.add, jnp.put_along_axis, lax.scatter*, jnp.where "
+         "recombination, or sparsity.nm_unpack_n — outside the sanctioned "
+         "producers (kernels/, core/sparsity.py, optim/sgd.py, "
+         "optim/compress.py).",
+         "Sec. IV-B (SORE packed consumption)"),
+    Rule("NM103", "traced-python-branch", "ast",
+         "No Python `if`/`while` branches on a traced predicate "
+         "(jnp.any/all/isnan/…): device-unsafe under jit, silently "
+         "concretizes under eager.",
+         "Sec. V (compiled dataflow)"),
+    Rule("NM104", "idx-bits-unplumbed", "ast",
+         "Every PackedOp(...) construction and every packed PregenOp "
+         "(vals=...) construction states idx_bits explicitly — the u4 "
+         "index plane (PR 7) must be an end-to-end decision, never an "
+         "accidental default.",
+         "Sec. IV-B (index plane width)"),
+    Rule("NM201", "scatter-in-packed-path", "graph",
+         "The traced packed train forward and the packed serve decode "
+         "contain ZERO scatter primitives on every backend: packed "
+         "(vals, idx) is consumed directly, never scattered to dense.",
+         "Sec. IV-B / Fig. 11c"),
+    Rule("NM202", "mask-census-drift", "graph",
+         "The traced pregen train step performs exactly ONE N:M mask "
+         "selection (top_k/sort) per prunable parameter — the fused "
+         "FF+BP derivation at WU time.",
+         "Fig. 11c (pre-generation dataflow)"),
+    Rule("NM203", "dense-weight-in-packed-decode", "graph",
+         "The compiled packed decode step's ENTRY parameters carry no "
+         "dense-shaped weight matching a packed site's dense equivalent "
+         "— the store must ship compact planes, not pre-decompressed "
+         "weights.",
+         "Sec. VI (serving HBM claim)"),
+    Rule("NM204", "nm-group-split-sharding", "graph",
+         "Every resolved NamedSharding keeps M-groups whole on grouped "
+         "axes and keeps u4 index bytes (N/2-byte runs) whole on packed "
+         "planes (sharding/rules.assert_nm_unsplit).",
+         "Sec. III (BDWP group structure)"),
+    Rule("NM205", "host-callback-in-step", "graph",
+         "No host callbacks (pure_callback/io_callback/debug_callback) "
+         "inside a traced train/decode step: a host round-trip in the "
+         "hot path voids every dataflow timing claim.",
+         "Sec. V (accelerator-resident training)"),
+    Rule("NM206", "unstable-compile-cache", "graph",
+         "Running the jitted train step over same-shaped batches adds no "
+         "compilation cache entries after the first (recompile "
+         "detector): the compiled-once contract behind all step-time "
+         "claims.",
+         "Sec. V (one compiled step)"),
+]
+
+RULES_BY_ID: Dict[str, Rule] = {r.id: r for r in RULES}
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    path: str        # repo-relative file, or graph-audit case name
+    line: int        # 1-based source line; 0 for graph findings
+    message: str
+    waived: bool = False
+    waiver_reason: str = ""
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        tag = " (waived)" if self.waived else ""
+        return f"[{self.rule}] {loc}: {self.message}{tag}"
+
+
+# ---------------------------------------------------------------------------
+# Waivers
+# ---------------------------------------------------------------------------
+
+
+def load_waivers(path: str, today: Optional[datetime.date] = None):
+    """Read the waiver file -> (active_waivers, expired_findings).
+
+    Schema: {"waivers": [{"rule": "NM102", "path": "src/repro/x.py",
+    "reason": "...", "expires": "YYYY-MM-DD"}, ...]} — ``path`` is an
+    fnmatch glob against the finding's repo-relative path.  A waiver
+    whose ``expires`` has passed stops waiving AND files an NM001
+    finding: waivers are temporary by construction.
+    """
+    today = today or datetime.date.today()
+    if not os.path.exists(path):
+        return [], []
+    with open(path) as f:
+        data = json.load(f)
+    active, expired = [], []
+    for w in data.get("waivers", []):
+        try:
+            expires = datetime.date.fromisoformat(w["expires"])
+        except (KeyError, ValueError):
+            expired.append(Finding(
+                "NM001", os.path.relpath(path), 0,
+                f"waiver for {w.get('rule')}:{w.get('path')} has a "
+                f"missing/malformed `expires` date"))
+            continue
+        if expires < today:
+            expired.append(Finding(
+                "NM001", os.path.relpath(path), 0,
+                f"waiver for {w.get('rule')}:{w.get('path')} expired "
+                f"{w['expires']} ({w.get('reason', 'no reason')})"))
+            continue
+        active.append(w)
+    return active, expired
+
+
+def apply_waivers(findings: List[Finding], waivers: list) -> List[Finding]:
+    """Mark findings matched by an active waiver (rule + path glob)."""
+    for f in findings:
+        for w in waivers:
+            if w.get("rule") == f.rule and fnmatch.fnmatch(
+                    f.path, w.get("path", "")):
+                f.waived = True
+                f.waiver_reason = w.get("reason", "")
+                break
+    return findings

@@ -1,0 +1,52 @@
+"""NMLINT.json report writer — machine-readable, schema-stable.
+
+The committed ``results/NMLINT.json`` is deterministic by construction
+(rule metadata, findings, and graph-audit *counts* only — no
+wall-clock, no timestamps), so a regenerated report diffs empty when
+the repo's invariants are intact.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.analysis.findings import RULES, Finding
+
+SCHEMA_VERSION = 1
+
+
+def build_report(findings: List[Finding],
+                 graph_metrics: Optional[Dict[str, dict]] = None,
+                 cases_run: Optional[List[str]] = None,
+                 scanned_files: int = 0) -> dict:
+    by_rule = {r.id: 0 for r in RULES}
+    waived = 0
+    for f in findings:
+        by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
+        waived += f.waived
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "rules": {r.id: {"title": r.title, "kind": r.kind,
+                         "invariant": r.invariant, "paper": r.paper}
+                  for r in RULES},
+        "findings": [f.to_json() for f in findings],
+        "counts": {
+            "total": len(findings),
+            "unwaived": len(findings) - waived,
+            "waived": waived,
+            "by_rule": by_rule,
+        },
+        "scanned_files": scanned_files,
+        "cases_run": sorted(cases_run or []),
+        "graph": graph_metrics or {},
+    }
+
+
+def write_report(report: dict, path: str) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=False)
+        f.write("\n")
+    return path

@@ -42,9 +42,22 @@ from repro.core.sparsity import SparsityConfig
 # what they always were) while flagging the migration.
 
 
+# warn-once ledger: a training loop calling a shim per-step must not
+# spam one warning per call; tests reset via reset_deprecation_warnings
+_warned: set = set()
+
+
 def _deprecated(old: str, new: str) -> None:
+    if old in _warned:
+        return
+    _warned.add(old)
     warnings.warn(f"bdwp.{old} is deprecated; use core.operand.{new}",
                   DeprecationWarning, stacklevel=3)
+
+
+def reset_deprecation_warnings() -> None:
+    """Forget which shims already warned (test isolation hook)."""
+    _warned.clear()
 
 
 def nm_linear(x: jax.Array, w: jax.Array, cfg: SparsityConfig) -> jax.Array:
@@ -76,7 +89,7 @@ def nm_linear_packed(x, vals, idx, cfg: SparsityConfig,
                      use_pallas: bool = False):
     """DEPRECATED: ``nm_apply(PackedOp(vals, idx, cfg), x, backend=)``."""
     _deprecated("nm_linear_packed", "nm_apply(PackedOp(vals, idx, cfg), x)")
-    return O.nm_apply(O.PackedOp(vals, idx, cfg), x,
+    return O.nm_apply(O.PackedOp(vals, idx, cfg, idx_bits=8), x,
                       backend="pallas" if use_pallas else "jnp")
 
 

@@ -293,12 +293,13 @@ def as_operand(leaf, name: str, cfg: SparsityConfig) -> SparseOperand:
         return leaf
     if isinstance(leaf, dict):
         if "bp" in leaf and ("ff" in leaf or "vals" in leaf):
+            # legacy dicts predate the u4 plane: always byte-wide indices
             return PregenOp(bp=leaf["bp"], ff=leaf.get("ff"),
                             vals=leaf.get("vals"), idx=leaf.get("idx"),
-                            mask=leaf.get("mask"), cfg=cfg)
+                            mask=leaf.get("mask"), cfg=cfg, idx_bits=8)
         if "vals" in leaf and "idx" in leaf:
             if leaf["idx"].ndim == leaf["vals"].ndim:
-                return PackedOp(leaf["vals"], leaf["idx"], cfg)
+                return PackedOp(leaf["vals"], leaf["idx"], cfg, idx_bits=8)
             return SharedOp(leaf["vals"], leaf["idx"])
         raise TypeError(f"unrecognized operand dict for {name}: "
                         f"{sorted(leaf)}")

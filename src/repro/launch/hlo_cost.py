@@ -107,6 +107,7 @@ class Computation:
     ops: List[Op]
     table: Dict[str, str]           # op name -> result type text
     root: Optional[str] = None      # ROOT op name
+    is_entry: bool = False          # the module's ENTRY computation
 
     def root_op(self) -> Optional[Op]:
         for op in self.ops:
@@ -206,7 +207,8 @@ def parse_module(text: str) -> Dict[str, Computation]:
                     if ":" in part:
                         pname, ptype = part.split(":", 1)
                         params[pname.strip().lstrip("%")] = ptype.strip()
-                cur = Computation(hdr.group(1), params, [], dict(params))
+                cur = Computation(hdr.group(1), params, [], dict(params),
+                                  is_entry=line.lstrip().startswith("ENTRY"))
                 comps[cur.name] = cur
                 continue
         if line.strip() == "}":
@@ -246,6 +248,51 @@ def parse_module(text: str) -> Dict[str, Computation]:
         cur.ops.append(op)
         cur.table[name] = op.type_text
     return comps
+
+
+def entry_computation(comps: Dict[str, Computation]) -> Optional[Computation]:
+    """The module's ENTRY computation (falls back to the one named
+    ``main``-ish, then the last parsed — older dumps drop the keyword)."""
+    for comp in comps.values():
+        if comp.is_entry:
+            return comp
+    for comp in comps.values():
+        if comp.name.startswith("main"):
+            return comp
+    return next(reversed(comps.values()), None) if comps else None
+
+
+def entry_param_shapes(text: str) -> List[Tuple[str, str, Tuple[int, ...]]]:
+    """(param_name, dtype, shape) for every leaf of the ENTRY
+    computation's parameter list, nested tuple types flattened.
+
+    This is what a compiled program *materializes as inputs*: the
+    nmlint dense-weight audit (repro/analysis) checks that a packed
+    decode step's entry never carries a dense-shaped weight that the
+    packed store was supposed to replace."""
+    comp = entry_computation(parse_module(text))
+    if comp is None:
+        return []
+    out = []
+    for pname, ptype in comp.params.items():
+        for dtype, shape in _parse_shapes(ptype):
+            out.append((pname, dtype, shape))
+    return out
+
+
+def count_hlo_ops(text: str, kinds: Tuple[str, ...],
+                  entry_only: bool = False) -> int:
+    """Census of op *kinds* (``scatter``, ``custom-call``, …) over the
+    parsed module — every computation by default, so ops inside while
+    bodies and fusions are seen exactly once (structural presence, not
+    trip-weighted)."""
+    comps = parse_module(text)
+    total = 0
+    for comp in comps.values():
+        if entry_only and not comp.is_entry:
+            continue
+        total += sum(1 for op in comp.ops if op.kind in kinds)
+    return total
 
 
 # ---------------------------------------------------------------------------

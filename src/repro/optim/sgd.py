@@ -126,7 +126,7 @@ def _pregen_leaf(w, sp_cfg: SparsityConfig, pack: bool) -> O.PregenOp:
             vals, idx = nm_pack_from_mask(bp16, ff_mask, sp_cfg.n, sp_cfg.m,
                                           axis=w.ndim - 2)
             return O.PregenOp(bp=bp16, vals=vals, idx=idx, mask=decay_mask,
-                              cfg=sp_cfg)
+                              cfg=sp_cfg, idx_bits=8)
         return O.PregenOp(bp=bp16, mask=decay_mask, cfg=sp_cfg)
     ff = jnp.where(ff_mask, w, 0.0) if ff_mask is not None else w
     ff16 = ff.astype(jnp.bfloat16)
@@ -135,7 +135,7 @@ def _pregen_leaf(w, sp_cfg: SparsityConfig, pack: bool) -> O.PregenOp:
         vals, idx = nm_pack_from_mask(ff16, ff_mask, sp_cfg.n, sp_cfg.m,
                                       axis=w.ndim - 2)
         return O.PregenOp(bp=bp.astype(jnp.bfloat16), vals=vals, idx=idx,
-                          mask=decay_mask, cfg=sp_cfg)
+                          mask=decay_mask, cfg=sp_cfg, idx_bits=8)
     return O.PregenOp(bp=bp.astype(jnp.bfloat16), ff=ff16, mask=decay_mask,
                       cfg=sp_cfg)
 
@@ -287,7 +287,7 @@ def update(state, grads, opt_cfg: SGDConfig, sp_cfg: SparsityConfig,
             bp_op = w_new.astype(jnp.bfloat16)
         if pack and sp_cfg.granularity == "element":
             leaf = O.PregenOp(bp=bp_op, vals=vals, idx=idx, mask=ff_mask,
-                              cfg=sp_cfg)
+                              cfg=sp_cfg, idx_bits=8)
         else:
             leaf = O.PregenOp(bp=bp_op, mask=ff_mask, cfg=sp_cfg,
                               ff=nm_unpack_n(vals, idx, sp_cfg.n, sp_cfg.m,

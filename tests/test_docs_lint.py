@@ -36,3 +36,49 @@ def test_lint_catches_a_dead_reference(tmp_path):
     good.write_text("plain prose, a web [link](https://example.com), "
                     "and an artifact glob results/dryrun/*.json\n")
     assert mod.check_doc(str(good)) == []
+
+
+def _lint_module():
+    import importlib.util
+    spec = importlib.util.spec_from_file_location("docs_lint", LINT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+class TestBenchFieldCheck:
+    def test_documented_fields_exist_in_committed_results(self):
+        mod = _lint_module()
+        doc = os.path.join(ROOT, "docs", "benchmarks.md")
+        assert mod.check_bench_fields(doc) == []
+
+    def test_fiction_field_fails(self, tmp_path):
+        mod = _lint_module()
+        doc = tmp_path / "schema.md"
+        doc.write_text(
+            "## `results/BENCH_pregen.json` — `benchmarks/pregen_bench.py`\n"
+            "| field | meaning |\n|---|---|\n"
+            "| `mask_ops.pregen` | real |\n"
+            "| `mask_ops.invented_metric` | fiction |\n")
+        failures = mod.check_bench_fields(str(doc))
+        assert len(failures) == 1
+        assert "invented_metric" in failures[0]
+
+    def test_uncommitted_bench_file_fails(self, tmp_path):
+        mod = _lint_module()
+        doc = tmp_path / "schema.md"
+        doc.write_text("## `results/BENCH_not_a_bench.json` — x\n"
+                       "| field | meaning |\n|---|---|\n"
+                       "| `anything` | — |\n")
+        failures = mod.check_bench_fields(str(doc))
+        assert len(failures) == 1
+        assert "neither" in failures[0]
+
+    def test_token_grammar_expansion(self):
+        mod = _lint_module()
+        assert mod._expand_field("a.{x,y}.z", "") == ["a.x.z", "a.y.z"]
+        assert mod._expand_field("loads[]", "") == ["loads"]
+        assert mod._expand_field(".packed", "mask_ops") == [
+            "mask_ops.packed"]
+        assert mod._expand_field("projections.<site>.layers", "") == [
+            "projections.*.layers"]

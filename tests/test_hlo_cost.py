@@ -80,6 +80,92 @@ class TestCollectives:
         assert H._group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
         assert H._group_size("no groups here") == 1
 
+    def test_group_size_malformed_lines_degrade_to_one(self):
+        # garbage must degrade (size 1 = free collective), never raise
+        assert H._group_size("replica_groups=[not,a,number]<=[8]") == 1
+        assert H._group_size("replica_groups={{}}") == 1
+        assert H._group_size("replica_groups=") == 1
+        assert H._group_size("") == 1
+
+
+class TestCrossesPod:
+    """Pod-crossing attribution over every replica_groups spelling
+    (pod_block=4 on 8 devices: pods {0..3} and {4..7})."""
+
+    def test_explicit_groups(self):
+        intra = "all-reduce(...), replica_groups={{0,1,2,3},{4,5,6,7}}"
+        cross = "all-reduce(...), replica_groups={{0,4},{1,5}}"
+        assert not H._crosses_pod(intra, 4)
+        assert H._crosses_pod(cross, 4)
+
+    def test_iota_form(self):
+        # [2,4]<=[8]: groups {0..3},{4..7} — pod-aligned
+        assert not H._crosses_pod("replica_groups=[2,4]<=[8]", 4)
+        # [1,8]<=[8]: one world group — spans both pods
+        assert H._crosses_pod("replica_groups=[1,8]<=[8]", 4)
+
+    def test_iota_transposed_strides(self):
+        # [4,2]<=[2,4]T(1,0): arange(8).reshape(2,4).T.reshape(4,2)
+        # -> groups {0,4},{1,5},{2,6},{3,7} — every one crosses
+        line = "replica_groups=[4,2]<=[2,4]T(1,0)"
+        assert H._crosses_pod(line, 4)
+        # same grouping is intra-pod if the whole world is one pod
+        assert not H._crosses_pod(line, 8)
+
+    def test_collective_permute_pairs(self):
+        assert H._crosses_pod("source_target_pairs={{0,4},{4,0}}", 4)
+        assert not H._crosses_pod("source_target_pairs={{0,1},{1,0}}", 4)
+
+    def test_no_grouping_is_conservatively_crossing(self):
+        assert H._crosses_pod("all-reduce(%x), to_apply=%add", 4)
+
+
+NESTED_TUPLE_HLO = """
+HloModule t
+
+%helper (a: f32[4,8]) -> f32[4,8] {
+  %a = f32[4,8]{1,0} parameter(0)
+  ROOT %neg = f32[4,8]{1,0} negate(%a)
+}
+
+ENTRY %main (p0: (f32[4,8], (u8[2,8], s32[])), p1: bf16[64,32]) -> f32[4,8] {
+  %p0 = (f32[4,8]{1,0}, (u8[2,8]{1,0}, s32[])) parameter(0)
+  %p1 = bf16[64,32]{1,0} parameter(1)
+  %gte = f32[4,8]{1,0} get-tuple-element(%p0), index=0
+  ROOT %r = f32[4,8]{1,0} call(%gte), to_apply=%helper
+}
+"""
+
+
+class TestModuleStructure:
+    def test_parse_module_nested_tuple_params(self):
+        comps = H.parse_module(NESTED_TUPLE_HLO)
+        main = comps["main"]
+        assert main.is_entry and not comps["helper"].is_entry
+        # the nested tuple type survives as one param entry
+        assert set(main.params) == {"p0", "p1"}
+        assert H._parse_shapes(main.params["p0"]) == [
+            ("f32", (4, 8)), ("u8", (2, 8)), ("s32", ())]
+
+    def test_entry_param_shapes_flattens_tuples(self):
+        shapes = H.entry_param_shapes(NESTED_TUPLE_HLO)
+        assert shapes == [("p0", "f32", (4, 8)), ("p0", "u8", (2, 8)),
+                          ("p0", "s32", ()), ("p1", "bf16", (64, 32))]
+
+    def test_entry_fallback_without_keyword(self):
+        # older dumps drop ENTRY — fall back to the main-prefixed comp
+        txt = NESTED_TUPLE_HLO.replace("ENTRY %main", "%main.17")
+        comp = H.entry_computation(H.parse_module(txt))
+        assert comp is not None and comp.name.startswith("main")
+        assert H.entry_param_shapes("") == []
+
+    def test_count_hlo_ops_all_vs_entry_only(self):
+        assert H.count_hlo_ops(NESTED_TUPLE_HLO, ("negate",)) == 1
+        assert H.count_hlo_ops(NESTED_TUPLE_HLO, ("negate",),
+                               entry_only=True) == 0
+        assert H.count_hlo_ops(NESTED_TUPLE_HLO, ("call",),
+                               entry_only=True) == 1
+
 
 class TestDotFlops:
     def test_plain_matmul(self):

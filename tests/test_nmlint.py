@@ -1,0 +1,192 @@
+"""nmlint wired into tier-1 (repro/analysis + tools/nmlint.py).
+
+Three guarantees:
+  * the repo itself is clean under the AST pass — a PR that reintroduces
+    a deprecated-shim call, a raw (vals, idx) unpack, a traced-predicate
+    branch, or an idx_bits-less packed constructor fails locally, before
+    the blocking CI job even runs;
+  * the auditor can still SEE: every rule fires on its seeded violation
+    (a silently-blind checker is worse than none);
+  * the waiver mechanism is temporary by construction — expiry and glob
+    matching behave, and docs/analysis.md + results/NMLINT.json stay in
+    sync with the rule registry.
+
+The jaxpr/HLO config-matrix audit itself (--graph --mesh8) runs in the
+dedicated blocking CI job — it compiles real models and is too heavy
+for tier-1.
+"""
+
+import datetime
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.analysis import (  # noqa: E402
+    RULES, RULES_BY_ID, SCHEMA_VERSION, Finding, apply_waivers,
+    build_report, load_waivers, run_ast_pass, run_selftest,
+    scanned_file_count, write_report,
+)
+from repro.analysis import ast_pass  # noqa: E402
+
+
+class TestRepoIsClean:
+    def test_ast_pass_finds_nothing_unwaived(self):
+        waivers, expired = load_waivers(
+            os.path.join(ROOT, "tools", "nmlint_waivers.json"))
+        findings = apply_waivers(run_ast_pass(), waivers) + expired
+        unwaived = [f for f in findings if not f.waived]
+        assert unwaived == [], "\n".join(str(f) for f in unwaived)
+
+    def test_scan_covers_the_source_tree(self):
+        # the pass must actually be looking at src/repro/ — a broken
+        # walk that scans 0 files would be vacuously "clean"
+        assert scanned_file_count() >= 50
+
+    def test_selftest_seeds_are_excluded_from_the_scan(self):
+        assert "analysis/selftest.py" in ast_pass.SCAN_EXCLUDE
+
+
+class TestSelftest:
+    def test_every_rule_fires_on_its_seed(self):
+        ok, fired = run_selftest()
+        assert ok, f"silent rules: {[r for r, f in fired.items() if not f]}"
+        # one seed per registered rule — registry drift fails here
+        assert set(fired) == set(RULES_BY_ID)
+
+
+class TestWaivers:
+    def _write(self, tmp_path, waivers):
+        path = tmp_path / "waivers.json"
+        path.write_text(json.dumps({"waivers": waivers}))
+        return str(path)
+
+    def test_active_waiver_suppresses_by_rule_and_glob(self, tmp_path):
+        path = self._write(tmp_path, [
+            {"rule": "NM102", "path": "core/*.py", "reason": "migration",
+             "expires": "2099-01-01"}])
+        active, expired = load_waivers(path)
+        assert len(active) == 1 and expired == []
+        findings = [Finding("NM102", "core/operand.py", 3, "x"),
+                    Finding("NM102", "serve/engine.py", 9, "x"),
+                    Finding("NM103", "core/operand.py", 5, "x")]
+        apply_waivers(findings, active)
+        assert [f.waived for f in findings] == [True, False, False]
+        assert findings[0].waiver_reason == "migration"
+
+    def test_expired_waiver_stops_waiving_and_files_nm001(self, tmp_path):
+        path = self._write(tmp_path, [
+            {"rule": "NM102", "path": "core/*.py", "reason": "old",
+             "expires": "2024-01-01"}])
+        active, expired = load_waivers(
+            path, today=datetime.date(2026, 8, 8))
+        assert active == []
+        assert len(expired) == 1 and expired[0].rule == "NM001"
+        assert "expired" in expired[0].message
+
+    def test_malformed_expiry_is_a_finding_not_a_crash(self, tmp_path):
+        path = self._write(tmp_path, [
+            {"rule": "NM102", "path": "x.py", "reason": "r",
+             "expires": "soon"},
+            {"rule": "NM103", "path": "y.py", "reason": "r"}])
+        active, expired = load_waivers(path)
+        assert active == []
+        assert [f.rule for f in expired] == ["NM001", "NM001"]
+
+    def test_committed_waiver_file_has_no_expired_entries(self):
+        _, expired = load_waivers(
+            os.path.join(ROOT, "tools", "nmlint_waivers.json"))
+        assert expired == []
+
+
+class TestReport:
+    def test_schema_and_determinism(self, tmp_path):
+        findings = [Finding("NM102", "a.py", 1, "m", waived=True,
+                            waiver_reason="r"),
+                    Finding("NM103", "b.py", 2, "m")]
+        rep = build_report(findings, {"case": {"k": 1}}, ["case"],
+                          scanned_files=3)
+        assert rep["schema_version"] == SCHEMA_VERSION
+        assert set(rep["counts"]["by_rule"]) == set(RULES_BY_ID)
+        assert rep["counts"] == {
+            "total": 2, "unwaived": 1, "waived": 1,
+            "by_rule": {**{r.id: 0 for r in RULES},
+                        "NM102": 1, "NM103": 1}}
+        out = write_report(rep, str(tmp_path / "r.json"))
+        rep2 = build_report(findings, {"case": {"k": 1}}, ["case"],
+                           scanned_files=3)
+        with open(out) as f:
+            assert json.load(f) == rep2  # no timestamps, diffs empty
+
+    def test_committed_report_matches_the_registry(self):
+        # results/NMLINT.json is committed; it must carry the current
+        # schema, the current rules, and zero unwaived findings
+        with open(os.path.join(ROOT, "results", "NMLINT.json")) as f:
+            rep = json.load(f)
+        assert rep["schema_version"] == SCHEMA_VERSION
+        assert set(rep["rules"]) == set(RULES_BY_ID)
+        assert rep["counts"]["unwaived"] == 0
+
+
+class TestAstRules:
+    """check_source semantics beyond the selftest seeds: the
+    allowlists and non-violating idioms must NOT fire."""
+
+    def test_shim_call_inside_home_is_fine(self):
+        src = "def nm_linear(x, w, cfg):\n    return nm_linear_core(x)\n" \
+              "def wrap(x, w, cfg):\n    return nm_linear(x, w, cfg)\n"
+        assert ast_pass.check_source("core/bdwp.py", src) == []
+        assert any(f.rule == "NM101" for f in
+                   ast_pass.check_source("models/layers.py", src))
+
+    def test_unpack_allowed_in_sanctioned_producers(self):
+        src = "def f(vals, idx):\n    return nm_unpack_n(vals, idx)\n"
+        assert ast_pass.check_source("kernels/nm_spmm.py", src) == []
+        assert ast_pass.check_source("optim/sgd.py", src) == []
+        assert any(f.rule == "NM102" for f in
+                   ast_pass.check_source("serve/engine.py", src))
+
+    def test_where_without_vals_idx_in_scope_is_fine(self):
+        src = "import jax.numpy as jnp\n" \
+              "def mask(w, m):\n    return jnp.where(m, w, 0.0)\n"
+        assert ast_pass.check_source("models/layers.py", src) == []
+
+    def test_python_branch_on_concrete_value_is_fine(self):
+        src = "def f(x, training):\n" \
+              "    if training:\n        return x * 2\n    return x\n"
+        assert ast_pass.check_source("train/step.py", src) == []
+
+    def test_packedop_with_explicit_idx_bits_is_fine(self):
+        src = "def f(vals, idx, cfg):\n" \
+              "    return PackedOp(vals, idx, cfg, idx_bits=4)\n"
+        assert ast_pass.check_source("serve/store.py", src) == []
+
+    def test_unparseable_module_is_a_finding(self):
+        fs = ast_pass.check_source("models/broken.py", "def f(:\n")
+        assert len(fs) == 1 and "unparseable" in fs[0].message
+
+
+class TestDocsInSync:
+    def test_every_rule_documented_in_analysis_md(self):
+        with open(os.path.join(ROOT, "docs", "analysis.md")) as f:
+            text = f.read()
+        for rule in RULES:
+            assert rule.id in text, f"{rule.id} missing from docs/analysis.md"
+            assert rule.title in text, (
+                f"{rule.id} title '{rule.title}' missing from "
+                f"docs/analysis.md")
+
+
+class TestCli:
+    def test_list_rules_exits_zero(self):
+        proc = subprocess.run(
+            [sys.executable, os.path.join(ROOT, "tools", "nmlint.py"),
+             "--list-rules"], cwd=ROOT, capture_output=True, text=True)
+        assert proc.returncode == 0, proc.stderr
+        for rule in RULES:
+            assert rule.id in proc.stdout

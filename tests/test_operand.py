@@ -568,6 +568,7 @@ class TestPackedTrainForward:
 
 class TestDeprecationShims:
     def test_shims_warn_and_compute(self):
+        bdwp.reset_deprecation_warnings()  # shims warn only once/process
         x, w, vals, idx, ff, bp = _pregen_arrays(20)
         calls = [
             (lambda: bdwp.nm_linear(x, w, BDWP),
@@ -584,6 +585,7 @@ class TestDeprecationShims:
             _eq(y_old, new_fn())
 
     def test_conv_shims_warn_and_compute(self):
+        bdwp.reset_deprecation_warnings()
         kw, kx = jax.random.split(jax.random.PRNGKey(21))
         w = jax.random.normal(kw, (3, 3, 16, 16), jnp.float32)
         x = jax.random.normal(kx, (2, 8, 8, 16), jnp.bfloat16)
@@ -595,6 +597,17 @@ class TestDeprecationShims:
         with pytest.warns(DeprecationWarning):
             y = bdwp.nm_conv_pregen(x, ff, bp)
         _eq(y, O.nm_apply(O.PregenOp(bp=bp, ff=ff, cfg=BDWP), x))
+
+    def test_shims_warn_once_per_process(self):
+        """A per-step training loop through a shim must not spam one
+        DeprecationWarning per call — only the first call warns."""
+        bdwp.reset_deprecation_warnings()
+        x, w, *_ = _pregen_arrays(23)
+        with pytest.warns(DeprecationWarning):
+            bdwp.nm_linear(x, w, BDWP)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            bdwp.nm_linear(x, w, BDWP)  # silent or this raises
 
     def test_is_pregen_covers_both_forms(self):
         x, w, vals, idx, ff, bp = _pregen_arrays(22)

@@ -3,8 +3,8 @@
   python tools/docs_lint.py            # from the repo root
   python tools/docs_lint.py --list     # show every checked reference
 
-Two checks, both blocking in CI (the `test` job) and wrapped as a
-tier-1 test by tests/test_docs_lint.py:
+Three checks, all blocking in CI (the `test` job) and wrapped as
+tier-1 tests by tests/test_docs_lint.py:
 
   1. **Path references.**  Every token that looks like a repo path —
      ``src/...``, ``tests/...``, ``benchmarks/...``, ``tools/...``,
@@ -16,6 +16,14 @@ tier-1 test by tests/test_docs_lint.py:
   2. **Intra-doc links.**  Every relative markdown link target
      ``[text](target)`` in those files must resolve (fragments are
      split off; http/https/mailto links are ignored).
+  3. **Bench fields.**  Every field named in the first column of a
+     ``## `results/BENCH_X.json` …`` schema table (docs/benchmarks.md)
+     must exist in the committed ``results/BENCH_X.json`` or its
+     ``benchmarks/baselines/`` baseline.  Field tokens support
+     ``{a,b}`` brace groups, ``*`` wildcards, ``<site>`` placeholders
+     (= wildcard segment), ``loads[]`` list markers, and leading-dot
+     continuations (``.pregen_packed`` after ``mask_ops.pregen``).
+     A documented field nobody emits is schema fiction.
 
 Tokens containing glob characters (``*``, ``?``) are skipped — bench
 docs legitimately reference artifact patterns like
@@ -26,7 +34,9 @@ directory.
 from __future__ import annotations
 
 import argparse
+import fnmatch
 import glob
+import json
 import os
 import re
 import sys
@@ -44,6 +54,10 @@ PREFIXES = ("src", "tests", "benchmarks", "tools", "docs", "results")
 _PATH_RE = re.compile(
     r"(?<![\w./-])(?:%s)/[\w./*?-]*[\w*?]" % "|".join(PREFIXES))
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+# bench-schema tables: "## `results/BENCH_X.json` — `benchmarks/x.py`"
+_BENCH_SECTION_RE = re.compile(r"^##\s+`results/(BENCH_\w+\.json)`")
+_TICK_RE = re.compile(r"`([^`]+)`")
 
 
 def _docs() -> list:
@@ -104,6 +118,109 @@ def check_doc(doc: str, show: bool = False) -> list:
     return failures
 
 
+# ---------------------------------------------------------------------------
+# Check 3: bench-schema tables name only fields the benches actually emit
+# ---------------------------------------------------------------------------
+
+
+def _flatten_keys(obj, prefix: str = "") -> set:
+    """Dotted paths of every node in a JSON tree (dicts recursed,
+    lists/scalars are leaves; intermediate dict paths included)."""
+    keys = set()
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            path = f"{prefix}.{k}" if prefix else str(k)
+            keys.add(path)
+            keys |= _flatten_keys(v, path)
+    return keys
+
+
+def _expand_field(tok: str, prev_prefix: str) -> list:
+    """One backticked field token -> fnmatch patterns.
+
+    Grammar (docs/benchmarks.md convention): ``{a,b}`` brace groups
+    expand, ``<site>`` placeholders become a ``*`` segment, ``x[]``
+    marks a list field (checked as ``x``), and a leading dot continues
+    the previous token's prefix (``.pregen_packed`` after
+    ``mask_ops.pregen`` means ``mask_ops.pregen_packed``).
+    """
+    tok = tok.strip().rstrip(",")
+    if tok.endswith("[]"):
+        tok = tok[:-2]
+    if tok.startswith("."):
+        tok = prev_prefix + tok if prev_prefix else tok[1:]
+    pats = [tok]
+    while any("{" in p for p in pats):
+        out = []
+        for p in pats:
+            m = re.search(r"\{([^{}]*)\}", p)
+            if not m:
+                out.append(p)
+                continue
+            for alt in m.group(1).split(","):
+                out.append(p[:m.start()] + alt.strip() + p[m.end():])
+        pats = out
+    return [re.sub(r"<[^<>\s]+>", "*", p) for p in pats]
+
+
+def _bench_keys(bench_file: str):
+    """Union of flattened keys of the committed fresh result and its
+    baseline (a field may live in either) -> (keys, sources) or
+    (None, []) when neither file is committed."""
+    keys, sources = set(), []
+    for rel in (os.path.join("results", bench_file),
+                os.path.join("benchmarks", "baselines", bench_file)):
+        full = os.path.join(ROOT, rel)
+        if os.path.exists(full):
+            with open(full) as f:
+                keys |= _flatten_keys(json.load(f))
+            sources.append(rel)
+    return (keys, sources) if sources else (None, [])
+
+
+def check_bench_fields(doc: str, show: bool = False) -> list:
+    """Validate every first-column field of each BENCH schema table in
+    ``doc`` against the committed result/baseline JSONs."""
+    rel_doc = os.path.relpath(doc, ROOT)
+    with open(doc) as f:
+        lines = f.read().splitlines()
+    failures = []
+    bench_file, keys, prev_prefix = None, None, ""
+    for line in lines:
+        m = _BENCH_SECTION_RE.match(line)
+        if m:
+            bench_file = m.group(1)
+            keys, sources = _bench_keys(bench_file)
+            prev_prefix = ""
+            if keys is None:
+                failures.append(
+                    f"{rel_doc}: documents {bench_file} but neither "
+                    f"results/ nor benchmarks/baselines/ commits it")
+                bench_file = None
+            continue
+        if line.startswith("##"):
+            bench_file = None  # left the schema section
+            continue
+        if bench_file is None or not line.lstrip().startswith("|"):
+            continue
+        first_cell = line.lstrip().lstrip("|").split("|", 1)[0]
+        for tok in _TICK_RE.findall(first_cell):
+            pats = _expand_field(tok, prev_prefix)
+            prev_prefix = pats[0].rsplit(".", 1)[0] if "." in pats[0] else ""
+            for pat in pats:
+                ok = (bool(fnmatch.filter(keys, pat)) if "*" in pat
+                      else pat in keys)
+                if show:
+                    print(f"  [{'ok' if ok else 'MISSING'}] {rel_doc}: "
+                          f"{bench_file} field {pat}")
+                if not ok:
+                    failures.append(
+                        f"{rel_doc}: documents field `{pat}` of "
+                        f"{bench_file} — no committed result or baseline "
+                        f"carries it")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--list", action="store_true",
@@ -117,6 +234,7 @@ def main(argv=None) -> int:
     failures = []
     for doc in docs:
         failures.extend(check_doc(doc, show=args.list))
+        failures.extend(check_bench_fields(doc, show=args.list))
     for f in failures:
         print(f"[FAIL] {f}")
     n_docs = len(docs)

@@ -1,0 +1,110 @@
+"""nmlint — repo-wide N:M invariant auditor (AST + jaxpr/HLO).
+
+  python tools/nmlint.py                  # AST pass, report, exit!=0 on findings
+  python tools/nmlint.py --strict         # same (explicit; the CI spelling)
+  python tools/nmlint.py --graph          # + jaxpr/HLO audit, solo config matrix
+  python tools/nmlint.py --graph --mesh8  # + compressed grad-sync on 8 forced
+                                          #   CPU devices (forces them itself)
+  python tools/nmlint.py --selftest       # seed 1 violation/rule, all must fire
+  python tools/nmlint.py --list-rules     # rule table (ID, kind, invariant)
+
+Every run (except --selftest/--list-rules) rewrites results/NMLINT.json
+— deterministic counts only, so the committed copy diffs empty while
+the invariants hold.  Waivers: tools/nmlint_waivers.json (rule + path
+glob + reason + expiry; an expired waiver is an NM001 finding).  Rules:
+docs/analysis.md.  Wrapped into tier-1 by tests/test_nmlint.py; the
+blocking CI job runs ``--strict --graph --mesh8``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero on any unwaived finding (default "
+                         "behavior; flag kept explicit for CI readability)")
+    ap.add_argument("--graph", action="store_true",
+                    help="run the jaxpr/HLO audit over the solo config "
+                         "matrix (traces + compiles real smoke models)")
+    ap.add_argument("--mesh8", action="store_true",
+                    help="add the mesh8 cases (forces 8 host devices; "
+                         "implies --graph)")
+    ap.add_argument("--selftest", action="store_true",
+                    help="seed one violation per rule; exit 0 iff every "
+                         "rule fires")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--out", default=os.path.join(ROOT, "results",
+                                                  "NMLINT.json"))
+    ap.add_argument("--waivers", default=os.path.join(ROOT, "tools",
+                                                      "nmlint_waivers.json"))
+    args = ap.parse_args(argv)
+
+    if args.mesh8:
+        # must happen before anything touches the jax backend
+        from repro.launch.spmd import force_host_devices
+        force_host_devices(8)
+        args.graph = True
+
+    from repro.analysis import (
+        RULES, apply_waivers, build_report, load_waivers, run_ast_pass,
+        run_graph_audit, run_selftest, scanned_file_count, write_report,
+    )
+
+    if args.list_rules:
+        for r in RULES:
+            print(f"{r.id}  [{r.kind:5s}] {r.title}\n    {r.invariant}")
+        return 0
+
+    if args.selftest:
+        ok, fired = run_selftest()
+        for rule in sorted(fired):
+            print(f"  [{'fired' if fired[rule] else 'SILENT'}] {rule}")
+        if not ok:
+            print("nmlint selftest: FAILED — a seeded violation did not "
+                  "produce a finding; the auditor has gone blind")
+            return 1
+        print(f"nmlint selftest: all {len(fired)} rules fire on their "
+              f"seeded violations")
+        return 0
+
+    findings = run_ast_pass()
+    waivers, expired = load_waivers(args.waivers)
+    findings = apply_waivers(findings, waivers) + expired
+
+    graph_metrics, cases = {}, []
+    if args.graph:
+        gfindings, graph_metrics = run_graph_audit(mesh8=args.mesh8)
+        findings += apply_waivers(gfindings, waivers)
+        cases = list(graph_metrics)
+
+    report = build_report(findings, graph_metrics, cases,
+                          scanned_files=scanned_file_count())
+    out = write_report(report, args.out)
+
+    unwaived = [f for f in findings if not f.waived]
+    for f in findings:
+        print(f"[{'warn' if f.waived else 'FAIL'}] {f}")
+    n_files = report["scanned_files"]
+    suffix = f" + graph audit over {len(cases)} case(s)" if cases else ""
+    if unwaived:
+        print(f"\nnmlint: {len(unwaived)} finding(s) "
+              f"({len(findings) - len(unwaived)} waived) across {n_files} "
+              f"files{suffix} — report: {os.path.relpath(out, ROOT)}")
+        return 1
+    print(f"nmlint: clean — {n_files} files{suffix}; report: "
+          f"{os.path.relpath(out, ROOT)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
