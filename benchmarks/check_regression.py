@@ -65,6 +65,30 @@ GATES = {
         "loads.*.decode_steps",
         "loads.*.slot_utilization",
     ],
+    "BENCH_fleet.json": [
+        "workload.n_requests",
+        "workload.distinct_prompts",
+        # latencies are in fleet STEPS (deterministic given the seeded
+        # arrivals + seeded router), not wall-clock — gateable
+        "loads.*.tokens",
+        "loads.*.decode_steps",
+        "loads.*.prefill_steps",
+        "loads.*.prefix_hits",
+        "loads.*.hit_rate",
+        "loads.*.latency_steps_p50",
+        "loads.*.latency_steps_p95",
+        "routing.prefix.prefill_steps",
+        "routing.least_loaded.prefill_steps",
+        "routing.random.prefill_steps",
+        "routing.prefill_steps_saved",
+        "routing.streams_match_across_policies",
+        "disagg.streams_equal",
+        "disagg.tokens",
+        "disagg.handoff_lanes",
+        # 0 ± 20% of 0 rejects ANY prefill on a decode engine
+        "disagg.decode_prefill_steps",
+        "disagg.store_leftover",
+    ],
     "BENCH_spmd.json": [
         "sync.dense_bytes",
         "sync.packed_bytes",
@@ -121,6 +145,23 @@ DIRECTIONAL = {
         # exact compiled decode, same run, same machine
         ("decode.hlo_bytes_per_step_u4", "<=",
          "decode.hlo_bytes_per_step_u8"),
+    ],
+    "BENCH_fleet.json": [
+        # the KV-affinity win, win-or-fail: on the shared-prefix trace
+        # the prefix router must serve with STRICTLY fewer compiled
+        # prefill steps than the random-routing control (same trace,
+        # same run — integers, so >= 1 means strictly fewer)
+        ("routing.prefill_steps_saved", ">=", 1),
+        # ...and no worse tail latency at the same offered load (both
+        # sides in deterministic fleet steps from one run)
+        ("routing.prefix.latency_steps_p95", "<=",
+         "routing.random.latency_steps_p95"),
+        # routing decides WHERE work runs, never WHAT comes out
+        ("routing.streams_match_across_policies", ">=", 1),
+        # disaggregated prefill/decode must be bitwise invisible: the
+        # handed-off streams equal the colocated engine's, measured
+        ("disagg.streams_equal", ">=", 1),
+        ("disagg.decode_prefill_steps", "<=", 0),
     ],
     "BENCH_spmd.json": [
         # the whole point of the compressed sync: it must WIN, not just

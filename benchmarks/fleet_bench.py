@@ -1,0 +1,232 @@
+"""Serve-fleet benchmark: KV-aware routing + prefill/decode disaggregation.
+
+  PYTHONPATH=src python -m benchmarks.fleet_bench [--smoke]
+
+Drives a multi-replica ServeFleet with Poisson arrivals over a
+shared-prefix workload (many requests repeating a small set of distinct
+prompts — the traffic shape where KV reuse pays).  Three sections:
+
+  * ``loads`` — offered-load sweep with the default prefix router:
+    per-request latency (p50/p95, in fleet steps), fleet tok/s, tok/s
+    per engine, routing hit rate and the by-depth routing histogram.
+  * ``routing`` — the three policies on the IDENTICAL trace at one
+    comparison load.  The prefix-aware router must serve with strictly
+    fewer compiled prefill steps than the random control
+    (``prefill_steps_saved`` — directionally gated >= 1) and a no-worse
+    tail latency (prefix p95 <= random p95, same trace, same machine).
+    All three policies must emit identical token streams — routing may
+    decide WHERE work runs, never WHAT comes out.
+  * ``disagg`` — the same trace through a disaggregated fleet
+    (dedicated prefill engine, CacheStore lane handoff, decode engines
+    that never prefill) vs one colocated engine.  ``streams_equal`` is
+    MEASURED (bitwise token comparison), not assumed, and directionally
+    gated; ``decode_prefill_steps`` must stay 0.
+
+Latencies are in fleet steps (deterministic given the seeds), so they
+are gateable; tok/s fields are wall-clock and recorded but never gated
+across machines.  Writes results/BENCH_fleet.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.sparsity import SparsityConfig
+from repro.models import transformer_lm as T
+from repro.serve import FleetConfig, ServeConfig, ServeEngine, ServeFleet
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+def build_trace(vocab: int, n_requests: int, distinct: int, max_new: int,
+                seed: int = 23) -> list:
+    """Shared-prefix workload: ``n_requests`` drawn from ``distinct``
+    prompts (mixed lengths) — repeats are exact, so every repeat's
+    prefill is reusable KV."""
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(4, 12, distinct)
+    prompts = [rng.integers(0, vocab, int(n)).tolist() for n in lens]
+    picks = rng.integers(0, distinct, n_requests)
+    return [(prompts[int(i)], max_new) for i in picks]
+
+
+def run_fleet(fleet: ServeFleet, trace, load: float, seed: int = 17) -> dict:
+    """Drive the fleet: Poisson arrivals at ``load`` requests per fleet
+    step; returns metrics + the streams (rid order = trace order)."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / max(load, 1e-9), len(trace)))
+    rids, submitted = [], 0
+    t0 = time.perf_counter()
+    while submitted < len(trace) or fleet.n_pending:
+        while (submitted < len(trace)
+               and arrivals[submitted] <= fleet.step_count):
+            p, m = trace[submitted]
+            rids.append(fleet.submit(p, max_new_tokens=m))
+            submitted += 1
+        fleet.step()
+    dt = time.perf_counter() - t0
+    reqs = fleet.finished_requests
+    lats = [r.finish_step - r.submit_step for r in reqs]
+    hits = sum(1 for r in reqs if r.prefix_hit)
+    done = fleet.harvest()
+    streams = [done[r] for r in rids]
+    st = fleet.stats()
+    tokens = sum(len(s) for s in streams)
+    per_engine = [{
+        "decoded_tokens": e["decoded_tokens"],
+        "decode_steps": e["decode_steps"],
+        "prefill_steps": e["prefill_steps"],
+        "tok_per_s": e["decoded_tokens"] / dt if dt else 0.0,
+    } for e in st["engines"]]
+    return {
+        "offered_load_req_per_step": load,
+        "n_requests": len(trace),
+        "tokens": tokens,
+        "wall_s": dt,
+        "tok_per_s": tokens / dt if dt else 0.0,
+        "fleet_steps": st["steps"],
+        "decode_steps": st["decode_steps"],
+        "prefill_steps": st["prefill_steps"],
+        "prefix_hits": hits,
+        "hit_rate": hits / len(trace),
+        "routed_by_depth": {str(k): v
+                            for k, v in st["routed_by_depth"].items()},
+        "latency_steps_p50": _percentile(lats, 50),
+        "latency_steps_p95": _percentile(lats, 95),
+        "per_engine": per_engine,
+        "_streams": streams,
+    }
+
+
+def disagg_section(params, cfg, sp_cfg, serve_cfg, trace) -> dict:
+    """Disaggregated fleet vs one colocated engine, bitwise."""
+    # max_new_tokens=1 head: that request finishes on the prefill side
+    # and must still match the colocated engine
+    trace = [(trace[0][0], 1)] + list(trace[1:])
+
+    eng = ServeEngine(params, cfg, sp_cfg, serve_cfg)
+    rc = [eng.submit(p, max_new_tokens=m) for p, m in trace]
+    t0 = time.perf_counter()
+    outc = eng.run()
+    colo_s = time.perf_counter() - t0
+    colo = [outc[r] for r in rc]
+
+    fleet = ServeFleet(params, cfg, sp_cfg, serve_cfg,
+                       FleetConfig(n_replicas=1, router="least_loaded",
+                                   disaggregate=True, n_prefill=1))
+    rd = [fleet.submit(p, max_new_tokens=m) for p, m in trace]
+    t0 = time.perf_counter()
+    outd = fleet.run()
+    disagg_s = time.perf_counter() - t0
+    disagg = [outd[r] for r in rd]
+    st = fleet.stats()
+    return {
+        "n_requests": len(trace),
+        "streams_equal": int(disagg == colo),   # MEASURED, gated >= 1
+        "tokens": sum(len(s) for s in disagg),
+        "handoff_lanes": st["store"]["puts"],
+        "store_leftover": st["store"]["size"],
+        # decode engines must never run a prefill — that is the split
+        "decode_prefill_steps": sum(e["prefill_steps"]
+                                    for e in st["engines"]),
+        "prefill_engine_steps": sum(e["prefill_steps"]
+                                    for e in st["prefill_engines"]),
+        "colocated_wall_s": colo_s,
+        "disagg_wall_s": disagg_s,
+    }
+
+
+def main(smoke: bool = False, out_path: str | None = None) -> dict:
+    arch = get_arch("qwen3-8b")
+    cfg = arch.smoke
+    sp_cfg = SparsityConfig(n=2, m=8, method="bdwp")
+    params, _ = T.init(jax.random.PRNGKey(0), cfg)
+    params = jax.tree.map(lambda w: w.astype(jnp.bfloat16), params)
+
+    if smoke:
+        loads, n_requests, distinct, max_new = [0.5, 3.0], 16, 6, 6
+    else:
+        loads, n_requests, distinct, max_new = [0.3, 1.0, 3.0], 24, 8, 8
+    serve_cfg = ServeConfig(n_slots=2, max_len=24, prompt_bucket=12)
+    trace = build_trace(cfg.vocab, n_requests, distinct, max_new)
+    compare_load = loads[-1]
+
+    def fresh(router):
+        return ServeFleet(params, cfg, sp_cfg, serve_cfg,
+                          FleetConfig(n_replicas=2, router=router,
+                                      route_seed=3))
+
+    rows = []
+    for load in loads:
+        row = run_fleet(fresh("prefix"), trace, load)
+        row.pop("_streams")
+        rows.append(row)
+        print(f"load={load:5.2f} req/step: {row['tok_per_s']:8.1f} tok/s  "
+              f"p95={row['latency_steps_p95']:.0f} steps  "
+              f"hit_rate={row['hit_rate']:.2f}  "
+              f"prefills={row['prefill_steps']}")
+
+    routing = {}
+    streams = {}
+    for policy in ("prefix", "least_loaded", "random"):
+        row = run_fleet(fresh(policy), trace, compare_load)
+        streams[policy] = row.pop("_streams")
+        routing[policy] = row
+        print(f"router={policy:13s} prefills={row['prefill_steps']:3d}  "
+              f"p95={row['latency_steps_p95']:.0f} steps  "
+              f"hit_rate={row['hit_rate']:.2f}")
+    routing["compare_load"] = compare_load
+    # the KV-affinity win, win-or-fail: strictly fewer compiled
+    # prefills than the random control on the identical trace
+    routing["prefill_steps_saved"] = (routing["random"]["prefill_steps"]
+                                      - routing["prefix"]["prefill_steps"])
+    # routing must never change WHAT comes out, only WHERE it runs
+    routing["streams_match_across_policies"] = int(
+        streams["prefix"] == streams["least_loaded"] == streams["random"])
+
+    disagg = disagg_section(params, cfg, sp_cfg, serve_cfg, trace[:6])
+    print(f"disagg: streams_equal={disagg['streams_equal']}  "
+          f"handoffs={disagg['handoff_lanes']}  "
+          f"decode_prefills={disagg['decode_prefill_steps']}")
+
+    summary = {
+        "bench": "fleet_bench",
+        "arch": cfg.name,
+        "sparsity": {"n": sp_cfg.n, "m": sp_cfg.m, "method": sp_cfg.method},
+        "serve": {"n_slots": serve_cfg.n_slots,
+                  "max_len": serve_cfg.max_len,
+                  "prompt_bucket": serve_cfg.prompt_bucket},
+        "fleet": {"n_replicas": 2, "prefix_cache": 8},
+        "workload": {"n_requests": n_requests, "distinct_prompts": distinct,
+                     "max_new": max_new},
+        "smoke": smoke,
+        "loads": rows,
+        "routing": routing,
+        "disagg": disagg,
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    out_path = out_path or os.path.join(RESULTS, "BENCH_fleet.json")
+    with open(out_path, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"wrote {out_path}")
+    return summary
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny sweep for CI")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    main(smoke=args.smoke, out_path=args.out)

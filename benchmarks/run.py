@@ -12,9 +12,9 @@ import sys
 import time
 
 from benchmarks import (fig14_resources, fig15_speedup, fig16_layerwise,
-                        fig17_scaling, kernel_bench, pregen_bench, roofline,
-                        serve_bench, spmd_bench, table2_flops,
-                        table4_platforms, table5_accels)
+                        fig17_scaling, fleet_bench, kernel_bench,
+                        pregen_bench, roofline, serve_bench, spmd_bench,
+                        table2_flops, table4_platforms, table5_accels)
 
 SUITES = {
     "table2": table2_flops,
@@ -27,6 +27,8 @@ SUITES = {
     "kernels": kernel_bench,
     "roofline": roofline,
     "serve": serve_bench,
+    # fleet layer above the engine: KV-aware routing + disaggregation
+    "fleet": fleet_bench,
     # pre-generation dataflow gate: exactly one top_k per prunable param
     "pregen": pregen_bench,
     # needs multiple devices to be interesting; run it standalone with
@@ -36,7 +38,7 @@ SUITES = {
 }
 
 # cheap suites CI can afford on every push
-SMOKE_SUITES = ["table2", "serve", "pregen"]
+SMOKE_SUITES = ["table2", "serve", "fleet", "pregen"]
 
 
 def main() -> None:

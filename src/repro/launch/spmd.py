@@ -116,6 +116,32 @@ def single_device_mesh(axis_names=("data", "model")) -> Mesh:
     return Mesh(arr, tuple(axis_names))
 
 
+def replica_device_groups(n_replicas: int, *, devices=None) -> list:
+    """Partition the device pool into ``n_replicas`` disjoint contiguous
+    groups (serve-fleet replicas never share a chip: each replica owns
+    its weights copy + KV residents, and lanes cross replicas through
+    the host-side CacheStore, not a collective)."""
+    devices = list(devices if devices is not None else jax.devices())
+    if n_replicas < 1:
+        raise ValueError("n_replicas must be >= 1")
+    if len(devices) % n_replicas:
+        raise ValueError(f"{len(devices)} devices do not split into "
+                         f"{n_replicas} equal replica groups")
+    per = len(devices) // n_replicas
+    return [devices[i * per:(i + 1) * per] for i in range(n_replicas)]
+
+
+def fleet_meshes(n_replicas: int, spec: str = "data,model", *,
+                 devices=None) -> list:
+    """Per-replica serve meshes for a ServeFleet: one ``--mesh``-grammar
+    Mesh per disjoint device group.  Each replica then resolves its own
+    SERVE_BATCH shardings (``serve_shardings``) against its mesh — the
+    fleet-level router stays host-side and mesh-agnostic."""
+    return [make_spmd_mesh(spec, devices=group)
+            for group in replica_device_groups(n_replicas,
+                                               devices=devices)]
+
+
 # ---------------------------------------------------------------------------
 # Serve-side sharding resolution (SERVE_BATCH rules, slot-paged cache)
 # ---------------------------------------------------------------------------

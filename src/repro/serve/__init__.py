@@ -8,16 +8,29 @@ Layering (each importable on its own):
   batcher       — fixed-capacity slot-paged KV cache + the single
                   compiled decode step; requests join mid-flight into
                   free slots and evict without recompiling.
+  cache_store   — host-side pool of seatable batch-1 KV lanes: the
+                  prefix-reuse pool and the prefill→decode handoff
+                  buffer share one abstraction.
   engine        — request lifecycle (submit/step/harvest): admission,
-                  slot allocation, per-request stop conditions.
+                  slot allocation, per-request stop conditions, lane
+                  export/import hooks for the fleet.
+  fleet         — multi-replica frontend: one admission queue, a
+                  KV-affinity + live-utilization router, disaggregated
+                  prefill/decode engine pools, asyncio frontend.
 """
 
-from repro.serve.batcher import ContinuousBatcher, SlotKVCache, seat_cache
+from repro.serve.batcher import (ContinuousBatcher, SlotKVCache,
+                                 extract_lane_cache, seat_cache)
+from repro.serve.cache_store import CacheStore, Lane, prefix_chain
 from repro.serve.engine import Request, ServeConfig, ServeEngine
+from repro.serve.fleet import (AsyncFrontend, FleetConfig, FleetRequest,
+                               Router, ServeFleet)
 from repro.serve.packed_params import PackedParamStore, pack_tree_element
 
 __all__ = [
-    "ContinuousBatcher", "SlotKVCache", "seat_cache",
+    "ContinuousBatcher", "SlotKVCache", "seat_cache", "extract_lane_cache",
+    "CacheStore", "Lane", "prefix_chain",
     "Request", "ServeConfig", "ServeEngine",
+    "AsyncFrontend", "FleetConfig", "FleetRequest", "Router", "ServeFleet",
     "PackedParamStore", "pack_tree_element",
 ]

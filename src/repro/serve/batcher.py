@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.core.sparsity import DENSE, SparsityConfig
 from repro.models import transformer_lm as T
+from repro.serve.cache_store import Lane
 from repro.train import step as ST
 
 
@@ -59,6 +60,38 @@ def seat_cache(cache, pre_cache, slot):
         out["prelude"] = jax.tree.map(
             partial(_seat_leaf, slot=slot, batch_axis=0),
             cache["prelude"], pre_cache["prelude"])
+    return out
+
+
+def _extract_leaf(src, slot, batch_axis: int, n_slots: int):
+    """Inverse of ``_seat_leaf``: slice lane ``slot`` out of an engine
+    cache leaf as a batch-1 leaf.  Leaves without a slot axis at
+    ``batch_axis`` (the per-layer ``pos`` cursors) pass through."""
+    if src.ndim <= batch_axis or src.shape[batch_axis] != n_slots:
+        return src
+    starts = [jnp.zeros((), jnp.int32)] * src.ndim
+    starts[batch_axis] = jnp.asarray(slot, jnp.int32)
+    sizes = list(src.shape)
+    sizes[batch_axis] = 1
+    return jax.lax.dynamic_slice(src, starts, sizes)
+
+
+def extract_lane_cache(cache, slot, n_slots: int):
+    """Slice lane ``slot`` of a slot-paged engine cache into a batch-1
+    cache pytree (jit-safe; ``slot`` may be traced) — the cache half of
+    exporting a lane for a CacheStore handoff.  Layout contract matches
+    ``seat_cache``: scanned-layer leaves (L, B, ...) — slot axis 1; the
+    optional ``prelude`` subtree (B, ...) — slot axis 0.  The round trip
+    ``seat_cache(cache, extract_lane_cache(cache, s), s)`` is bitwise
+    exact (dynamic_slice of what dynamic_update_slice wrote)."""
+    out = {"layers": jax.tree.map(
+        partial(_extract_leaf, slot=slot, batch_axis=1, n_slots=n_slots),
+        cache["layers"])}
+    if "prelude" in cache:
+        out["prelude"] = jax.tree.map(
+            partial(_extract_leaf, slot=slot, batch_axis=0,
+                    n_slots=n_slots),
+            cache["prelude"])
     return out
 
 
@@ -149,6 +182,10 @@ class ContinuousBatcher:
 
         self._prefill = jax.jit(prefill_fn)
         self._seat = jax.jit(seat_cache, donate_argnums=(0,))
+        self._extract = jax.jit(partial(extract_lane_cache,
+                                        n_slots=n_slots))
+        self.prefill_calls = 0   # compiled-prefill invocations (a reuse
+        #                          hit seats a pooled lane and skips one)
         if shardings is None:
             self._decode = jax.jit(decode_fn, donate_argnums=(1,))
         else:
@@ -156,35 +193,73 @@ class ContinuousBatcher:
                 decode_fn,
                 in_shardings=(shardings["params"], shardings["cache"],
                               shardings["token"], shardings["pos"]),
-                out_shardings=(None, shardings["cache"]),
+                # nxt is (n_slots,) like positions — pin it too: left to
+                # the compiler it may pick a layout that XLA then tries
+                # to alias against a donated cache leaf of another
+                # sharding (Expected aliased input/output ... same size)
+                out_shardings=(shardings["pos"], shardings["cache"]),
                 donate_argnums=(1,))
 
     # -- admission ----------------------------------------------------------
 
-    def admit(self, prompt) -> tuple[int, int]:
-        """Prefill ``prompt`` (len <= prompt_bucket) into a free slot.
-
-        Returns (slot, first generated token).  Raises if no slot is
-        free — the engine checks ``kv.n_free`` first.
-        """
+    def prefill(self, prompt, key=()) -> Lane:
+        """Run the compiled prefill over ``prompt`` (len <=
+        prompt_bucket) WITHOUT touching a slot; returns the batch-1
+        Lane a later ``seat_lane`` (here or on another engine — the
+        disaggregation handoff) can seat."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         plen = prompt.shape[0]
         if not 0 < plen <= self.prompt_bucket:
             raise ValueError(
                 f"prompt length {plen} not in (0, {self.prompt_bucket}]")
-        slot = self.kv.alloc()
-        if slot is None:
-            raise RuntimeError("no free slot")
         padded = np.zeros((1, self.prompt_bucket), np.int32)
         padded[0, :plen] = prompt
         first, pre_cache = self._prefill(
             self.params, jnp.asarray(padded), jnp.asarray([plen - 1]))
-        self.kv.cache = self._seat(self.kv.cache, pre_cache,
+        self.prefill_calls += 1
+        return Lane(key=tuple(key), cache=pre_cache,
+                    next_token=int(first[0]), pos=int(plen))
+
+    def seat_lane(self, lane: Lane) -> int:
+        """Seat a batch-1 lane (fresh prefill, pooled reuse hit, or an
+        imported handoff) into a free slot.  Raises if none is free —
+        the engine checks ``kv.n_free`` first."""
+        slot = self.kv.alloc()
+        if slot is None:
+            raise RuntimeError("no free slot")
+        self.kv.cache = self._seat(self.kv.cache, lane.cache,
                                    jnp.asarray(slot, jnp.int32))
-        first_tok = int(first[0])
-        self.tokens = self.tokens.at[slot, 0].set(first_tok)
-        self.positions = self.positions.at[slot].set(plen)
-        return slot, first_tok
+        self.tokens = self.tokens.at[slot, 0].set(lane.next_token)
+        self.positions = self.positions.at[slot].set(lane.pos)
+        if self.shardings is not None:
+            # the seat jit infers its own output layouts; re-pin to the
+            # declared placements so the decode step's donated cache
+            # aliasing sees exactly its committed in_shardings
+            self.kv.cache = jax.device_put(self.kv.cache,
+                                           self.shardings["cache"])
+            self.tokens = jax.device_put(self.tokens,
+                                         self.shardings["token"])
+            self.positions = jax.device_put(self.positions,
+                                            self.shardings["pos"])
+        return slot
+
+    def export_lane(self, slot: int, key=()) -> Lane:
+        """Slice the live state of lane ``slot`` (cache + next token +
+        position) into a batch-1 Lane another engine can seat and
+        continue bitwise-identically — per-slot decode math never mixes
+        lanes, so a migrated request cannot tell it moved."""
+        if not 0 <= slot < self.kv.n_slots:
+            raise ValueError(f"slot {slot} out of range")
+        cache1 = self._extract(self.kv.cache, jnp.asarray(slot, jnp.int32))
+        return Lane(key=tuple(key), cache=cache1,
+                    next_token=int(self.tokens[slot, 0]),
+                    pos=int(self.positions[slot]))
+
+    def admit(self, prompt) -> tuple[int, int]:
+        """Prefill ``prompt`` into a free slot: ``prefill`` +
+        ``seat_lane``.  Returns (slot, first generated token)."""
+        lane = self.prefill(prompt)
+        return self.seat_lane(lane), lane.next_token
 
     def evict(self, slot: int) -> None:
         """Release a slot — host-side only; no device work, no recompile."""

@@ -20,6 +20,7 @@ from __future__ import annotations
 import json
 import os
 import time
+import uuid
 from typing import Optional
 
 
@@ -34,13 +35,21 @@ class StragglerMonitor:
         self.flagged = []
 
     def record(self, step: int, seconds: float) -> bool:
-        """Returns True if this step is a straggler."""
+        """Returns True if this step is a straggler.
+
+        The first ``warmup`` samples never seed or update the mean: step
+        0 carries jit compilation (often 100x a steady step), and an
+        EWMA seeded from it masks every early real straggler — nothing
+        exceeds ``threshold x`` the poisoned mean until it decays.  The
+        mean seeds from the first post-warmup sample instead.
+        """
         self.count += 1
+        if self.count <= self.warmup:
+            return False   # compile/warmup samples are discarded
         if self.mean is None:
             self.mean = seconds
             return False
-        is_straggler = (self.count > self.warmup
-                        and seconds > self.threshold * self.mean)
+        is_straggler = seconds > self.threshold * self.mean
         if is_straggler:
             self.flagged.append((step, seconds, self.mean))
         else:
@@ -52,13 +61,21 @@ class StragglerMonitor:
 class Heartbeat:
     def __init__(self, path: str):
         self.path = path
+        # the scratch name must be unique PER WRITER: during a watchdog
+        # restart the old and new process briefly overlap, and with a
+        # shared "path + .tmp" their write/replace pairs interleave —
+        # one publishes the other's half-written payload and the loser's
+        # replace() finds its tmp already gone.  pid + a per-instance
+        # nonce keeps every writer on its own scratch file; the final
+        # os.replace onto ``path`` stays the single atomic commit point.
+        self._tmp = (f"{path}.{os.getpid()}."
+                     f"{uuid.uuid4().hex[:8]}.tmp")
 
     def beat(self, step: int, **info):
         payload = {"step": step, "time": time.time(), **info}
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as f:
+        with open(self._tmp, "w") as f:
             json.dump(payload, f)
-        os.replace(tmp, self.path)
+        os.replace(self._tmp, self.path)
 
     def age(self) -> Optional[float]:
         try:

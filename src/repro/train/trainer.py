@@ -64,6 +64,7 @@ def fit(bundle, state, data_iter: Iterator, tcfg: TrainerConfig,
     mon = StragglerMonitor(tcfg.straggler_threshold)
     history = []
     cur = int(state["step"])  # authoritative; advances with each update
+    last_saved = None         # step of the most recent periodic save
     for it_step, batch in data_iter:
         if it_step < cur:  # stale iterator after a resume: fast-forward
             continue
@@ -87,6 +88,14 @@ def fit(bundle, state, data_iter: Iterator, tcfg: TrainerConfig,
         cur += 1  # == int(state["step"]) without a device sync
         if ckpt is not None and cur % tcfg.ckpt_every == 0:
             ckpt.save(cur, state)
+            last_saved = cur
     if ckpt is not None:
-        ckpt.save(cur, state, blocking=True)
+        # final snapshot — but when the loop's last periodic save already
+        # covered this step (total_steps % ckpt_every == 0), saving it
+        # AGAIN would race the still-async writer on the same
+        # step_XXXX.tmp; just wait for that writer to commit instead
+        if last_saved == cur:
+            ckpt.wait()
+        else:
+            ckpt.save(cur, state, blocking=True)
     return state, history

@@ -1,0 +1,371 @@
+"""Serve-fleet tests: cache store, KV-affinity routing, disaggregation.
+
+The fleet extends the engine's load-bearing property one level up: which
+replica serves a request — and whether its prefill ran on a dedicated
+prefill engine — must be invisible in the token stream.  Routing may
+only change WHERE work runs (and how much prefill compute repeats),
+never WHAT comes out.
+"""
+
+import asyncio
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.sparsity import SparsityConfig
+from repro.models import transformer_lm as T
+from repro.serve import (AsyncFrontend, CacheStore, FleetConfig, Lane,
+                         Router, ServeConfig, ServeEngine, ServeFleet,
+                         prefix_chain)
+from repro.serve.cache_store import match_depth
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCH = get_arch("qwen3-8b")
+CFG = ARCH.smoke
+SP = SparsityConfig(n=2, m=8, method="bdwp")
+SERVE = ServeConfig(n_slots=2, max_len=32, prompt_bucket=12)
+MAX_NEW = 6
+
+
+@pytest.fixture(scope="module")
+def params():
+    p, _ = T.init(jax.random.PRNGKey(0), CFG)
+    return jax.tree.map(lambda w: w.astype(jnp.bfloat16), p)
+
+
+def _prompts(lens, seed=11):
+    key = jax.random.PRNGKey(seed)
+    return [np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                          (n,), 0, CFG.vocab))
+            for i, n in enumerate(lens)]
+
+
+PROMPTS_LENS = (4, 8, 6)
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    return _prompts(PROMPTS_LENS)
+
+
+@pytest.fixture(scope="module")
+def solo_refs(params, prompts):
+    """Reference streams: each prompt decoded alone on one engine."""
+    eng = ServeEngine(params, CFG, SP, SERVE)
+    refs = []
+    for p in prompts:
+        rid = eng.submit(p, max_new_tokens=MAX_NEW)
+        refs.append(eng.run()[rid])
+        eng.reset()
+    return refs
+
+
+class TestPrefixChain:
+    def test_chain_blocks_and_equality(self):
+        a = prefix_chain(range(10), block=4)
+        assert len(a) == 3  # 4 + 4 + 2
+        b = prefix_chain(list(range(10)), block=4)
+        assert a == b  # container/int-type agnostic
+        c = prefix_chain(range(11), block=4)
+        assert a[:2] == c[:2] and a[2] != c[2]
+
+    def test_partial_block_not_confused_with_full(self):
+        # [1,2] and [1,2,0,0] share no digest: length is hashed in
+        assert prefix_chain([1, 2], 4)[0] != prefix_chain([1, 2, 0, 0], 4)[0]
+
+    def test_match_depth(self):
+        a = prefix_chain(range(12), block=4)
+        b = prefix_chain(list(range(8)) + [99, 99, 99, 99], block=4)
+        assert match_depth(a, b) == 2
+        assert match_depth(a, a) == 3
+        assert match_depth(a, ()) == 0
+
+    def test_block_validation(self):
+        with pytest.raises(ValueError):
+            prefix_chain([1], block=0)
+
+
+class TestCacheStore:
+    def _lane(self, key):
+        return Lane(key=tuple(key), cache=None, next_token=0, pos=1)
+
+    def test_put_get_pop(self):
+        cs = CacheStore(capacity=4)
+        lane = self._lane(("a",))
+        cs.put(lane)
+        assert ("a",) in cs and len(cs) == 1
+        assert cs.get(("a",)) is lane       # get keeps the lane (reuse)
+        assert cs.get(("a",)) is lane
+        assert cs.pop(("a",)) is lane       # pop removes it (handoff)
+        assert cs.get(("a",)) is None and len(cs) == 0
+        st = cs.stats()
+        assert (st["hits"], st["misses"], st["puts"]) == (2, 1, 1)
+
+    def test_lru_eviction_and_recency_refresh(self):
+        cs = CacheStore(capacity=2)
+        cs.put(self._lane(("a",)))
+        cs.put(self._lane(("b",)))
+        cs.get(("a",))                 # refresh: "b" is now oldest
+        cs.put(self._lane(("c",)))
+        assert ("a",) in cs and ("c",) in cs and ("b",) not in cs
+        assert cs.stats()["evictions"] == 1
+
+    def test_reput_same_key_no_eviction(self):
+        cs = CacheStore(capacity=1)
+        cs.put(self._lane(("a",)))
+        cs.put(self._lane(("a",)))
+        assert cs.stats()["evictions"] == 0 and len(cs) == 1
+
+    def test_match_depth_over_pool(self):
+        cs = CacheStore(capacity=4)
+        cs.put(self._lane(prefix_chain(range(8), 4)))
+        assert cs.match_depth(prefix_chain(range(8), 4)) == 2
+        assert cs.match_depth(
+            prefix_chain(list(range(4)) + [7, 7, 7, 7], 4)) == 1
+        assert cs.match_depth(prefix_chain([5, 5], 4)) == 0
+
+    def test_capacity_validation(self):
+        with pytest.raises(ValueError):
+            CacheStore(capacity=0)
+
+
+class TestEnginePrefixReuse:
+    def test_repeated_prompt_prefills_once(self, params, prompts, solo_refs):
+        """Same prompt 4x through a prefix-pooled engine: one compiled
+        prefill total, streams identical to the pool-less engine."""
+        scfg = dataclasses.replace(SERVE, prefix_cache=4)
+        eng = ServeEngine(params, CFG, SP, scfg)
+        rids = [eng.submit(prompts[0], max_new_tokens=MAX_NEW)
+                for _ in range(4)]
+        out = eng.run()
+        assert eng.prefill_steps == 1
+        assert eng.prefix_pool.stats()["hits"] == 3
+        for r in rids:
+            assert out[r] == solo_refs[0]
+
+    def test_distinct_prompts_all_prefill(self, params, prompts, solo_refs):
+        scfg = dataclasses.replace(SERVE, prefix_cache=4)
+        eng = ServeEngine(params, CFG, SP, scfg)
+        rids = [eng.submit(p, max_new_tokens=MAX_NEW) for p in prompts]
+        out = eng.run()
+        assert eng.prefill_steps == len(prompts)
+        assert [out[r] for r in rids] == solo_refs
+
+
+class TestFleetRouting:
+    def _run(self, params, trace, router, **kw):
+        fc = FleetConfig(n_replicas=2, router=router, route_seed=3, **kw)
+        fl = ServeFleet(params, CFG, SP, SERVE, fc)
+        rids = [fl.submit(p, max_new_tokens=m) for p, m in trace]
+        out = fl.run()
+        return fl, [out[r] for r in rids]
+
+    def test_prefix_beats_random_and_streams_match(self, params, prompts,
+                                                   solo_refs):
+        """The acceptance property: on a shared-prefix workload the
+        prefix-aware router serves with STRICTLY fewer compiled prefill
+        steps than random routing — and both produce exactly the solo
+        streams for every request."""
+        trace = [(prompts[i % 3], MAX_NEW) for i in range(9)]
+        fl_p, out_p = self._run(params, trace, "prefix")
+        fl_r, out_r = self._run(params, trace, "random")
+        for outs in (out_p, out_r):
+            for i, toks in enumerate(outs):
+                assert toks == solo_refs[i % 3]
+        sp, sr = fl_p.stats(), fl_r.stats()
+        assert sp["prefill_steps"] < sr["prefill_steps"]
+        # the win came from routing onto warm pools, not from luck
+        hits = sum(n for d, n in sp["routed_by_depth"].items() if d > 0)
+        assert hits > 0
+
+    def test_least_loaded_spreads_work(self, params, prompts):
+        trace = [(prompts[0], MAX_NEW)] * 4
+        fl, _ = self._run(params, trace, "least_loaded")
+        per = [e.decode_steps for e in fl.engines]
+        assert all(d > 0 for d in per)  # both replicas actually decoded
+
+    def test_router_unit_prefers_deepest_then_load(self):
+        class FakeEngine:
+            def __init__(self, depth, running, queued, n_slots=2):
+                self._d, self._r, self._q, self._n = (depth, running,
+                                                      queued, n_slots)
+
+            def prefix_match_depth(self, chain):
+                return self._d
+
+            def utilization(self):
+                return {"n_slots": self._n, "running": self._r,
+                        "queued": self._q, "free_slots": 0,
+                        "load": (self._r + self._q) / self._n}
+
+        chain = ("x",)
+        r = Router("prefix")
+        # deepest match wins over emptier non-holder
+        assert r.choose([FakeEngine(1, 1, 0), FakeEngine(0, 0, 0)],
+                        chain) == 0
+        # ...until the holder's backlog exceeds least + n_slots + slack
+        assert r.choose([FakeEngine(1, 2, 1), FakeEngine(0, 0, 0)],
+                        chain) == 1
+        # depth tie -> least-loaded
+        assert r.choose([FakeEngine(1, 2, 0), FakeEngine(1, 0, 0)],
+                        chain) == 1
+        assert r.by_depth.get(0, 0) == 1 and r.by_depth.get(1, 0) == 2
+
+    def test_fleet_config_validation(self):
+        with pytest.raises(ValueError):
+            FleetConfig(n_replicas=0)
+        with pytest.raises(ValueError):
+            FleetConfig(router="round_robin")
+        with pytest.raises(ValueError):
+            FleetConfig(disaggregate=True, n_prefill=0)
+
+
+class TestDisaggregation:
+    def test_disagg_bitwise_equals_colocated(self, params, prompts):
+        """A disaggregated fleet (1 prefill + 1 decode engine, handoff
+        through the CacheStore) must reproduce a single colocated
+        engine's streams bitwise on the same trace — including the
+        max_new_tokens=1 request that never reaches a decode engine."""
+        trace = ([(prompts[i % 3], MAX_NEW) for i in range(4)]
+                 + [(prompts[1], 1)])
+
+        eng = ServeEngine(params, CFG, SP, SERVE)
+        rc = [eng.submit(p, max_new_tokens=m) for p, m in trace]
+        outc = eng.run()
+
+        fl = ServeFleet(params, CFG, SP, SERVE,
+                        FleetConfig(n_replicas=1, router="least_loaded",
+                                    disaggregate=True, n_prefill=1))
+        rd = [fl.submit(p, max_new_tokens=m) for p, m in trace]
+        outd = fl.run()
+        assert [outd[b] for b in rd] == [outc[a] for a in rc]
+        st = fl.stats()
+        assert st["store"]["size"] == 0       # every handoff consumed
+        assert st["decode_steps"] > 0
+        # decode engines never prefilled: disaggregation is real
+        assert all(e["prefill_steps"] == 0 for e in st["engines"])
+        assert sum(e["prefill_steps"]
+                   for e in st["prefill_engines"]) > 0
+
+    def test_disagg_eos_on_first_token(self, params, prompts, solo_refs):
+        """EOS hit by the prefill's own sampled token: the request must
+        finish on the prefill side with the identical 1-token stream."""
+        eos = solo_refs[0][0]
+        eng = ServeEngine(params, CFG, SP, SERVE)
+        ra = eng.submit(prompts[0], max_new_tokens=MAX_NEW, eos=eos)
+        ref = eng.run()[ra]
+        assert ref == [eos]
+
+        fl = ServeFleet(params, CFG, SP, SERVE,
+                        FleetConfig(n_replicas=1, disaggregate=True))
+        rb = fl.submit(prompts[0], max_new_tokens=MAX_NEW, eos=eos)
+        out = fl.run()[rb]
+        assert out == ref
+        assert fl.stats()["decode_steps"] == 0  # never reached decode
+
+
+class TestLaneExportImport:
+    def test_mid_decode_handoff_continues_bitwise(self, params, prompts):
+        """Export a RUNNING request's lane after 3 steps, seat it on a
+        fresh engine: the concatenated stream equals the uninterrupted
+        solo decode."""
+        full_new = 8
+        e_ref = ServeEngine(params, CFG, SP, SERVE)
+        r_ref = e_ref.submit(prompts[1], max_new_tokens=full_new)
+        full = e_ref.run()[r_ref]
+
+        e1 = ServeEngine(params, CFG, SP, SERVE)
+        r1 = e1.submit(prompts[1], max_new_tokens=full_new)
+        for _ in range(3):
+            e1.step()
+        req = next(r for r in e1._running.values() if r.rid == r1)
+        partial = list(req.tokens)
+        assert 0 < len(partial) < full_new
+        lane = e1.export_lane(r1)
+        assert e1.n_running == 0
+        assert e1.batcher.kv.n_free == SERVE.n_slots  # slot released
+        with pytest.raises(KeyError):
+            e1.export_lane(r1)  # detached: not running here anymore
+
+        e2 = ServeEngine(params, CFG, SP, SERVE)
+        r2 = e2.submit_lane(lane, max_new_tokens=full_new, tokens=partial)
+        assert e2.run()[r2] == full
+
+    def test_submit_lane_validation(self, params, prompts):
+        eng = ServeEngine(params, CFG, SP, SERVE)
+        lane = eng.prefill_to_lane(prompts[0], max_new_tokens=4)
+        with pytest.raises(ValueError):
+            eng.submit_lane(lane, max_new_tokens=0)
+        with pytest.raises(ValueError):  # pos + remaining exceeds max_len
+            eng.submit_lane(lane, max_new_tokens=SERVE.max_len)
+
+
+class TestAsyncFrontend:
+    def test_concurrent_generate_matches_solo(self, params, prompts,
+                                              solo_refs):
+        async def main():
+            fl = ServeFleet(params, CFG, SP, SERVE,
+                            FleetConfig(n_replicas=2))
+            fr = AsyncFrontend(fl)
+            return await asyncio.gather(
+                *[fr.generate(p, max_new_tokens=MAX_NEW) for p in prompts])
+
+        outs = asyncio.run(main())
+        assert [list(o) for o in outs] == solo_refs
+
+    def test_late_joiner_reuses_driver(self, params, prompts, solo_refs):
+        async def main():
+            fl = ServeFleet(params, CFG, SP, SERVE,
+                            FleetConfig(n_replicas=1))
+            fr = AsyncFrontend(fl)
+            first = asyncio.create_task(
+                fr.generate(prompts[0], max_new_tokens=MAX_NEW))
+            await asyncio.sleep(0)  # driver running, queue drained
+            second = await fr.generate(prompts[1], max_new_tokens=MAX_NEW)
+            return await first, second
+
+        a, b = asyncio.run(main())
+        assert list(a) == solo_refs[0] and list(b) == solo_refs[1]
+
+
+class TestFleetMeshes:
+    def test_replica_device_groups_partition(self):
+        from repro.launch import spmd
+        devs = list(range(8))  # groups don't care about element type
+        groups = spmd.replica_device_groups(2, devices=devs)
+        assert groups == [[0, 1, 2, 3], [4, 5, 6, 7]]
+        with pytest.raises(ValueError):
+            spmd.replica_device_groups(3, devices=devs)
+        with pytest.raises(ValueError):
+            spmd.replica_device_groups(0, devices=devs)
+
+    @pytest.mark.skipif(
+        jax.device_count() < 2,
+        reason="needs >=2 devices "
+               "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    def test_fleet_on_disjoint_meshes(self, params, prompts, solo_refs):
+        """2 replicas on disjoint device groups: routing + streams are
+        mesh-invariant."""
+        from repro.launch import spmd
+        meshes = spmd.fleet_meshes(2)
+        assert not (set(meshes[0].devices.flat)
+                    & set(meshes[1].devices.flat))
+        fl = ServeFleet(params, CFG, SP, SERVE,
+                        FleetConfig(n_replicas=2, router="prefix"),
+                        meshes=meshes)
+        trace = [(prompts[i % 3], MAX_NEW) for i in range(6)]
+        rids = [fl.submit(p, max_new_tokens=m) for p, m in trace]
+        out = fl.run()
+        for i, r in enumerate(rids):
+            assert out[r] == solo_refs[i % 3]
+
+    def test_mesh_count_mismatch_rejected(self, params):
+        from repro.launch import spmd
+        with pytest.raises(ValueError):
+            ServeFleet(params, CFG, SP, SERVE, FleetConfig(n_replicas=2),
+                       meshes=[spmd.single_device_mesh()])

@@ -194,6 +194,81 @@ class TestPackedServing:
                                    rtol=2e-2, atol=1e-2)
 
 
+class TestLifecycleEdges:
+    def test_reset_refuses_with_work_in_flight(self, params):
+        """reset() must never silently drop live requests: refused while
+        anything is queued OR running, allowed (and zeroing) after the
+        engine drains."""
+        prompt = _prompts((4,))[0]
+        eng = ServeEngine(params, CFG, SP, SERVE)
+        eng.submit(prompt, max_new_tokens=4)
+        with pytest.raises(RuntimeError):
+            eng.reset()                      # queued
+        eng.step()
+        with pytest.raises(RuntimeError):
+            eng.reset()                      # running mid-decode
+        eng.run()
+        eng.reset()
+        assert (eng.step_count, eng.decode_steps, eng.decoded_tokens,
+                eng.prefill_steps) == (0, 0, 0, 0)
+
+    def test_run_raises_when_not_drained(self, params):
+        prompt = _prompts((4,))[0]
+        eng = ServeEngine(params, CFG, SP, SERVE)
+        eng.submit(prompt, max_new_tokens=10)
+        with pytest.raises(RuntimeError, match="did not drain"):
+            eng.run(max_steps=2)
+        eng.run()  # recoverable: keep stepping to completion
+
+    def test_admit_and_finish_same_step(self, params):
+        """max_new_tokens=1 requests finish AT admission (the prefill's
+        token is the whole stream) and free their slot inside the same
+        admission loop — 3 such requests clear 2 slots in one step()."""
+        prompts = _prompts((4, 8, 6))
+        firsts = [_solo(params, p, 1) for p in prompts]
+        eng = ServeEngine(params, CFG, SP, SERVE)
+        rids = [eng.submit(p, max_new_tokens=1) for p in prompts]
+        ev = eng.step()
+        assert ev["admitted"] == rids
+        assert ev["finished"] == rids
+        assert ev["active"] == 0
+        assert eng.batcher.kv.n_free == SERVE.n_slots
+        out = eng.harvest()
+        for r, f in zip(rids, firsts):
+            assert out[r] == f
+            assert len(out[r]) == 1
+
+    def test_eos_on_max_new_tokens_boundary(self, params):
+        """EOS sampled exactly at the length limit: both stop conditions
+        fire on the same token — the reason must report \"eos\" (the
+        stream DID terminate naturally), not \"length\"."""
+        prompt = _prompts((6,))[0]
+        ref = _solo(params, prompt, 12)
+        # pick a boundary whose token appears there FIRST, so eos can't
+        # fire early (greedy streams repeat tokens; don't hardcode)
+        n = max(i + 1 for i in range(1, len(ref))
+                if ref[i] not in ref[:i])
+        eos = ref[n - 1]
+        assert eos not in ref[:n - 1]  # lands first ON the boundary
+        def drain(eng):  # run() harvests (pops _done); step by hand
+            while eng._queue or eng._running:
+                eng.step()
+
+        eng = ServeEngine(params, CFG, SP, SERVE)
+        rid = eng.submit(prompt, max_new_tokens=n, eos=eos)
+        drain(eng)
+        req = next(r for r in eng.finished_requests if r.rid == rid)
+        assert req.tokens == ref[:n]
+        assert len(req.tokens) == req.max_new_tokens
+        assert req.finish_reason == "eos"
+        # control: same limit, an eos that never fires -> "length"
+        eng2 = ServeEngine(params, CFG, SP, SERVE)
+        rid2 = eng2.submit(prompt, max_new_tokens=n, eos=-1)
+        drain(eng2)
+        req2 = next(r for r in eng2.finished_requests if r.rid == rid2)
+        assert req2.finish_reason == "length"
+
+
 class TestSlotCacheMechanics:
     def test_alloc_free_lowest_first(self, params):
         from repro.serve import SlotKVCache

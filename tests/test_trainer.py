@@ -100,6 +100,21 @@ class TestStraggler:
         assert not mon.record(0, 10.0)
         assert not mon.record(1, 0.0001)
 
+    def test_compile_step_never_seeds_mean(self):
+        """Regression: step 0 carries jit compilation (here 100x a
+        steady step).  Seeding the EWMA from it poisoned the mean so an
+        early real straggler sailed under ``threshold x mean`` — warmup
+        samples must be DISCARDED, with the mean seeded from the first
+        post-warmup sample."""
+        mon = StragglerMonitor(threshold=2.0, warmup=1)
+        assert not mon.record(0, 10.0)     # compile-laden: discarded
+        assert not mon.record(1, 0.1)      # seeds the mean
+        assert mon.mean == pytest.approx(0.1)
+        assert mon.record(2, 0.3)          # 3x the mean: flagged NOW
+        assert mon.flagged == [(2, 0.3, pytest.approx(0.1))]
+        # the straggler did not poison the mean either
+        assert mon.mean == pytest.approx(0.1)
+
 
 class TestHeartbeat:
     def test_beat_and_staleness(self, tmp_path):
@@ -109,6 +124,47 @@ class TestHeartbeat:
         data = json.load(open(tmp_path / "hb.json"))
         assert data["step"] == 3
         assert hb.age() < 5.0
+
+    def test_two_writers_never_collide(self, tmp_path, monkeypatch):
+        """Regression: during a watchdog restart the old and new process
+        briefly both beat() the same path.  With a shared ``path +
+        ".tmp"`` scratch name their write/replace pairs interleave — the
+        loser's os.replace finds its tmp already consumed.  The barrier
+        parks both writers between write and replace to force exactly
+        that overlap; per-writer scratch names must survive it."""
+        import threading
+
+        from repro.train import fault as F
+
+        path = str(tmp_path / "hb.json")
+        a, b = Heartbeat(path), Heartbeat(path)
+        assert a._tmp != b._tmp  # unique scratch per writer
+
+        bar = threading.Barrier(2)
+        real_dump = json.dump
+
+        def stalling_dump(obj, f, **kw):
+            real_dump(obj, f, **kw)
+            bar.wait(timeout=10)  # both tmps written, neither replaced
+
+        monkeypatch.setattr(F.json, "dump", stalling_dump)
+        errors = []
+
+        def beat(hb, step):
+            try:
+                hb.beat(step, loss=0.5)
+            except Exception as e:  # pre-fix: FileNotFoundError here
+                errors.append(e)
+
+        threads = [threading.Thread(target=beat, args=(hb, s))
+                   for hb, s in ((a, 1), (b, 2))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=10)
+        assert errors == []
+        data = json.load(open(path))  # one COMPLETE payload won
+        assert data["step"] in (1, 2) and data["loss"] == 0.5
 
 
 class TestTrainerLoop:
@@ -138,6 +194,48 @@ class TestTrainerLoop:
         assert all(np.isfinite(h["loss"]) for h in hist)
         mgr = CheckpointManager(str(tmp_path))
         assert mgr.latest_step() == 6
+
+    def test_fit_no_duplicate_save_on_aligned_final_step(self, tmp_path,
+                                                         monkeypatch):
+        """Regression: with total_steps % ckpt_every == 0 the loop's
+        last periodic save and the post-loop "final snapshot" both
+        targeted the SAME step — the blocking re-save raced the still-
+        async writer on one step_XXXX.tmp.  Each step must be saved at
+        most once; the final step must still be committed on disk."""
+        from repro.configs import get_arch
+        from repro.core.sparsity import SparsityConfig
+        from repro.data import synthetic as D
+        from repro.launch.mesh import make_host_mesh
+        from repro.optim import sgd
+        from repro.train import step as ST
+        from repro.train import trainer as TR
+
+        arch = get_arch("qwen3-8b")
+        mesh = make_host_mesh()
+        sp = SparsityConfig(n=2, m=8, method="bdwp")
+        bundle = ST.build_lm_train(arch.smoke, mesh, sp,
+                                   sgd.SGDConfig(total_steps=4))
+        state = jax.device_put(
+            ST.init_train_state(jax.random.PRNGKey(0), arch.smoke, sp_cfg=sp),
+            bundle.state_shardings)
+
+        calls = []
+        orig_save = CheckpointManager.save
+
+        def spy(self, step, st, blocking=False):
+            calls.append(step)
+            return orig_save(self, step, st, blocking=blocking)
+
+        monkeypatch.setattr(CheckpointManager, "save", spy)
+        tcfg = TR.TrainerConfig(total_steps=4, ckpt_every=2, log_every=100,
+                                ckpt_dir=str(tmp_path))
+        TR.fit(bundle, state, D.lm_stream(arch.smoke.vocab, 2, 32), tcfg,
+               log_fn=lambda *_: None)
+        # pre-fix: [2, 4, 4] — step 4 written twice, async + blocking
+        assert calls == [2, 4]
+        mgr = CheckpointManager(str(tmp_path))
+        assert mgr.latest_step() == 4  # the async save still committed
+        assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
 
     def test_fit_resume_keys_off_state_step(self, tmp_path):
         """Auto-resume bookkeeping: after a restart the data iterator
