@@ -42,11 +42,11 @@ def run() -> list:
             vals, idx = ops.nm_compact(w.T, n, m, use_pallas=False,
                                        idx_bits=idx_bits)
             vals, idx = vals.T, idx.T  # pack along K
-            t_pack = _time(lambda ww: ops.nm_compact(
-                ww, n, m, use_pallas=False, idx_bits=idx_bits), w.T)
-            t_spmm = _time(lambda: ops.nm_spmm(
-                x.astype(jnp.float32), vals, idx, n, m, use_pallas=False,
-                idx_bits=idx_bits))
+            t_pack = _time(lambda ww, ib=idx_bits: ops.nm_compact(
+                ww, n, m, use_pallas=False, idx_bits=ib), w.T)
+            t_spmm = _time(lambda v=vals, i=idx, ib=idx_bits: ops.nm_spmm(
+                x.astype(jnp.float32), v, i, n, m, use_pallas=False,
+                idx_bits=ib))
             # bytes as stored: bf16-width vals + the actual index plane
             # (one byte per offset at u8, two offsets per byte at u4)
             packed_bytes = (k * f * n // m * 2

@@ -1,22 +1,34 @@
 """repro.analysis — nmlint: the repo-wide N:M invariant auditor.
 
 One blocking static-analysis layer instead of scattered runtime
-asserts: AST rules over src/repro/ (ast_pass), jaxpr/HLO rules over the
-representative config matrix (graph_audit), a waiver file with expiry
-(findings), a deterministic machine-readable report (report), and a
-self-test that seeds one violation per rule (selftest).  CLI:
-tools/nmlint.py; rule narrative: docs/analysis.md.
+asserts: AST rules over src/repro/ (ast_pass + the NM402/NM404 buffer
+rules), jaxpr/HLO rules over the representative config matrix
+(graph_audit) in three families — graph structure (NM2xx), dtype
+provenance (NM3xx, dtype_flow), buffer/dispatch lifecycle (NM4xx,
+buffer_audit) — a waiver file with expiry (findings), a deterministic
+machine-readable report (report), and a self-test that seeds one
+violation per rule (selftest).  CLI: tools/nmlint.py; rule narrative:
+docs/analysis.md.
 """
 
 from repro.analysis.ast_pass import run_ast_pass, scanned_file_count
+from repro.analysis.buffer_audit import (
+    check_dispatch_stable, check_donation_aliased, check_tree_buffers,
+    count_output_aliases, expected_donation_matches, run_async_sync_pass,
+)
+from repro.analysis.dtype_flow import (
+    audit_kernels, check_accum_dtype, check_master_mask_source,
+    check_no_double_round, check_wire_narrow, propagate_tags, tag_inputs,
+)
 from repro.analysis.findings import (
     RULES, RULES_BY_ID, WAIVER_FILE, Finding, apply_waivers, load_waivers,
 )
 from repro.analysis.graph_audit import (
-    callback_census, check_callback_free, check_group_integrity,
-    check_mask_once, check_no_dense_entry_params, check_recompile_stable,
-    check_scatter_free, mask_census, pallas_call_census,
-    packed_dense_shapes, prunable_sites, run_graph_audit, scatter_census,
+    ALL_FAMILIES, callback_census, check_callback_free,
+    check_group_integrity, check_mask_once, check_no_dense_entry_params,
+    check_recompile_stable, check_scatter_free, mask_census,
+    pallas_call_census, packed_dense_shapes, prunable_sites,
+    run_graph_audit, scatter_census, trace_once,
 )
 from repro.analysis.report import SCHEMA_VERSION, build_report, write_report
 from repro.analysis.selftest import run_selftest
@@ -24,10 +36,17 @@ from repro.analysis.selftest import run_selftest
 __all__ = [
     "RULES", "RULES_BY_ID", "WAIVER_FILE", "Finding", "apply_waivers",
     "load_waivers", "run_ast_pass", "scanned_file_count",
-    "callback_census", "check_callback_free", "check_group_integrity",
-    "check_mask_once", "check_no_dense_entry_params",
-    "check_recompile_stable", "check_scatter_free", "mask_census",
-    "pallas_call_census", "packed_dense_shapes", "prunable_sites",
-    "run_graph_audit", "scatter_census", "SCHEMA_VERSION", "build_report",
+    "check_dispatch_stable", "check_donation_aliased",
+    "check_tree_buffers", "count_output_aliases",
+    "expected_donation_matches", "run_async_sync_pass",
+    "audit_kernels", "check_accum_dtype", "check_master_mask_source",
+    "check_no_double_round", "check_wire_narrow", "propagate_tags",
+    "tag_inputs",
+    "ALL_FAMILIES", "callback_census", "check_callback_free",
+    "check_group_integrity", "check_mask_once",
+    "check_no_dense_entry_params", "check_recompile_stable",
+    "check_scatter_free", "mask_census", "pallas_call_census",
+    "packed_dense_shapes", "prunable_sites", "run_graph_audit",
+    "scatter_census", "trace_once", "SCHEMA_VERSION", "build_report",
     "write_report", "run_selftest",
 ]

@@ -160,6 +160,12 @@ def check_source(rel_path: str, source: str) -> List[Finding]:
                     f"{_base_name(call.func)}.{call.func.attr}(...) — "
                     f"device-unsafe under jit (use lax.cond / jnp.where)"))
 
+    # --- NM402: donate + in_shardings without pinned out_shardings -------
+    # (lives in buffer_audit with its NM4xx siblings; rides this walk so
+    # the rule is on by default and --changed-only sees it)
+    from repro.analysis.buffer_audit import check_tree_buffers
+    findings.extend(check_tree_buffers(rel_path, tree))
+
     # --- NM102: scatter-style ops in scopes that bind both vals & idx ----
     if not unpack_ok:
         for scope, body in _scopes(tree):

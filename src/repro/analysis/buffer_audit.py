@@ -1,0 +1,301 @@
+"""nmlint buffer/dispatch rules (NM401–NM404).
+
+PR 9's crash class — a donated output whose sharding XLA chose freely,
+then aliased against a differently-sharded donated input — was silent
+until runtime.  This module makes the whole buffer-lifecycle family
+static:
+
+  NM401 ``check_donation_aliased`` — every donated input leaf that has
+        a same-dtype/shape output to alias against must actually appear
+        in the compiled executable's ``input_output_alias`` header.  A
+        donation jax dropped (sharding/layout mismatch) silently
+        doubles HBM for that buffer.
+  NM402 ``check_tree_buffers`` — AST: ``jax.jit`` (or
+        ``functools.partial(jax.jit, ...)``) called with
+        ``donate_argnums`` AND ``in_shardings`` but NO
+        ``out_shardings``.  On a multi-device mesh XLA then picks the
+        output shardings freely and the donation alias can pair
+        buffers of different per-device sizes — the exact PR 9 batcher
+        crash, now a named rule.  Single-device jits (no in_shardings)
+        are exempt: the batcher's solo ``_seat``/``_decode`` legitimately
+        omit shardings.
+  NM403 ``check_dispatch_stable`` — after a short REAL workload, every
+        per-step-loop jit must hold ≤1 compile-cache entry
+        (``_cache_size``).  NM206 covers the train step; this covers
+        the serve dispatch loop (prefill/seat/decode) where a python
+        scalar or static-arg churn retraces per request.
+  NM404 ``run_async_sync_pass`` — AST call-graph over ``serve/``:
+        host-sync points (``jax.device_get``, ``np.asarray``/``np.array``,
+        ``.block_until_ready()``, ``.item()``) reachable from
+        ``serve/fleet.py``'s async driver functions.  The engine must
+        sync exactly once per step to route/finish, so the sanctioned
+        harvest sites (``batcher.step``/``batcher.prefill``) are
+        allowlisted; anything else stalls the event loop.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from collections import Counter
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.findings import Finding
+
+# ---------------------------------------------------------------------------
+# NM401 — donated buffers must alias
+# ---------------------------------------------------------------------------
+
+_ALIAS_MARK_RE = re.compile(r"(?:may|must)-alias")
+_ENTRY_RESULT_RE = re.compile(r"^ENTRY[^\n]*->\s*(.*?)\s*\{\s*$", re.M)
+
+_NP_TO_HLO = {
+    "float64": "f64", "float32": "f32", "float16": "f16",
+    "bfloat16": "bf16", "float8_e4m3fn": "f8e4m3fn",
+    "float8_e5m2": "f8e5m2", "int64": "s64", "int32": "s32",
+    "int16": "s16", "int8": "s8", "uint64": "u64", "uint32": "u32",
+    "uint16": "u16", "uint8": "u8", "bool": "pred",
+}
+
+
+def count_output_aliases(hlo_text: str) -> int:
+    """Entries in the module header's ``input_output_alias={...}`` —
+    the donations jax successfully matched to outputs at lowering."""
+    for line in hlo_text.splitlines():
+        if "input_output_alias=" in line:
+            return len(_ALIAS_MARK_RE.findall(line))
+    return 0
+
+
+def _hlo_leaves(tree) -> List[Tuple[str, tuple]]:
+    import jax
+    import numpy as np
+    out = []
+    for leaf in jax.tree.leaves(tree):
+        dt = _NP_TO_HLO.get(np.dtype(leaf.dtype).name)
+        if dt is not None:
+            out.append((dt, tuple(leaf.shape)))
+    return out
+
+
+def expected_donation_matches(donated_tree, hlo_text: str) -> int:
+    """How many donated leaves have a same-dtype/shape output leaf to
+    alias against (multiset matching against the ENTRY result type).
+
+    On a solo compile this is exact.  On an SPMD-partitioned module the
+    ENTRY carries per-device local shapes while the donated tree is
+    global, so this undercounts — a best-effort lower bound, which
+    keeps the NM401 comparison (aliased >= expected) conservative."""
+    from repro.launch.hlo_cost import _parse_shapes
+
+    m = _ENTRY_RESULT_RE.search(hlo_text)
+    if m is None:
+        return 0
+    outs = Counter(_parse_shapes(m.group(1)))
+    matched = 0
+    for leaf in _hlo_leaves(donated_tree):
+        if outs[leaf] > 0:
+            outs[leaf] -= 1
+            matched += 1
+    return matched
+
+
+def check_donation_aliased(hlo_text: str, donated_tree, case: str,
+                           label: str = "") -> Tuple[List[Finding], dict]:
+    """NM401 as a finding-producer.  Returns (findings, {expected,
+    aliased})."""
+    expected = expected_donation_matches(donated_tree, hlo_text)
+    actual = count_output_aliases(hlo_text)
+    stats = {"donation_expected": expected, "donation_aliased": actual}
+    if actual < expected:
+        return [Finding(
+            "NM401", case, 0,
+            f"{label or 'compiled executable'}: only {actual} of "
+            f"{expected} matchable donated buffers appear in "
+            f"input_output_alias — the unmatched donations silently "
+            f"double their HBM (sharding/layout mismatch at lowering)")], \
+            stats
+    return [], stats
+
+
+# ---------------------------------------------------------------------------
+# NM402 — donate + in_shardings requires pinned out_shardings (AST)
+# ---------------------------------------------------------------------------
+
+
+def _trailing_name(node: ast.expr) -> str:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def _jit_kwargs(call: ast.Call) -> Optional[set]:
+    """Keyword names of a ``jax.jit(...)`` or
+    ``functools.partial(jax.jit, ...)`` call, else None."""
+    name = _trailing_name(call.func)
+    if name == "jit":
+        return {k.arg for k in call.keywords if k.arg}
+    if name == "partial" and call.args \
+            and _trailing_name(call.args[0]) == "jit":
+        return {k.arg for k in call.keywords if k.arg}
+    return None
+
+
+def check_tree_buffers(rel_path: str, tree: ast.Module) -> List[Finding]:
+    """NM402 over one parsed module (called by ast_pass.check_source so
+    the rule rides the ordinary AST scan and --changed-only)."""
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        kw = _jit_kwargs(node)
+        if kw is None:
+            continue
+        donates = kw & {"donate_argnums", "donate_argnames"}
+        if donates and "in_shardings" in kw and "out_shardings" not in kw:
+            findings.append(Finding(
+                "NM402", rel_path, node.lineno,
+                "jit with donate_argnums and in_shardings but no "
+                "out_shardings — XLA picks output shardings freely and "
+                "the donation alias can pair differently-sharded "
+                "buffers (PR 9 batcher crash class); pin out_shardings"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# NM403 — per-step-loop jits must not retrace
+# ---------------------------------------------------------------------------
+
+
+def check_dispatch_stable(named_jits: Dict[str, object], case: str,
+                          run_fn=None) -> Tuple[List[Finding], dict]:
+    """NM403: after ``run_fn`` drives a short real workload, every
+    named per-step jit holds ≤ 1 compile-cache entry.  Returns
+    (findings, {label: cache_size}); -1 entries when the jax build has
+    no ``_cache_size`` (skipped, never failed)."""
+    if run_fn is not None:
+        run_fn()
+    findings: List[Finding] = []
+    sizes: Dict[str, int] = {}
+    for label, jitted in named_jits.items():
+        if not hasattr(jitted, "_cache_size"):
+            sizes[label] = -1
+            continue
+        size = int(jitted._cache_size())
+        sizes[label] = size
+        if size > 1:
+            findings.append(Finding(
+                "NM403", case, 0,
+                f"per-step-loop jit '{label}' holds {size} compile-cache "
+                f"entries after a steady workload — something in its "
+                f"call signature (python scalars, static args, weak "
+                f"types, shapes) retraces inside the serving loop"))
+    return findings, sizes
+
+
+# ---------------------------------------------------------------------------
+# NM404 — host syncs reachable from the async fleet driver (AST)
+# ---------------------------------------------------------------------------
+
+ASYNC_ROOT_FILE = "serve/fleet.py"
+# sanctioned sync sites: the engine must harvest tokens to route/finish
+# (np.asarray(nxt) in batcher.step is THE once-per-step sync point) and
+# prefill ingests the host-side prompt list
+SYNC_OK = frozenset({
+    ("serve/batcher.py", "step"),
+    ("serve/batcher.py", "prefill"),
+})
+_NP_BASES = frozenset({"np", "numpy", "onp"})
+
+
+def _base_name(node: ast.expr) -> str:
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+def _host_sync_kind(call: ast.Call) -> Optional[str]:
+    fn = call.func
+    name = _trailing_name(fn)
+    if name == "device_get" and _base_name(fn) == "jax":
+        return "jax.device_get"
+    if name == "block_until_ready":
+        return ".block_until_ready()"
+    if name in ("asarray", "array") and _base_name(fn) in _NP_BASES:
+        return f"np.{name}"
+    if name == "item" and isinstance(fn, ast.Attribute) and not call.args:
+        return ".item()"
+    return None
+
+
+def _serve_sources(root: Optional[str] = None) -> Dict[str, str]:
+    if root is None:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    serve_dir = os.path.join(root, "serve")
+    sources: Dict[str, str] = {}
+    if not os.path.isdir(serve_dir):
+        return sources
+    for name in sorted(os.listdir(serve_dir)):
+        if name.endswith(".py"):
+            with open(os.path.join(serve_dir, name)) as f:
+                sources[f"serve/{name}"] = f.read()
+    return sources
+
+
+def run_async_sync_pass(sources: Optional[Dict[str, str]] = None,
+                        root: Optional[str] = None) -> List[Finding]:
+    """NM404 over the serve package (or injected ``sources`` for the
+    selftest): BFS the name-resolved call graph from serve/fleet.py's
+    async defs; flag host-sync calls in any reachable, non-sanctioned
+    function."""
+    if sources is None:
+        sources = _serve_sources(root)
+    defs: Dict[str, List[tuple]] = {}
+    roots: List[tuple] = []
+    for rel, src in sources.items():
+        try:
+            tree = ast.parse(src, filename=rel)
+        except SyntaxError:
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs.setdefault(node.name, []).append((rel, node))
+                if rel == ASYNC_ROOT_FILE \
+                        and isinstance(node, ast.AsyncFunctionDef):
+                    roots.append((rel, node))
+
+    queue, seen = list(roots), {id(n) for _, n in roots}
+    reachable: List[tuple] = []
+    while queue:
+        rel, node = queue.pop()
+        reachable.append((rel, node))
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            for target in defs.get(_trailing_name(sub.func), ()):
+                if id(target[1]) not in seen:
+                    seen.add(id(target[1]))
+                    queue.append(target)
+
+    findings: List[Finding] = []
+    located = set()
+    for rel, node in reachable:
+        if (rel, node.name) in SYNC_OK:
+            continue
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            kind = _host_sync_kind(sub)
+            if kind is None or (rel, sub.lineno) in located:
+                continue
+            located.add((rel, sub.lineno))
+            findings.append(Finding(
+                "NM404", rel, sub.lineno,
+                f"host sync {kind} in {node.name}(), reachable from the "
+                f"async fleet driver — stalls the event loop outside "
+                f"the sanctioned harvest sites "
+                f"({', '.join(sorted(f'{p}:{n}' for p, n in SYNC_OK))})"))
+    return findings

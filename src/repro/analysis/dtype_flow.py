@@ -1,0 +1,527 @@
+"""nmlint numerics rules (NM301–NM304): dtype-provenance dataflow.
+
+The paper's pre-generation dataflow (Fig. 11c) is numerically correct
+only if every N:M selection *scores the fp32 master* while compute runs
+bf16 — SR-STE (arXiv 2102.04010) and the MVUE estimator (arXiv
+2203.10991) are both statements about which precision the selection
+sees.  That invariant has been violated and hot-fixed twice (PR 3 conv
+masks scored a bf16 copy; PR 6 the EF residual saw wire-rounded
+values), so this module makes it static: tag every input leaf of a
+traced program with a provenance set and push a small lattice through
+the jaxpr equations.
+
+Input tags (``tag_inputs``):
+
+  fp32_master   f32/f64 float leaf — master weights, momentum
+  ef_state      f32 leaf whose path names the error-feedback residual
+                ("err"): master-precision, but NOT master lineage — it
+                exists to absorb wire rounding, so it must not taint
+                the values it joins with ROUNDED
+  bf16_compute  sub-32-bit float leaf — the compute tree / activations
+  wire_u16      u16 leaf — the bitcast compressed-sync payload
+  idx_plane     integer leaf whose tree path names an index plane
+
+Derived tags (``propagate_tags``):
+
+  rounded        a MASTER-lineage value passed through an f32→sub-f32
+                 convert (plain forward intermediates rounding to bf16
+                 is routine mixed precision and stays untagged)
+  double_rounded a ``rounded`` value widened back to ≥ f32 — the
+                 double-rounding fingerprint
+
+Checks:
+
+  NM301 ``check_master_mask_source`` — an N:M selection (top_k/sort,
+        ``nm_selection_pred``-filtered so router top_k is exempt) whose
+        operand is sub-f32 or ``rounded`` while an fp32 master input
+        exists.  The selection must score the master, not a rounded
+        shadow of it.
+  NM302 ``check_no_double_round`` — an f32 master/momentum/EF *output*
+        leaf carrying ``double_rounded`` provenance.  Structurally
+        exempt on the gradsync cases: the compressed sync's EF residual
+        intentionally absorbs the bf16 wire rounding
+        (``err = g - decode(encode(g))`` IS the PR 6 fix, not the bug).
+  NM303 ``check_accum_dtype`` / ``audit_kernels`` — dot_general
+        accumulation below f32 on the kernel surfaces (nm_spmm,
+        nm_spmm_shared, fused_update, grad_compress,
+        grad_decompress_mean; both backends, pallas sub-jaxprs
+        included).
+  NM304 ``check_wire_narrow`` — a widening convert feeding a
+        (pod-crossing) collective in optimized HLO: the XLA hoist that
+        doubled wire bytes until PR 6 bitcast the payload to u16.
+        With ``pod_block`` only pod-crossing collectives are audited —
+        intra-pod f32 all-reduces ride the fast fabric and are
+        legitimate.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import Finding
+from repro.launch.hlo_cost import MASK_PRIMS, _subjaxprs, nm_selection_pred
+
+FP32_MASTER = "fp32_master"
+EF_STATE = "ef_state"
+BF16_COMPUTE = "bf16_compute"
+WIRE_U16 = "wire_u16"
+IDX_PLANE = "idx_plane"
+ROUNDED = "rounded"
+DOUBLE_ROUNDED = "double_rounded"
+
+_EMPTY: frozenset = frozenset()
+_FIXPOINT_ITERS = 8  # loop-carried tags converge fast (lattice is tiny)
+
+
+# ---------------------------------------------------------------------------
+# Input tagging
+# ---------------------------------------------------------------------------
+
+
+def _is_sub32_float(dtype) -> bool:
+    import jax.numpy as jnp
+    import numpy as np
+    dt = np.dtype(dtype)
+    return bool(jnp.issubdtype(dt, jnp.floating)) and dt.itemsize < 4
+
+
+def _is_f32_plus(dtype) -> bool:
+    import jax.numpy as jnp
+    import numpy as np
+    dt = np.dtype(dtype)
+    return bool(jnp.issubdtype(dt, jnp.floating)) and dt.itemsize >= 4
+
+
+def tag_inputs(*args) -> List[frozenset]:
+    """Provenance tags for every flattened leaf of ``args``, in the
+    order ``jax.make_jaxpr(fn)(*args)`` binds them as invars.
+
+    Leaves may be arrays or ShapeDtypeStructs.  The rule is dtype-led —
+    in the pregen dataflow every ≥f32 float input *is* master-lineage
+    state (master/momentum/EF), while the compute tree is sub-f32 by
+    construction — with the tree path consulted only to spot index
+    planes.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    tags: List[frozenset] = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(args)[0]:
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        dt = np.dtype(leaf.dtype)
+        t = set()
+        if _is_f32_plus(dt):
+            # the error-feedback residual is f32 *by design around* wire
+            # rounding: it exists to absorb the encode/decode round-trip,
+            # so it must not lend master lineage to the values it joins
+            # (g + err before encode) or every compressed sync would
+            # carry a false ROUNDED taint into the update
+            t.add(EF_STATE if "err" in name else FP32_MASTER)
+        elif _is_sub32_float(dt):
+            t.add(BF16_COMPUTE)
+        elif dt == np.dtype(np.uint16):
+            t.add(WIRE_U16)
+        elif jnp.issubdtype(dt, jnp.integer) and "idx" in name:
+            t.add(IDX_PLANE)
+        tags.append(frozenset(t))
+    return tags
+
+
+# ---------------------------------------------------------------------------
+# Lattice propagation
+# ---------------------------------------------------------------------------
+
+
+def _n_invars(sub) -> int:
+    return len(getattr(sub, "jaxpr", sub).invars)
+
+
+def propagate_tags(jaxpr, in_tags: Sequence[frozenset],
+                   visit: Optional[Callable] = None) -> List[frozenset]:
+    """Push input tags through a (Closed)Jaxpr -> per-outvar tag sets.
+
+    ``visit(eqn, in_tag_sets)`` is called for every equation, including
+    ones inside sub-jaxprs (pjit/scan/while/cond/custom-vjp/pallas).
+    Loop carries (scan/while) run to a fixpoint before the visited
+    pass.  Sub-jaxprs whose invar count does not line up with the
+    equation (pallas refs, custom-vjp consts) get the conservative
+    union of all operand tags — over-approximate, never silent.
+    """
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    env: Dict = {}
+
+    def read(v) -> frozenset:
+        if hasattr(v, "val"):  # Literal
+            return _EMPTY
+        return env.get(v, _EMPTY)
+
+    for v, t in zip(inner.invars, in_tags):
+        env[v] = frozenset(t)
+    for v in inner.constvars:
+        env[v] = _EMPTY
+
+    for eqn in inner.eqns:
+        in_sets = [read(v) for v in eqn.invars]
+        base = frozenset().union(*in_sets) if in_sets else _EMPTY
+        name = eqn.primitive.name
+
+        if name == "convert_element_type" and eqn.invars:
+            src = getattr(eqn.invars[0].aval, "dtype", None)
+            dst = getattr(eqn.outvars[0].aval, "dtype", None)
+            if src is not None and dst is not None:
+                # rounding only taints MASTER-lineage values: a forward
+                # f32 intermediate (RoPE tables, norm internals) cast to
+                # bf16 is routine mixed precision, and tainting it would
+                # smear ROUNDED through every cotangent via residuals
+                if _is_f32_plus(src) and _is_sub32_float(dst) \
+                        and FP32_MASTER in base:
+                    base = base | {ROUNDED}
+                elif _is_sub32_float(src) and _is_f32_plus(dst) \
+                        and ROUNDED in base:
+                    base = base | {DOUBLE_ROUNDED}
+
+        if visit is not None:
+            visit(eqn, in_sets)
+
+        out_tags: List[frozenset]
+        if name == "scan":
+            sub = eqn.params["jaxpr"]
+            nc = eqn.params.get("num_consts", 0)
+            nk = eqn.params.get("num_carry", 0)
+            cur = list(in_sets)
+            for _ in range(_FIXPOINT_ITERS):
+                outs = propagate_tags(sub, cur)
+                new_carry = [cur[nc + i] | outs[i] for i in range(nk)]
+                if new_carry == cur[nc:nc + nk]:
+                    break
+                cur[nc:nc + nk] = new_carry
+            outs = propagate_tags(sub, cur, visit)
+            out_tags = outs
+        elif name == "while":
+            cn = eqn.params.get("cond_nconsts", 0)
+            bn = eqn.params.get("body_nconsts", 0)
+            cond_j, body_j = eqn.params["cond_jaxpr"], eqn.params["body_jaxpr"]
+            carry = list(in_sets[cn + bn:])
+            for _ in range(_FIXPOINT_ITERS):
+                outs = propagate_tags(body_j, in_sets[cn:cn + bn] + carry)
+                new = [carry[i] | outs[i] for i in range(len(carry))]
+                if new == carry:
+                    break
+                carry = new
+            propagate_tags(cond_j, in_sets[:cn] + carry, visit)
+            propagate_tags(body_j, in_sets[cn:cn + bn] + carry, visit)
+            out_tags = carry
+        elif name == "cond" and "branches" in eqn.params:
+            branch_outs = [propagate_tags(b, in_sets[1:], visit)
+                           for b in eqn.params["branches"]]
+            out_tags = [frozenset().union(*(bo[i] for bo in branch_outs))
+                        for i in range(len(eqn.outvars))] \
+                if branch_outs else [base] * len(eqn.outvars)
+        else:
+            subs = [s for val in eqn.params.values() for s in _subjaxprs(val)]
+            if subs:
+                sub = subs[0]
+                sub_in = (list(in_sets) if _n_invars(sub) == len(in_sets)
+                          else [base] * _n_invars(sub))
+                outs = propagate_tags(sub, sub_in, visit)
+                for extra in subs[1:]:
+                    propagate_tags(extra, [base] * _n_invars(extra), visit)
+                if len(outs) == len(eqn.outvars):
+                    out_tags = outs
+                else:
+                    spill = base | (frozenset().union(*outs) if outs
+                                    else _EMPTY)
+                    out_tags = [spill] * len(eqn.outvars)
+            else:
+                out_tags = [base] * len(eqn.outvars)
+
+        for v, t in zip(eqn.outvars, out_tags):
+            env[v] = t
+
+    return [read(v) for v in inner.outvars]
+
+
+def _trace(fn_or_jaxpr, args):
+    import jax
+    if hasattr(fn_or_jaxpr, "eqns") or hasattr(fn_or_jaxpr, "jaxpr"):
+        return fn_or_jaxpr
+    return jax.make_jaxpr(fn_or_jaxpr)(*args)
+
+
+# ---------------------------------------------------------------------------
+# NM301 — selection must score the fp32 master
+# ---------------------------------------------------------------------------
+
+
+def check_master_mask_source(fn_or_jaxpr, in_tags: Sequence[frozenset],
+                             nm: Optional[Tuple[int, int]], case: str,
+                             label: str = "",
+                             args: tuple = ()) -> Tuple[List[Finding], int]:
+    """NM301: no N:M selection may consume a sub-f32 or ``rounded``
+    value while an fp32 master input exists.  Returns
+    (findings, selections_inspected)."""
+    jaxpr = _trace(fn_or_jaxpr, args)
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    if len(in_tags) != len(inner.invars):
+        raise ValueError(
+            f"{case}/{label}: {len(in_tags)} input tags for "
+            f"{len(inner.invars)} jaxpr invars — tag_inputs must see the "
+            f"same arg tree the trace saw")
+    has_master = any(FP32_MASTER in t for t in in_tags)
+    pred = nm_selection_pred(*nm) if nm is not None else None
+    findings: List[Finding] = []
+    seen = set()
+    inspected = [0]
+
+    def visit(eqn, in_sets):
+        if eqn.primitive.name not in MASK_PRIMS:
+            return
+        if pred is not None and not pred(eqn):
+            return
+        inspected[0] += 1
+        if not has_master or not in_sets:
+            return
+        dt = getattr(eqn.invars[0].aval, "dtype", None)
+        tags = in_sets[0]
+        if dt is not None and (_is_sub32_float(dt) or ROUNDED in tags):
+            why = (f"a {dt} operand" if _is_sub32_float(dt)
+                   else "an operand that passed through an f32→bf16 "
+                        "rounding")
+            msg = (f"{label or 'traced program'}: N:M selection "
+                   f"({eqn.primitive.name}) scores {why} while an fp32 "
+                   f"master input exists — SR-STE/MVUE selections must "
+                   f"score the master (PR 3 conv-mask incident class)")
+            if msg not in seen:
+                seen.add(msg)
+                findings.append(Finding("NM301", case, 0, msg))
+
+    propagate_tags(jaxpr, in_tags, visit)
+    return findings, inspected[0]
+
+
+# ---------------------------------------------------------------------------
+# NM302 — no double rounding into f32 state outputs
+# ---------------------------------------------------------------------------
+
+_STATE_OUT_MARKS = ("master", "momentum", "err")
+
+
+def check_no_double_round(fn_or_jaxpr, in_tags: Sequence[frozenset],
+                          out_paths: Sequence[str], case: str,
+                          label: str = "",
+                          args: tuple = ()) -> List[Finding]:
+    """NM302: no f32 master/momentum/EF output leaf may carry
+    ``double_rounded`` provenance (a value that went f32→bf16→f32 on
+    its way into the optimizer update or EF residual).
+
+    Callers must NOT run this on compressed-gradsync programs: the EF
+    residual there intentionally absorbs the bf16 wire rounding — the
+    double round-trip IS the PR 6 fix (``audit_gradsync_mesh8`` skips
+    this check structurally and documents why).
+    """
+    jaxpr = _trace(fn_or_jaxpr, args)
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    if len(in_tags) != len(inner.invars):
+        raise ValueError(
+            f"{case}/{label}: {len(in_tags)} input tags for "
+            f"{len(inner.invars)} jaxpr invars")
+    if len(out_paths) != len(inner.outvars):
+        raise ValueError(
+            f"{case}/{label}: {len(out_paths)} output paths for "
+            f"{len(inner.outvars)} jaxpr outvars")
+    out_tags = propagate_tags(jaxpr, in_tags)
+    findings: List[Finding] = []
+    for path, var, tags in zip(out_paths, inner.outvars, out_tags):
+        dt = getattr(var.aval, "dtype", None)
+        if dt is None or not _is_f32_plus(dt):
+            continue
+        if not any(mark in path for mark in _STATE_OUT_MARKS):
+            continue
+        if DOUBLE_ROUNDED in tags:
+            findings.append(Finding(
+                "NM302", case, 0,
+                f"{label or 'traced program'}: f32 state output "
+                f"'{path}' carries double-rounded (f32→bf16→f32) "
+                f"provenance — the update/EF path quantized a master "
+                f"lineage value (PR 6 wire-rounding incident class)"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# NM303 — kernel accumulation dtype
+# ---------------------------------------------------------------------------
+
+
+def check_accum_dtype(fn_or_jaxpr, case: str, label: str = "",
+                      args: tuple = ()) -> Tuple[List[Finding], int]:
+    """NM303: every dot_general on a sub-f32 float operand must
+    accumulate in ≥f32 (``preferred_element_type``), i.e. its output
+    aval is ≥f32.  Descends into pallas_call sub-jaxprs.  Returns
+    (findings, dot_sites_inspected)."""
+    jaxpr = _trace(fn_or_jaxpr, args)
+    findings: List[Finding] = []
+    seen = set()
+    inspected = [0]
+
+    def walk(j):
+        inner = getattr(j, "jaxpr", j)
+        for eqn in inner.eqns:
+            if eqn.primitive.name in ("dot_general", "dot"):
+                inspected[0] += 1
+                in_dts = [getattr(v.aval, "dtype", None) for v in eqn.invars]
+                out_dt = getattr(eqn.outvars[0].aval, "dtype", None)
+                if any(d is not None and _is_sub32_float(d)
+                       for d in in_dts) \
+                        and out_dt is not None \
+                        and _is_sub32_float(out_dt):
+                    msg = (f"{label or 'traced kernel'}: dot_general "
+                           f"accumulates {in_dts[0]}×{in_dts[-1]} into "
+                           f"{out_dt} — below-f32 accumulation on a "
+                           f"kernel surface (set "
+                           f"preferred_element_type=jnp.float32)")
+                    if msg not in seen:
+                        seen.add(msg)
+                        findings.append(Finding("NM303", case, 0, msg))
+            for val in eqn.params.values():
+                for sub in _subjaxprs(val):
+                    walk(sub)
+
+    walk(jaxpr)
+    return findings, inspected[0]
+
+
+def audit_kernels(families=("numerics",)) -> Optional[Tuple[dict, list]]:
+    """The ``kernels`` matrix case: NM303 over every packed-math kernel
+    surface (nm_spmm, nm_spmm_shared, fused_update, grad_compress,
+    grad_decompress_mean) on both backends.  Small traces only — no
+    compilation, no execution beyond one tiny pack."""
+    if "numerics" not in set(families):
+        return None
+    import jax
+    import jax.numpy as jnp
+    from functools import partial
+    from repro.kernels import ops
+
+    n, m = 2, 8
+    act = jnp.ones((4, 16), jnp.bfloat16)
+    vals = jnp.ones((4, 8), jnp.bfloat16)          # kc = 16//8*2 = 4
+    idx = jnp.zeros((4, 8), jnp.uint8)
+    w = jnp.ones((16, 8), jnp.bfloat16)
+    g = jnp.ones((8, 16), jnp.float32)
+    err = jnp.zeros((8, 16), jnp.float32)
+    sh_vals, sh_rows = ops.pack_shared(w, n, m, tile=8)
+    cv, ci, _ = jax.eval_shape(
+        partial(ops.grad_compress, n=n, m=m, use_pallas=False), g, err)
+    cva = jnp.zeros(cv.shape, cv.dtype)
+    cia = jnp.zeros(ci.shape, ci.dtype)
+
+    surfaces = []
+    for pallas in (False, True):
+        tag = "pallas" if pallas else "jnp"
+        surfaces += [
+            (f"nm_spmm[{tag}]",
+             partial(ops.nm_spmm, n=n, m=m, use_pallas=pallas),
+             (act, vals, idx)),
+            (f"nm_spmm_shared[{tag}]",
+             partial(ops.nm_spmm_shared, use_pallas=pallas),
+             (act, sh_vals, sh_rows)),
+            (f"fused_update[{tag}]",
+             partial(ops.fused_update, n=n, m=m, use_pallas=pallas),
+             (w.astype(jnp.float32).T, g, err, 0.1, 0.9, 0.0, 1e-4)),
+            (f"grad_compress[{tag}]",
+             partial(ops.grad_compress, n=n, m=m, use_pallas=pallas),
+             (g, err)),
+            (f"grad_decompress_mean[{tag}]",
+             partial(ops.grad_decompress_mean, n=n, m=m,
+                     use_pallas=pallas),
+             (cva, cia)),
+        ]
+
+    findings: List[Finding] = []
+    dots = {}
+    for label, fn, fargs in surfaces:
+        fs, n_dots = check_accum_dtype(fn, "kernels", label, args=fargs)
+        findings.extend(fs)
+        dots[label] = n_dots
+    metrics = {"nm": f"{n}:{m}",
+               "numerics": {"dot_sites": dots,
+                            "subf32_accum_findings": len(findings)}}
+    return metrics, findings
+
+
+# ---------------------------------------------------------------------------
+# NM304 — no widening convert feeding a (pod-crossing) collective
+# ---------------------------------------------------------------------------
+
+_WRAPPER_KINDS = ("bitcast", "copy", "reshape", "transpose")
+
+
+def check_wire_narrow(hlo_text: str, case: str, label: str = "",
+                      pod_block: Optional[int] = None
+                      ) -> Tuple[List[Finding], int]:
+    """NM304: in optimized HLO, no collective may consume the result of
+    a *widening* convert (XLA hoisting the f32 upcast above the
+    collective doubles the wire bytes — the hazard PR 6 closed by
+    u16-bitcasting the payload).  With ``pod_block`` only pod-crossing
+    collectives are audited: intra-pod f32 reductions are legitimate.
+    Returns (findings, collectives_inspected)."""
+    from repro.launch.hlo_cost import (
+        _COLLECTIVES, _DTYPE_BYTES, _crosses_pod, parse_module,
+    )
+
+    comps = parse_module(hlo_text)
+    findings: List[Finding] = []
+    seen = set()
+    inspected = 0
+
+    def resolve(comp, name, depth=0):
+        """Follow single-operand layout wrappers and fusion roots to the
+        op that actually produced this value."""
+        op = next((o for o in comp.ops if o.name == name), None)
+        if op is None or depth > 4:
+            return comp, op
+        if op.kind in _WRAPPER_KINDS and op.operands:
+            return resolve(comp, op.operands[0], depth + 1)
+        if op.kind == "fusion":
+            import re as _re
+            mt = _re.search(r"calls=%?([\w.\-]+)", op.line)
+            fused = comps.get(mt.group(1)) if mt else None
+            root = fused.root_op() if fused else None
+            if root is not None:
+                return resolve(fused, root.name, depth + 1)
+        return comp, op
+
+    def widths(comp, op):
+        from repro.launch.hlo_cost import _parse_shapes
+        res = _parse_shapes(op.type_text)
+        src = _parse_shapes(comp.table.get(op.operands[0], "")) \
+            if op.operands else []
+        return res, src
+
+    for comp in comps.values():
+        for op in comp.ops:
+            base = op.kind.replace("-start", "")
+            if base not in _COLLECTIVES:
+                continue
+            inspected += 1
+            if pod_block and not _crosses_pod(op.line, pod_block):
+                continue
+            for operand in op.operands:
+                src_comp, src = resolve(comp, operand)
+                if src is None or src.kind != "convert":
+                    continue
+                res, srcs = widths(src_comp, src)
+                if not res or not srcs:
+                    continue
+                (rd, rs), (sd, ss) = res[0], srcs[0]
+                if _DTYPE_BYTES.get(rd, 0) > _DTYPE_BYTES.get(sd, 0):
+                    msg = (f"{label or 'compiled module'}: {op.kind} "
+                           f"consumes a widening convert {sd}→{rd} "
+                           f"(shape {list(rs)}) — the upcast rode onto "
+                           f"the wire; compress/bitcast before the "
+                           f"collective (PR 6 wire-doubling hazard)")
+                    if msg not in seen:
+                        seen.add(msg)
+                        findings.append(Finding("NM304", case, 0, msg))
+    return findings, inspected

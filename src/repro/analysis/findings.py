@@ -91,6 +91,56 @@ RULES: List[Rule] = [
          "detector): the compiled-once contract behind all step-time "
          "claims.",
          "Sec. V (one compiled step)"),
+    Rule("NM301", "selection-off-master", "graph",
+         "No N:M selection (top_k/sort, nm-shape-filtered) in a traced "
+         "train program consumes a sub-f32 or f32→bf16-rounded value "
+         "while an fp32 master input exists — SR-STE and MVUE are "
+         "statements about the precision the selection sees (the PR 3 "
+         "conv-mask incident, now static).",
+         "Sec. III (SR-STE scoring) / arXiv 2102.04010"),
+    Rule("NM302", "double-rounded-state", "graph",
+         "No f32 master/momentum/EF output leaf of a traced train step "
+         "carries f32→bf16→f32 double-rounding provenance; the "
+         "compressed-sync EF residual is the one sanctioned exception "
+         "(the PR 6 wire-rounding incident, now static).",
+         "Sec. V (fp32 master state) / arXiv 2203.10991"),
+    Rule("NM303", "sub-f32-kernel-accum", "graph",
+         "Every dot_general on the packed-math kernel surfaces "
+         "(nm_spmm, nm_spmm_shared, fused_update, grad_compress, "
+         "grad_decompress_mean; both backends, pallas sub-jaxprs "
+         "included) with a sub-f32 operand accumulates in ≥f32 "
+         "(preferred_element_type).",
+         "Sec. IV (MXU accumulation)"),
+    Rule("NM304", "widening-convert-on-wire", "graph",
+         "No pod-crossing collective in optimized HLO consumes the "
+         "result of a widening convert — XLA hoisting the f32 upcast "
+         "above the collective doubles wire bytes (the hazard PR 6 "
+         "closed by u16-bitcasting the compressed payload).",
+         "Sec. VI (cross-pod wire bytes)"),
+    Rule("NM401", "donation-not-aliased", "graph",
+         "Every donated input leaf with a same-dtype/shape output to "
+         "alias against appears in the compiled executable's "
+         "input_output_alias — a donation jax silently dropped doubles "
+         "that buffer's HBM.",
+         "Sec. VI (HBM footprint)"),
+    Rule("NM402", "donation-unpinned-out-shardings", "ast",
+         "No jax.jit call combines donate_argnums with in_shardings "
+         "unless out_shardings is also pinned — otherwise XLA picks "
+         "output shardings freely and the donation alias can pair "
+         "differently-sharded buffers (the PR 9 batcher crash class).",
+         "Sec. VI (sharded serving)"),
+    Rule("NM403", "retrace-in-serve-loop", "graph",
+         "After a steady serve workload, every per-step-loop jit "
+         "(prefill/seat/decode) holds at most one compile-cache entry — "
+         "python-scalar or static-arg churn inside the dispatch loop "
+         "retraces per request.",
+         "Sec. V (one compiled step)"),
+    Rule("NM404", "host-sync-in-async-driver", "ast",
+         "No host-sync call (jax.device_get, np.asarray/np.array, "
+         ".block_until_ready(), .item()) is reachable from "
+         "serve/fleet.py's async driver functions outside the "
+         "sanctioned once-per-step harvest sites in serve/batcher.py.",
+         "Sec. VI (async serving throughput)"),
 ]
 
 RULES_BY_ID: Dict[str, Rule] = {r.id: r for r in RULES}

@@ -14,13 +14,16 @@ from typing import Dict, List, Optional
 
 from repro.analysis.findings import RULES, Finding
 
-SCHEMA_VERSION = 1
+# v2: adds ``families_run`` (which rule families the graph matrix
+# executed: graph / numerics / buffers) and the NM3xx/NM4xx rules
+SCHEMA_VERSION = 2
 
 
 def build_report(findings: List[Finding],
                  graph_metrics: Optional[Dict[str, dict]] = None,
                  cases_run: Optional[List[str]] = None,
-                 scanned_files: int = 0) -> dict:
+                 scanned_files: int = 0,
+                 families_run: Optional[List[str]] = None) -> dict:
     by_rule = {r.id: 0 for r in RULES}
     waived = 0
     for f in findings:
@@ -40,6 +43,7 @@ def build_report(findings: List[Finding],
         },
         "scanned_files": scanned_files,
         "cases_run": sorted(cases_run or []),
+        "families_run": sorted(families_run or []),
         "graph": graph_metrics or {},
     }
 

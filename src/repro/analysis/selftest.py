@@ -53,6 +53,15 @@ _AST_SEEDS = {
         "def make(vals, idx, cfg):\n"
         "    return O.PackedOp(vals, idx, cfg)\n",
     ),
+    # the PR 9 batcher crash pattern: donated + input-sharded jit with
+    # the output shardings left for XLA to choose
+    "NM402": (
+        "serve/seeded.py",
+        "import jax\n"
+        "def build(step, sh):\n"
+        "    return jax.jit(step, in_shardings=(sh,),\n"
+        "                   donate_argnums=(0,))\n",
+    ),
 }
 
 
@@ -173,6 +182,135 @@ def _seed_nm001() -> List[Finding]:
     return expired
 
 
+def _seed_nm301() -> List[Finding]:
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis.dtype_flow import check_master_mask_source, tag_inputs
+
+    def bad_select(w):
+        # selection scores a bf16 shadow of the fp32 master
+        _, i = jax.lax.top_k(w.astype(jnp.bfloat16), 2)
+        return i
+
+    w = jnp.ones((4, 8), jnp.float32)
+    findings, _ = check_master_mask_source(
+        bad_select, tag_inputs(w), (2, 8), "selftest",
+        "seeded bf16-scored selection", args=(w,))
+    return findings
+
+
+def _seed_nm302() -> List[Finding]:
+    import jax.numpy as jnp
+    from repro.analysis.dtype_flow import check_no_double_round, tag_inputs
+
+    def bad_update(w, g):
+        # master-lineage gradient quantized f32->bf16->f32 on its way
+        # into the master update
+        return {"master": {
+            "w": w - 0.1 * g.astype(jnp.bfloat16).astype(jnp.float32)}}
+
+    w = jnp.ones((4, 8), jnp.float32)
+    g = jnp.ones((4, 8), jnp.float32)
+    return check_no_double_round(bad_update, tag_inputs(w, g),
+                                 ["master/w"], "selftest",
+                                 "seeded double-rounded update",
+                                 args=(w, g))
+
+
+def _seed_nm303() -> List[Finding]:
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis.dtype_flow import check_accum_dtype
+
+    def bad_mm(a, b):
+        return jax.lax.dot(a, b)  # no preferred_element_type: bf16 accum
+
+    a = jnp.ones((4, 8), jnp.bfloat16)
+    b = jnp.ones((8, 4), jnp.bfloat16)
+    findings, _ = check_accum_dtype(bad_mm, "selftest",
+                                    "seeded bf16-accum matmul",
+                                    args=(a, b))
+    return findings
+
+
+def _seed_nm304() -> List[Finding]:
+    from repro.analysis.dtype_flow import check_wire_narrow
+
+    # widening convert feeding a POD-CROSSING all-reduce (groups pair
+    # device i with i+4 across the pod boundary at pod_block=4)
+    hlo = """HloModule seeded
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(f32[] %a, f32[] %b)
+}
+
+ENTRY %main (p0: bf16[64,32]) -> f32[64,32] {
+  %p0 = bf16[64,32] parameter(0)
+  %cvt = f32[64,32] convert(bf16[64,32] %p0)
+  ROOT %ar = f32[64,32] all-reduce(f32[64,32] %cvt), replica_groups={{0,4},{1,5},{2,6},{3,7}}, to_apply=%add
+}
+"""
+    findings, _ = check_wire_narrow(hlo, "selftest",
+                                    "seeded hoisted upcast", pod_block=4)
+    return findings
+
+
+def _seed_nm401() -> List[Finding]:
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis.buffer_audit import check_donation_aliased
+
+    # a REAL donated compile, with its input_output_alias header
+    # stripped — exactly what a sharding/layout mismatch leaves behind
+    x = jnp.ones((8, 8), jnp.float32)
+    jitted = jax.jit(lambda a: a * 2.0, donate_argnums=(0,))
+    hlo = jitted.lower(x).compile().as_text()
+    stripped = "\n".join(line for line in hlo.splitlines()
+                         if "input_output_alias" not in line)
+    findings, _ = check_donation_aliased(stripped, x, "selftest",
+                                         "seeded dropped donation")
+    return findings
+
+
+def _seed_nm403() -> List[Finding]:
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis.buffer_audit import check_dispatch_stable
+
+    # static-arg churn: two values of a static python scalar = two cache
+    # entries (plain float args are weak-typed and share one — that
+    # shape-churn variant is NM206's seed)
+    jitted = jax.jit(lambda a, s: a * s, static_argnums=(1,))
+    if not hasattr(jitted, "_cache_size"):
+        return [Finding("NM403", "selftest", 0,
+                        "skipped: no _cache_size on this jax build")]
+    x = jnp.ones((4,))
+
+    def churn():
+        jitted(x, 2)
+        jitted(x, 3)
+
+    findings, _ = check_dispatch_stable({"decode": jitted}, "selftest",
+                                        run_fn=churn)
+    return findings
+
+
+def _seed_nm404() -> List[Finding]:
+    from repro.analysis.buffer_audit import run_async_sync_pass
+
+    # a sync two hops from the async driver, in a non-sanctioned helper
+    sources = {
+        "serve/fleet.py": ("async def _drive(self):\n"
+                           "    self._emit()\n"),
+        "serve/emit.py": ("import numpy as np\n"
+                          "def _emit(self):\n"
+                          "    return np.asarray(self.buf)\n"),
+    }
+    return run_async_sync_pass(sources=sources)
+
+
 _GRAPH_SEEDS = {
     "NM201": _seed_nm201,
     "NM202": _seed_nm202,
@@ -180,6 +318,13 @@ _GRAPH_SEEDS = {
     "NM204": _seed_nm204,
     "NM205": _seed_nm205,
     "NM206": _seed_nm206,
+    "NM301": _seed_nm301,
+    "NM302": _seed_nm302,
+    "NM303": _seed_nm303,
+    "NM304": _seed_nm304,
+    "NM401": _seed_nm401,
+    "NM403": _seed_nm403,
+    "NM404": _seed_nm404,
     "NM001": _seed_nm001,
 }
 

@@ -724,7 +724,7 @@ def breakdown(hlo_text: str, top: int = 25) -> dict:
            "total_bytes": sum(r["bytes"] for r in rows),
            "total_coll": sum(r["coll"] for r in rows)}
     for key in ("flops", "bytes", "coll"):
-        rows.sort(key=lambda r: -r[key])
+        rows.sort(key=lambda r, k=key: -r[k])
         out[f"top_{key}"] = [dict(r) for r in rows[:top]]
     by_kind = {}
     for r in rows:

@@ -66,10 +66,11 @@ class ServeEngine:
     """Continuous-batching greedy-decode engine over N:M-sparse weights."""
 
     def __init__(self, params, cfg, sp_cfg: SparsityConfig = DENSE,
-                 serve_cfg: ServeConfig = ServeConfig(), *, mesh=None,
+                 serve_cfg: Optional[ServeConfig] = None, *, mesh=None,
                  cache_dtype=None):
         import jax.numpy as jnp
 
+        serve_cfg = serve_cfg if serve_cfg is not None else ServeConfig()
         self.cfg = cfg
         self.sp_cfg = sp_cfg
         self.serve_cfg = serve_cfg

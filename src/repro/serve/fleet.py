@@ -135,9 +135,11 @@ class ServeFleet:
     """Single-queue frontend over N continuous-batching replicas."""
 
     def __init__(self, params, cfg, sp_cfg: SparsityConfig = DENSE,
-                 serve_cfg: ServeConfig = ServeConfig(),
-                 fleet_cfg: FleetConfig = FleetConfig(), *,
+                 serve_cfg: Optional[ServeConfig] = None,
+                 fleet_cfg: Optional[FleetConfig] = None, *,
                  meshes=None, cache_dtype=None):
+        serve_cfg = serve_cfg if serve_cfg is not None else ServeConfig()
+        fleet_cfg = fleet_cfg if fleet_cfg is not None else FleetConfig()
         self.cfg = cfg
         self.serve_cfg = serve_cfg
         self.fleet_cfg = fleet_cfg

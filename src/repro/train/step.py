@@ -478,7 +478,7 @@ def restore_with_pregen(mgr, like_state, step=None, shardings=None, *,
             # no upgrade structure matches either (arch / compress /
             # pack-mode mismatch): surface the original full-structure
             # error, not a misleading legacy-subtree one
-            raise full_err
+            raise full_err from None
         out = {k: v for k, v in restored.items() if k != "compute"}
         out["compute"] = sgd.pregen_tree(out["master"], sp_cfg,
                                          pack=pregen_pack)

@@ -205,5 +205,5 @@ class TestTrainingConvergenceSmoke:
         x = _rand((8, 32), 0)
         w = _rand((32, 16), 1)
         for cfg in CFGS.values():
-            d = jax.grad(lambda w: bdwp.nm_linear(x, w, cfg).sum())(w)
+            d = jax.grad(lambda w, c=cfg: bdwp.nm_linear(x, w, c).sum())(w)
             assert bool(jnp.isfinite(d).all())

@@ -110,27 +110,35 @@ class TestReport:
                             waiver_reason="r"),
                     Finding("NM103", "b.py", 2, "m")]
         rep = build_report(findings, {"case": {"k": 1}}, ["case"],
-                          scanned_files=3)
+                          scanned_files=3,
+                          families_run=["numerics", "graph"])
         assert rep["schema_version"] == SCHEMA_VERSION
         assert set(rep["counts"]["by_rule"]) == set(RULES_BY_ID)
+        assert rep["families_run"] == ["graph", "numerics"]  # sorted
         assert rep["counts"] == {
             "total": 2, "unwaived": 1, "waived": 1,
             "by_rule": {**{r.id: 0 for r in RULES},
                         "NM102": 1, "NM103": 1}}
         out = write_report(rep, str(tmp_path / "r.json"))
         rep2 = build_report(findings, {"case": {"k": 1}}, ["case"],
-                           scanned_files=3)
+                           scanned_files=3,
+                           families_run=["numerics", "graph"])
         with open(out) as f:
             assert json.load(f) == rep2  # no timestamps, diffs empty
 
     def test_committed_report_matches_the_registry(self):
         # results/NMLINT.json is committed; it must carry the current
-        # schema, the current rules, and zero unwaived findings
+        # schema, the current rules, all three families over the full
+        # matrix, and zero unwaived findings
         with open(os.path.join(ROOT, "results", "NMLINT.json")) as f:
             rep = json.load(f)
         assert rep["schema_version"] == SCHEMA_VERSION
         assert set(rep["rules"]) == set(RULES_BY_ID)
         assert rep["counts"]["unwaived"] == 0
+        assert rep["families_run"] == ["buffers", "graph", "numerics"]
+        assert set(rep["cases_run"]) == {
+            "conv", "dense_lm", "gradsync_mesh8", "kernels", "moe",
+            "serve_u4"}
 
 
 class TestAstRules:
@@ -169,6 +177,216 @@ class TestAstRules:
     def test_unparseable_module_is_a_finding(self):
         fs = ast_pass.check_source("models/broken.py", "def f(:\n")
         assert len(fs) == 1 and "unparseable" in fs[0].message
+
+
+class TestBufferRules:
+    """NM4xx semantics beyond the selftest seeds."""
+
+    # -- NM402: the PR 9 batcher crash pattern, reintroduced verbatim --
+    PR9_PATTERN = (
+        "import jax\n"
+        "def build(step, sh):\n"
+        "    return jax.jit(step, in_shardings=(sh,),\n"
+        "                   donate_argnums=(0,))\n")
+
+    def test_nm402_catches_the_pr9_unpinned_donation(self):
+        # regression: donate + in_shardings with out_shardings left for
+        # XLA to pick crashed the batcher in PR 9; the default AST pass
+        # must refuse it anywhere in the tree
+        fs = ast_pass.check_source("serve/batcher.py", self.PR9_PATTERN)
+        assert any(f.rule == "NM402" for f in fs)
+
+    def test_nm402_quiet_when_out_shardings_pinned(self):
+        src = self.PR9_PATTERN.replace(
+            "donate_argnums=(0,))",
+            "out_shardings=(sh,), donate_argnums=(0,))")
+        assert [f for f in ast_pass.check_source("serve/batcher.py", src)
+                if f.rule == "NM402"] == []
+
+    def test_nm402_quiet_on_donation_without_in_shardings(self):
+        # solo-path donation (no shardings at all) lets XLA choose
+        # consistently — that is the batcher's sanctioned solo idiom
+        src = ("import jax\n"
+               "def build(step):\n"
+               "    return jax.jit(step, donate_argnums=(0,))\n")
+        assert [f for f in ast_pass.check_source("serve/batcher.py", src)
+                if f.rule == "NM402"] == []
+
+    def test_nm402_sees_through_functools_partial(self):
+        src = ("import functools, jax\n"
+               "def build(step, sh):\n"
+               "    return functools.partial(jax.jit, in_shardings=(sh,),\n"
+               "                             donate_argnames=('s',))(step)\n")
+        fs = ast_pass.check_source("train/step.py", src)
+        assert any(f.rule == "NM402" for f in fs)
+
+    # -- NM401: alias-count accounting ---------------------------------
+    def test_nm401_alias_counting_and_clean_donation(self):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.analysis import (
+            check_donation_aliased, count_output_aliases,
+        )
+        x = jnp.ones((8, 8), jnp.float32)
+        jitted = jax.jit(lambda a: a * 2.0, donate_argnums=(0,))
+        hlo = jitted.lower(x).compile().as_text()
+        assert count_output_aliases(hlo) >= 1
+        findings, metrics = check_donation_aliased(hlo, x, "t", "ok")
+        assert findings == []
+        assert metrics["donation_aliased"] >= metrics["donation_expected"]
+        stripped = "\n".join(ln for ln in hlo.splitlines()
+                             if "input_output_alias" not in ln)
+        findings, _ = check_donation_aliased(stripped, x, "t", "dropped")
+        assert [f.rule for f in findings] == ["NM401"]
+
+    # -- NM404: reachability, allowlist, and the real serve package ----
+    def test_nm404_fires_two_hops_from_the_async_driver(self):
+        from repro.analysis import run_async_sync_pass
+        sources = {
+            "serve/fleet.py": ("async def _drive(self):\n"
+                               "    self._emit()\n"),
+            "serve/emit.py": ("import numpy as np\n"
+                              "def _emit(self):\n"
+                              "    return np.asarray(self.buf)\n"),
+        }
+        fs = run_async_sync_pass(sources=sources)
+        assert any(f.rule == "NM404" for f in fs)
+
+    def test_nm404_allowlists_the_batcher_device_boundary(self):
+        # batcher.step/prefill ARE the sanctioned host-device boundary:
+        # a sync there must not fire even when the driver reaches it
+        from repro.analysis import run_async_sync_pass
+        sources = {
+            "serve/fleet.py": ("async def _drive(self):\n"
+                               "    step(self)\n"),
+            "serve/batcher.py": ("def step(self):\n"
+                                 "    return self.out.item()\n"),
+        }
+        assert run_async_sync_pass(sources=sources) == []
+
+    def test_nm404_ignores_syncs_unreachable_from_async_roots(self):
+        from repro.analysis import run_async_sync_pass
+        sources = {
+            "serve/fleet.py": "async def _drive(self):\n    pass\n",
+            "serve/debug.py": ("import numpy as np\n"
+                               "def dump(self):\n"
+                               "    return np.asarray(self.buf)\n"),
+        }
+        assert run_async_sync_pass(sources=sources) == []
+
+    def test_nm404_real_serve_package_is_clean(self):
+        from repro.analysis import run_async_sync_pass
+        assert run_async_sync_pass() == []
+
+
+class TestNumericsRules:
+    """NM3xx dtype-provenance semantics: the exemptions that keep the
+    real training graphs clean must hold, not just the positive seeds."""
+
+    def test_nm301_quiet_when_selection_reads_the_master(self):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.analysis import check_master_mask_source, tag_inputs
+
+        def good_select(w):
+            _, i = jax.lax.top_k(w, 2)  # scored straight off fp32
+            return i
+
+        w = jnp.ones((4, 8), jnp.float32)
+        findings, inspected = check_master_mask_source(
+            good_select, tag_inputs(w), (2, 8), "t", args=(w,))
+        assert findings == [] and inspected >= 1
+
+    def test_nm301_ef_state_rounding_does_not_taint_selection(self):
+        # the PR 6 wire path: (g + err) deliberately rounds to u16 and
+        # back; err is f32 but NOT master lineage, so a downstream
+        # selection off the decoded update must stay clean
+        import jax
+        import jax.numpy as jnp
+
+        from repro.analysis import check_master_mask_source, tag_inputs
+
+        def wire_then_select(w, err):
+            wire = (w + err).astype(jnp.bfloat16).astype(jnp.float32)
+            _, i = jax.lax.top_k(wire, 2)
+            return i
+
+        w = jnp.ones((4, 8), jnp.float32)
+        err = jnp.zeros((4, 8), jnp.float32)
+        tags = tag_inputs({"w": w, "err": err})
+        findings, _ = check_master_mask_source(
+            wire_then_select, tags, (2, 8), "t", args=(w, err))
+        # positive control: w lends master lineage, so this DOES fire
+        assert any(f.rule == "NM301" for f in findings)
+
+        # err alone must not — EF residual exists to absorb rounding
+
+        def ef_only_select(err):
+            wire = err.astype(jnp.bfloat16).astype(jnp.float32)
+            _, i = jax.lax.top_k(wire, 2)
+            return i
+
+        findings, _ = check_master_mask_source(
+            ef_only_select, tag_inputs({"err": err}), (2, 8), "t",
+            args=(err,))
+        assert findings == []
+
+    def test_nm302_quiet_without_master_lineage_rounding(self):
+        # forward-only bf16 rounding (RoPE tables, norm internals) must
+        # not smear into the state outputs — the master-lineage gate
+        import jax.numpy as jnp
+
+        from repro.analysis import check_no_double_round, tag_inputs
+
+        def update(w, g):
+            scale = jnp.float32(0.1).astype(jnp.bfloat16).astype(
+                jnp.float32)  # rounded, but not master-derived
+            return {"master": {"w": w - scale * g}}
+
+        w = jnp.ones((4, 8), jnp.float32)
+        g = jnp.ones((4, 8), jnp.float32)
+        assert check_no_double_round(update, tag_inputs(w, g),
+                                     ["master/w"], "t",
+                                     args=(w, g)) == []
+
+    def test_nm303_quiet_with_f32_accumulation(self):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.analysis import check_accum_dtype
+
+        def good_mm(a, b):
+            return jax.lax.dot(a, b,
+                               preferred_element_type=jnp.float32)
+
+        a = jnp.ones((4, 8), jnp.bfloat16)
+        b = jnp.ones((8, 4), jnp.bfloat16)
+        findings, sites = check_accum_dtype(good_mm, "t", args=(a, b))
+        assert findings == [] and sites == 1
+
+    def test_nm304_quiet_for_intra_pod_collectives(self):
+        # a widening convert feeding an INTRA-pod all-reduce is the
+        # sanctioned f32 reduce inside the pod — only pod-crossing
+        # wire traffic must stay narrow
+        from repro.analysis import check_wire_narrow
+        hlo = """HloModule t
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(f32[] %a, f32[] %b)
+}
+
+ENTRY %main (p0: bf16[8,8]) -> f32[8,8] {
+  %p0 = bf16[8,8] parameter(0)
+  %cvt = f32[8,8] convert(bf16[8,8] %p0)
+  ROOT %ar = f32[8,8] all-reduce(f32[8,8] %cvt), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+}
+"""
+        findings, inspected = check_wire_narrow(hlo, "t", pod_block=4)
+        assert findings == [] and inspected == 1
 
 
 class TestDocsInSync:

@@ -149,7 +149,7 @@ class TestTrainParity:
         sync = jax.jit(lambda g, e: C.cross_pod_sync(
             g, e, mesh8, pspecs, cfg))
         for t in range(4):
-            g_t = jax.tree.map(lambda g: g * (0.5 ** t), grads)
+            g_t = jax.tree.map(lambda g, s=0.5 ** t: g * s, grads)
             out, err = sync(g_t, err)
             acc = jax.tree.map(jnp.add, acc, out)
         # fold the residual back in: pod-mean of the first device slab

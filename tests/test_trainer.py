@@ -115,6 +115,24 @@ class TestStraggler:
         # the straggler did not poison the mean either
         assert mon.mean == pytest.approx(0.1)
 
+    def test_fewer_samples_than_warmup_never_seeds_the_mean(self):
+        """Edge: a run killed (or a monitor queried) before ``warmup``
+        samples arrive.  Every sample so far was discarded, so the EWMA
+        must still be unseeded and nothing may have flagged — a mean
+        accidentally seeded from a discarded warmup sample would poison
+        every comparison after the restart."""
+        mon = StragglerMonitor(threshold=1.01, warmup=5)
+        for step, secs in enumerate((30.0, 0.001, 12.0, 0.5)):
+            assert not mon.record(step, secs)   # 4 < warmup: all discarded
+        assert mon.mean is None
+        assert mon.flagged == []
+        assert mon.count == 4
+        # the first post-warmup sample seeds; the one after it compares
+        assert not mon.record(4, 9.9)           # 5th: last warmup sample
+        assert not mon.record(5, 0.2)           # seeds mean = 0.2
+        assert mon.mean == pytest.approx(0.2)
+        assert mon.record(6, 0.5)               # 2.5x: flagged
+
 
 class TestHeartbeat:
     def test_beat_and_staleness(self, tmp_path):
@@ -165,6 +183,57 @@ class TestHeartbeat:
         assert errors == []
         data = json.load(open(path))  # one COMPLETE payload won
         assert data["step"] in (1, 2) and data["loss"] == 0.5
+
+    def test_watchdog_mid_write_sees_only_committed_payloads(
+            self, tmp_path, monkeypatch):
+        """Edge: the watchdog fires WHILE a beat() is between write and
+        replace.  The scratch file exists with a (possibly partial)
+        payload, but ``path`` still holds the previous commit — age()
+        must keep reading that committed payload (fresh, parseable) and
+        never the in-flight scratch.  Before any commit at all, the same
+        mid-write watchdog poll must report stale."""
+        import threading
+
+        from repro.train import fault as F
+
+        path = str(tmp_path / "hb.json")
+        hb = Heartbeat(path)
+
+        in_write = threading.Event()
+        release = threading.Event()
+        real_dump = json.dump
+
+        def stalling_dump(obj, f, **kw):
+            real_dump(obj, f, **kw)
+            in_write.set()
+            assert release.wait(timeout=10)  # park before os.replace
+
+        monkeypatch.setattr(F.json, "dump", stalling_dump)
+
+        # -- no commit yet: watchdog during the very first write --------
+        t = threading.Thread(target=hb.beat, args=(1,))
+        t.start()
+        assert in_write.wait(timeout=10)
+        assert hb.age() is None           # nothing committed to read
+        assert hb.is_stale(60.0)          # watchdog restarts: correct
+        release.set()
+        t.join(timeout=10)
+        assert json.load(open(path))["step"] == 1
+
+        # -- committed payload present: watchdog during the next write --
+        in_write.clear()
+        release.clear()
+        t = threading.Thread(target=hb.beat, args=(2,), kwargs={"loss": 9.0})
+        t.start()
+        assert in_write.wait(timeout=10)
+        age = hb.age()                    # reads the step-1 commit
+        assert age is not None and age < 5.0
+        assert not hb.is_stale(60.0)      # no spurious restart mid-write
+        assert json.load(open(path))["step"] == 1
+        release.set()
+        t.join(timeout=10)
+        data = json.load(open(path))      # step-2 commit landed whole
+        assert data["step"] == 2 and data["loss"] == 9.0
 
 
 class TestTrainerLoop:

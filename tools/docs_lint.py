@@ -17,8 +17,9 @@ tier-1 tests by tests/test_docs_lint.py:
      ``[text](target)`` in those files must resolve (fragments are
      split off; http/https/mailto links are ignored).
   3. **Bench fields.**  Every field named in the first column of a
-     ``## `results/BENCH_X.json` …`` schema table (docs/benchmarks.md)
-     must exist in the committed ``results/BENCH_X.json`` or its
+     ``## `results/BENCH_X.json` …`` schema table (docs/benchmarks.md;
+     ``results/NMLINT.json`` gets the same treatment) must exist in
+     the committed ``results/BENCH_X.json`` or its
      ``benchmarks/baselines/`` baseline.  Field tokens support
      ``{a,b}`` brace groups, ``*`` wildcards, ``<site>`` placeholders
      (= wildcard segment), ``loads[]`` list markers, and leading-dot
@@ -55,8 +56,11 @@ _PATH_RE = re.compile(
     r"(?<![\w./-])(?:%s)/[\w./*?-]*[\w*?]" % "|".join(PREFIXES))
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
-# bench-schema tables: "## `results/BENCH_X.json` — `benchmarks/x.py`"
-_BENCH_SECTION_RE = re.compile(r"^##\s+`results/(BENCH_\w+\.json)`")
+# bench-schema tables: "## `results/BENCH_X.json` — `benchmarks/x.py`";
+# results/NMLINT.json (the nmlint report) documents its schema the same
+# way, so its table is field-validated too
+_BENCH_SECTION_RE = re.compile(
+    r"^##\s+`results/((?:BENCH_\w+|NMLINT)\.json)`")
 _TICK_RE = re.compile(r"`([^`]+)`")
 
 

@@ -3,27 +3,53 @@
   python tools/nmlint.py                  # AST pass, report, exit!=0 on findings
   python tools/nmlint.py --strict         # same (explicit; the CI spelling)
   python tools/nmlint.py --graph          # + jaxpr/HLO audit, solo config matrix
+  python tools/nmlint.py --numerics       # + NM3xx dtype-provenance family
+  python tools/nmlint.py --buffers        # + NM4xx donation/dispatch family
   python tools/nmlint.py --graph --mesh8  # + compressed grad-sync on 8 forced
                                           #   CPU devices (forces them itself)
+  python tools/nmlint.py --changed-only   # AST rules on git-changed files only
+                                          #   (fast pre-commit; no report write)
   python tools/nmlint.py --selftest       # seed 1 violation/rule, all must fire
   python tools/nmlint.py --list-rules     # rule table (ID, kind, invariant)
 
-Every run (except --selftest/--list-rules) rewrites results/NMLINT.json
+--graph/--numerics/--buffers each enable one rule family over the same
+config matrix; a case traces/compiles ONCE and every requested family
+reads the shared artifact.  The AST-stage rules (NM1xx, NM402, NM404)
+always run.  Every matrix run rewrites results/NMLINT.json (schema v2)
 — deterministic counts only, so the committed copy diffs empty while
 the invariants hold.  Waivers: tools/nmlint_waivers.json (rule + path
 glob + reason + expiry; an expired waiver is an NM001 finding).  Rules:
 docs/analysis.md.  Wrapped into tier-1 by tests/test_nmlint.py; the
-blocking CI job runs ``--strict --graph --mesh8``.
+blocking CI job runs ``--strict --numerics --buffers --graph --mesh8``.
 """
 
 from __future__ import annotations
 
 import argparse
 import os
+import subprocess
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(ROOT, "src"))
+
+
+def _changed_repro_files() -> list:
+    """src/repro/**.py files changed vs HEAD (staged, unstaged, or
+    untracked) — the pre-commit scope."""
+    prefix = os.path.join("src", "repro") + os.sep
+    out = set()
+    for cmd in (["git", "diff", "HEAD", "--name-only"],
+                ["git", "ls-files", "--others", "--exclude-standard"]):
+        res = subprocess.run(cmd, cwd=ROOT, capture_output=True, text=True)
+        for line in res.stdout.splitlines():
+            line = line.strip()
+            if line.endswith(".py") and line.startswith(prefix.replace(
+                    os.sep, "/")):
+                path = os.path.join(ROOT, line)
+                if os.path.exists(path):
+                    out.add(path)
+    return sorted(out)
 
 
 def main(argv=None) -> int:
@@ -34,11 +60,21 @@ def main(argv=None) -> int:
                     help="exit nonzero on any unwaived finding (default "
                          "behavior; flag kept explicit for CI readability)")
     ap.add_argument("--graph", action="store_true",
-                    help="run the jaxpr/HLO audit over the solo config "
+                    help="run the NM2xx structure family over the config "
                          "matrix (traces + compiles real smoke models)")
+    ap.add_argument("--numerics", action="store_true",
+                    help="run the NM3xx dtype-provenance family over the "
+                         "config matrix (implies running the matrix)")
+    ap.add_argument("--buffers", action="store_true",
+                    help="run the NM4xx donation/dispatch family over the "
+                         "config matrix (implies running the matrix)")
     ap.add_argument("--mesh8", action="store_true",
                     help="add the mesh8 cases (forces 8 host devices; "
                          "implies --graph)")
+    ap.add_argument("--changed-only", action="store_true",
+                    help="AST rules over git-changed src/repro files only; "
+                         "graph matrix skipped, no report written — the "
+                         "fast pre-commit mode")
     ap.add_argument("--selftest", action="store_true",
                     help="seed one violation per rule; exit 0 iff every "
                          "rule fires")
@@ -57,7 +93,8 @@ def main(argv=None) -> int:
 
     from repro.analysis import (
         RULES, apply_waivers, build_report, load_waivers, run_ast_pass,
-        run_graph_audit, run_selftest, scanned_file_count, write_report,
+        run_async_sync_pass, run_graph_audit, run_selftest,
+        scanned_file_count, write_report,
     )
 
     if args.list_rules:
@@ -77,25 +114,57 @@ def main(argv=None) -> int:
               f"seeded violations")
         return 0
 
-    findings = run_ast_pass()
     waivers, expired = load_waivers(args.waivers)
+
+    if args.changed_only:
+        files = _changed_repro_files()
+        findings = run_ast_pass(files=files) if files else []
+        # serve/ may have changed callers of serve/fleet.py — the async
+        # sync pass is whole-package and cheap, so always rerun it
+        findings += run_async_sync_pass()
+        findings = apply_waivers(findings, waivers) + expired
+        unwaived = [f for f in findings if not f.waived]
+        for f in findings:
+            print(f"[{'warn' if f.waived else 'FAIL'}] {f}")
+        # no report write: a partial scan must not clobber the committed
+        # full-matrix results/NMLINT.json
+        if unwaived:
+            print(f"\nnmlint --changed-only: {len(unwaived)} finding(s) "
+                  f"across {len(files)} changed file(s)")
+            return 1
+        print(f"nmlint --changed-only: clean — {len(files)} changed "
+              f"file(s)")
+        return 0
+
+    findings = run_ast_pass() + run_async_sync_pass()
     findings = apply_waivers(findings, waivers) + expired
 
-    graph_metrics, cases = {}, []
+    families = []
     if args.graph:
-        gfindings, graph_metrics = run_graph_audit(mesh8=args.mesh8)
+        families.append("graph")
+    if args.numerics:
+        families.append("numerics")
+    if args.buffers:
+        families.append("buffers")
+
+    graph_metrics, cases = {}, []
+    if families:
+        gfindings, graph_metrics = run_graph_audit(mesh8=args.mesh8,
+                                                   families=families)
         findings += apply_waivers(gfindings, waivers)
         cases = list(graph_metrics)
 
     report = build_report(findings, graph_metrics, cases,
-                          scanned_files=scanned_file_count())
+                          scanned_files=scanned_file_count(),
+                          families_run=families)
     out = write_report(report, args.out)
 
     unwaived = [f for f in findings if not f.waived]
     for f in findings:
         print(f"[{'warn' if f.waived else 'FAIL'}] {f}")
     n_files = report["scanned_files"]
-    suffix = f" + graph audit over {len(cases)} case(s)" if cases else ""
+    suffix = (f" + {'/'.join(families)} audit over {len(cases)} case(s)"
+              if cases else "")
     if unwaived:
         print(f"\nnmlint: {len(unwaived)} finding(s) "
               f"({len(findings) - len(unwaived)} waived) across {n_files} "
